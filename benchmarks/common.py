@@ -1,0 +1,49 @@
+"""Shared benchmark plumbing: plan-level latency from the FPGA cycle model
+(paper §IV-A formulas — reproduces the paper's tables) and CSV emit."""
+from __future__ import annotations
+
+import time
+
+from repro.core import CompileOptions, compile_graph
+from repro.core.executor import build_runner, random_inputs
+from repro.core.perf_model import FPGA
+
+
+def plan_latency_s(plan, model=FPGA) -> float:
+    """Batch-size-one latency under the paper's execution model: ops run
+    layer-by-layer, each op's compute is balanced over the 8 PEs and
+    overlapped with its memory traffic (max(compute, mem))."""
+    return sum(model.op_seconds(op.cycles, op.bytes_moved)
+               for op in plan.ops)
+
+
+def portion_latency_s(plan, model=FPGA) -> dict:
+    out: dict[str, float] = {}
+    for op in plan.ops:
+        out[op.portion] = out.get(op.portion, 0.0) \
+            + model.op_seconds(op.cycles, op.bytes_moved)
+    return out
+
+
+def compile_task(graph, **opts):
+    return compile_graph(graph, CompileOptions(**opts))
+
+
+def measure_wall_ms(plan, iters: int = 3, use_pallas: bool = False) -> float:
+    """CPU wall-clock of the jit'd executor (sanity only — the modelled
+    latency is the paper-comparable number)."""
+    run = build_runner(plan, use_pallas=use_pallas)
+    ins = random_inputs(plan)
+    out = run(**ins)                         # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = run(**ins)
+    _ = [o for o in (out if isinstance(out, (list, tuple)) else [out])]
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print()

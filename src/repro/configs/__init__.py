@@ -1,0 +1,51 @@
+"""Architecture registry: 10 assigned LM-family archs + the paper's own
+GNN-CV task suite. ``get(name)`` returns the full published config;
+``get_smoke(name)`` a reduced same-family config for CPU tests.
+
+Input-shape cells (LM family): train_4k, prefill_32k, decode_32k,
+long_500k. ``long_500k`` is only defined for sub-quadratic archs
+(``cfg.subquadratic``) — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCHS = [
+    "zamba2-2.7b", "deepseek-v3-671b", "grok-1-314b", "qwen2-72b",
+    "codeqwen1.5-7b", "llama3.2-1b", "qwen3-0.6b", "musicgen-medium",
+    "xlstm-350m", "chameleon-34b",
+]
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def _module(name: str):
+    return importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+
+
+def get(name: str):
+    return _module(name).config()
+
+
+def get_smoke(name: str):
+    return _module(name).smoke()
+
+
+def cells(include_na: bool = False):
+    """All (arch, shape) cells. long_500k only for sub-quadratic archs
+    unless include_na."""
+    out = []
+    for a in ARCHS:
+        cfg = get(a)
+        for s in SHAPES:
+            if s == "long_500k" and not cfg.subquadratic and not include_na:
+                continue
+            out.append((a, s))
+    return out

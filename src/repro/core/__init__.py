@@ -1,0 +1,16 @@
+"""GCV-Turbo core: layer IR, five-pass compiler, plan executor, perf models.
+
+The paper's primary contribution — a compiler + unified-primitive
+architecture for models that mix CNN and GNN layers — realized in JAX:
+
+  ir.py          layer-graph IR + builder frontend (the input parser's role)
+  passes/        Step 1 fusion, Step 2 uniform lowering, Step 3 tiling,
+                 Step 4 sparsity-aware primitive mapping, Step 5 scheduling
+  compiler.py    five-pass driver -> ExecutionPlan ("instruction sequence")
+  executor.py    jit'd plan interpreter (Pallas or pure-jnp data path)
+  perf_model.py  FPGA cycle model (paper §IV/§VI) + TPU v5e roofline model
+"""
+from repro.core.compiler import CompileOptions, compile_graph  # noqa: F401
+from repro.core.executor import build_runner                   # noqa: F401
+from repro.core.ir import Graph, GraphBuilder, Layer           # noqa: F401
+from repro.core.plan import ExecutionPlan, MatOp               # noqa: F401

@@ -1,0 +1,40 @@
+"""The five-pass GCV-Turbo compiler driver (paper §V).
+
+``compile_graph`` runs the passes in the paper's order and returns an
+``ExecutionPlan`` — the analogue of the instruction-sequence binary the APU
+executes. ``CompileOptions`` exposes exactly the knobs the paper ablates
+(§VII-C): layer fusion, DM fusion, sparsity-aware mapping, plus the cost
+target ('tpu' here / 'fpga' for reproducing the paper's numbers).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.ir import Graph
+from repro.core.passes import (assign_tiles, fuse_layers, lower_to_matops,
+                               schedule_plan, select_primitives)
+from repro.core.plan import ExecutionPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    fuse: bool = True                 # Step 1 (ablation: §VII-C layer fusion)
+    dm_fusion: bool = True            # §V-C2
+    sparsity_aware: bool = True       # Step 4 (ablation: §VII-C)
+    target: str = "tpu"               # 'tpu' | 'fpga'
+    vmem_budget_bytes: int = 8 * 2**20
+
+
+def compile_graph(g: Graph,
+                  options: CompileOptions = CompileOptions()
+                  ) -> ExecutionPlan:
+    fused = fuse_layers(g, enable=options.fuse,
+                        dm_fusion=options.fuse and options.dm_fusion)
+    plan = lower_to_matops(fused)                       # Step 2
+    plan = assign_tiles(plan, target=options.target,    # Step 3
+                        vmem_budget_bytes=options.vmem_budget_bytes)
+    plan = select_primitives(plan, target=options.target,   # Step 4
+                             enable=options.sparsity_aware)
+    plan = schedule_plan(plan)                          # Step 5
+    plan.meta["options"] = dataclasses.asdict(options)
+    return plan

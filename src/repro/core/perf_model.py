@@ -1,0 +1,113 @@
+"""Analytic performance models.
+
+Two models, used at different layers of the system:
+
+1. **FPGA cycle model** — GCV-Turbo's own primitive latency formulas
+   (paper §IV-A), parameterized by the paper's implementation constants
+   (p_ca = 16, 8 PEs, f_cu = 600 MHz, f_buffer = 300 MHz, 77 GB/s DDR,
+   45 MB on-chip). Drives (a) the Step-4 sparsity-aware primitive selection
+   when targeting the paper's accelerator, and (b) the benchmark suite that
+   reproduces the paper's latency tables.
+
+2. **TPU roofline model** — v5e per-chip constants used by the Step-4
+   decision when targeting TPU, and by launch/roofline.py for the LM-framework
+   roofline terms (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class FPGAModel:
+    """Alveo U250 GCV-Turbo instance (paper §VI)."""
+    p_ca: int = 16           # computation-array dimension per PE
+    n_pe: int = 8            # PEs (4 SLRs x 2, minus shell share)
+    f_cu: float = 600e6      # computation-unit clock
+    f_buf: float = 300e6     # buffer clock
+    dram_bw: float = 77e9    # B/s
+    onchip_bytes: int = 45 * 2**20
+    bytes_per_elem: int = 2  # fp16
+
+    # -- primitive latencies, in compute cycles on ONE PE (paper formulas) --
+    def ddmm_cycles(self, s1: int, s2: int, s3: int) -> float:
+        """2-D systolic: a (p,p) output tile per s2 cycles."""
+        p = self.p_ca
+        return math.ceil(s1 / p) * math.ceil(s3 / p) * max(s2, p)
+
+    def spdmm_cycles(self, nnz: int, s3: int) -> float:
+        """l = ceil(nnz / (p/2)) * ceil(s3 / p)   (paper §IV-A)."""
+        p = self.p_ca
+        return math.ceil(nnz / (p / 2)) * math.ceil(s3 / p)
+
+    def sddmm_cycles(self, nnz_a: int, s2: int) -> float:
+        """l = ceil(nnz(A) / (p/2)) * ceil(s2 / p) (paper §IV-A)."""
+        p = self.p_ca
+        return math.ceil(nnz_a / (p / 2)) * math.ceil(s2 / p)
+
+    def psvm_cycles(self, n_ops: int) -> float:
+        return n_ops / (self.p_ca ** 2 / 2)
+
+    def pvva_cycles(self, n_ops: int) -> float:
+        return n_ops / (self.p_ca ** 2 / 2)
+
+    # -- plan-level latency --------------------------------------------------
+    def op_seconds(self, cycles_one_pe: float, bytes_moved: float,
+                   balance: float = 1.0) -> float:
+        """Latency of one scheduled op: compute distributed over PEs by the
+        centralized load-balancer (Step 5), overlapped with memory traffic
+        (the paper pipelines loads behind compute), so latency = max(terms).
+        ``balance`` >= 1 models imperfect PE balance."""
+        compute = cycles_one_pe * balance / self.n_pe / self.f_cu
+        memory = bytes_moved / self.dram_bw
+        return max(compute, memory)
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUModel:
+    """TPU v5e chip + ICI constants (brief-specified)."""
+    peak_flops: float = 197e12   # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9        # B/s per chip
+    ici_bw: float = 50e9         # B/s per link
+    hbm_bytes: int = 16 * 2**30
+    vmem_bytes: int = 16 * 2**20
+    mxu: int = 128
+
+    def matmul_seconds(self, s1: int, s2: int, s3: int,
+                       bytes_per_elem: int = 2) -> float:
+        flops = 2.0 * s1 * s2 * s3
+        bts = bytes_per_elem * (s1 * s2 + s2 * s3 + s1 * s3)
+        return max(flops / self.peak_flops, bts / self.hbm_bw)
+
+    def gather_spdmm_seconds(self, rows: int, ell_l: int, s3: int,
+                             s2: int | None = None,
+                             bytes_per_elem: int = 2) -> float:
+        """ELL SpDMM: gather+FMA runs at ~VPU rate — 8x below MXU per flop
+        (DESIGN.md §2). Memory: ELL idx/val (6 B/slot), Y streamed once
+        (column blocks stay VMEM-resident across row blocks), output."""
+        flops = 2.0 * rows * ell_l * s3
+        y_rows = s2 if s2 is not None else rows
+        bts = (rows * ell_l * 6.0
+               + bytes_per_elem * (y_rows * s3 + rows * s3))
+        return max(8.0 * flops / self.peak_flops, bts / self.hbm_bw)
+
+
+FPGA = FPGAModel()
+TPU = TPUModel()
+
+
+def select_primitive(s1: int, s2: int, s3: int, nnz: int, *,
+                     target: str = "tpu") -> str:
+    """Step-4 sparsity-aware decision for X(s1,s2) @ Y(s2,s3), nnz(X) given.
+
+    Returns 'SpDMM' when the sparse realization is predicted faster on the
+    target, else 'DDMM'. Compile-time only — latency stays deterministic.
+    """
+    if target == "fpga":
+        return ("SpDMM" if FPGA.spdmm_cycles(nnz, s3)
+                < FPGA.ddmm_cycles(s1, s2, s3) else "DDMM")
+    ell_l = max(1, math.ceil(nnz / max(s1, 1)))
+    sparse = TPU.gather_spdmm_seconds(s1, ell_l, s3, s2)
+    dense = TPU.matmul_seconds(s1, s2, s3)
+    return "SpDMM" if sparse < dense else "DDMM"

@@ -1,0 +1,69 @@
+"""Matrix-operation IR + ExecutionPlan (the compiler's output artifact).
+
+After Step 2 every layer is a list of ``MatOp``s — matrix multiplications,
+sampled products, elementwise vector ops and the residual data-manipulation
+ops that could not be fused. Steps 3-5 annotate tiling, primitive choice and
+schedule/cost onto the same structure. The final ``ExecutionPlan`` is the
+analogue of the paper's instruction-sequence binary: a flat, ordered program
+the executor (or the APU, on the FPGA) runs layer by layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+MATOP_KINDS = frozenset({
+    "mm",          # dense/sparse matmul (primitive chosen in Step 4)
+    "conv",        # Fig. 7 shift-add conv (k1k2 DDMMs + PVVA merge)
+    "sddmm",       # sampled dense-dense
+    "ew",          # elementwise (PSVM/PVVA family: act, scale, add, softmax)
+    "pool2d", "globalpool", "maxagg",
+    "transpose", "reshape", "concat", "identity",
+})
+
+
+@dataclasses.dataclass
+class MatOp:
+    name: str
+    kind: str
+    inputs: tuple[str, ...]
+    weights: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    attrs: dict[str, Any] = dataclasses.field(default_factory=dict)
+    out_shape: tuple[int, ...] = ()
+    portion: str = "other"           # 'cnn' | 'gnn' | 'dm' | 'other'
+    # ---- Step 3: tiling ----
+    tiles: tuple[int, int, int] | None = None
+    # ---- Step 4: primitive mapping ----
+    primitive: str | None = None     # DDMM/SpDMM/SDDMM/PSVM/PVVA/none
+    ell: tuple[np.ndarray, np.ndarray] | None = None
+    # ---- Step 5: cost/schedule ----
+    cycles: float = 0.0              # FPGA cycles (one PE, pre-balancing)
+    bytes_moved: float = 0.0
+    flops: float = 0.0
+
+    def __post_init__(self):
+        assert self.kind in MATOP_KINDS, self.kind
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    name: str
+    input_names: list[str]
+    ops: list[MatOp]
+    outputs: list[str]
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def primitive_counts(self) -> dict[str, int]:
+        counts: dict[str, int] = {}
+        for op in self.ops:
+            key = op.primitive or op.kind
+            counts[key] = counts.get(key, 0) + 1
+        return counts
+
+    def portion_cycles(self) -> dict[str, float]:
+        agg: dict[str, float] = {}
+        for op in self.ops:
+            agg[op.portion] = agg.get(op.portion, 0.0) + op.cycles
+        return agg

@@ -1,0 +1,3 @@
+from repro.data.pipeline import TokenPipeline, synthetic_embeds
+
+__all__ = ["TokenPipeline", "synthetic_embeds"]

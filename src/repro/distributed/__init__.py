@@ -1,0 +1,4 @@
+from repro.distributed.sharding import (batch_specs, cache_specs,
+                                        param_specs, shardings)
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "shardings"]

@@ -1,0 +1,180 @@
+"""Sharding rules: parameter/activation/cache PartitionSpecs per arch.
+
+This is the LM-scale analogue of the paper's *data-layout-centric mapping*
+(§V-C4): the layout of every tensor is chosen once, at compile time, so that
+layer-to-layer transitions never materialize a standalone re-layout — GSPMD
+folds the resharding into the adjacent collective exactly like GCV-Turbo
+folds DM layers into the B2P routing of a matmul.
+
+Scheme (train/prefill): FSDP+TP. Every 2-D weight is sharded on its d_model
+dim over the fsdp axes and on its "wide" dim over the model axis; MoE
+experts are additionally expert-sharded over model (EP). Batch is sharded
+over the dp axes. Decode: KV caches are sequence-sharded over model
+(flash-decode) with batch over dp.
+
+A dim is sharded only if divisible by the axis size — otherwise the rule
+degrades to replication on that dim (recorded by ``explain()``).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _axsize(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(mesh, dim, axes):
+    """axes if dim divisible by their product else None."""
+    return axes if axes and dim % _axsize(mesh, axes) == 0 else None
+
+
+# ------------------------------------------------------------------ rules --
+# (regex on "/"-joined param path) -> (shard_in_dim, shard_out_dim) roles.
+# Interpreted for the *trailing* dims of the array (leading stack dims are
+# replicated). "in" = the d_model-ish dim sharded over fsdp, "out" = the
+# wide dim sharded over model.
+_W_IN_OUT = re.compile(
+    r"(wq|wk|wv|wi|wg|up|in_proj|wdq|wuq|wdkv|wukv|head|w)$")
+_W_OUT_IN = re.compile(r"(wo|out_proj|down|out)$")
+_EMBED = re.compile(r"embed$")
+_ROUTER = re.compile(r"router$")
+_CONV = re.compile(r"conv_w$")
+_BIAS = re.compile(r"(bq|bk|bv|conv_b|skip|if_bias)$")
+_REC = re.compile(r"r$")
+
+
+def _leading_stack_dims(path: str, ndim: int, base_rank: int) -> int:
+    return max(0, ndim - base_rank)
+
+
+def param_spec(path: str, shape, mesh, *, fsdp=("data",), model="model"):
+    """PartitionSpec for one parameter. ``path`` is "/"-joined key path."""
+    nd = len(shape)
+    leaf = path.split("/")[-1]
+
+    def pad(spec_tail):
+        return P(*([None] * (nd - len(spec_tail)) + list(spec_tail)))
+
+    if _EMBED.search(path):                       # (V, d)
+        return P(_fit(mesh, shape[0], model), _fit(mesh, shape[1], fsdp))
+    if _ROUTER.search(leaf):                      # (d, E) — replicated E
+        return pad([_fit(mesh, shape[-2], fsdp), None])
+    if _CONV.search(leaf):                        # (K, C)
+        return pad([None, _fit(mesh, shape[-1], model)])
+    if _BIAS.search(leaf):
+        return pad([_fit(mesh, shape[-1], model)])
+    if _REC.fullmatch(leaf):                      # sLSTM (H, hd, 4hd)
+        return pad([None, None, None])
+    # MoE expert stacks: .../moe/(wi|wg|wo) with 3 trailing dims (E, a, b)
+    if "/moe/" in path and nd >= 3 and leaf in ("wi", "wg", "wo"):
+        e, a, b = shape[-3], shape[-2], shape[-1]
+        e_ax = _fit(mesh, e, model)
+        if e_ax is None:
+            # small-E arch (grok): EP impossible — dense-TP instead, model
+            # axis shards the expert d_ff (DESIGN.md §5)
+            if leaf == "wo":                      # (E, ff, d)
+                return pad([None, _fit(mesh, a, model),
+                            _fit(mesh, b, fsdp)])
+            return pad([None, _fit(mesh, a, fsdp), _fit(mesh, b, model)])
+        if leaf == "wo":                          # (E, ff, d)
+            return pad([e_ax, None, _fit(mesh, b, fsdp)])
+        return pad([e_ax, _fit(mesh, a, fsdp), None])
+    if _W_OUT_IN.search(leaf) and nd >= 2:        # (wide, d)
+        return pad([_fit(mesh, shape[-2], model), _fit(mesh, shape[-1],
+                                                       fsdp)])
+    if _W_IN_OUT.search(leaf) and nd >= 2:        # (d, wide)
+        return pad([_fit(mesh, shape[-2], fsdp), _fit(mesh, shape[-1],
+                                                      model)])
+    return P()                                    # norms, scalars, gates
+
+
+def param_specs(shapes, mesh, *, fsdp=("data",), model="model"):
+    """Tree of PartitionSpecs for a param-shape tree (from eval_shape)."""
+    def visit(path, leaf):
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        return param_spec(p, leaf.shape, mesh, fsdp=fsdp, model=model)
+
+    return jax.tree_util.tree_map_with_path(visit, shapes)
+
+
+# ------------------------------------------------------------ activations --
+def batch_specs(shape_kind: str, mesh, *, dp=("data",), model="model"):
+    """PartitionSpecs for the input batch of a given shape kind."""
+    if shape_kind == "train":
+        return {"tokens": P(dp, None), "labels": P(dp, None),
+                "embeds": P(dp, None, None)}
+    if shape_kind == "prefill":
+        return {"tokens": P(dp, None), "embeds": P(dp, None, None)}
+    if shape_kind == "decode":
+        return {"tokens": P(dp)}
+    raise ValueError(shape_kind)
+
+
+def cache_specs(cache_shapes, mesh, *, dp=("data",), model="model"):
+    """Decode-cache specs: batch over dp, sequence over model (the
+    sequence-sharded flash-decode layout); recurrent states: heads over
+    model when divisible, else replicated.
+
+    Cache trees are {stage_i: {leaf: (L, B, S, ...)}} — leading L stack dim
+    replicated. For B == 1 (long_500k) the sequence dim is sharded over
+    (dp + model) combined so the whole pod contributes HBM.
+    """
+    def visit(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        shape = leaf.shape
+        nd = len(shape)
+        B = shape[1]
+        bspec = _fit(mesh, B, dp)
+        if name in ("k", "v", "ckv", "kr"):       # (L, B, S, ...)
+            seq_axes = model if bspec else tuple(
+                ([dp] if isinstance(dp, str) else list(dp)) + [model])
+            sspec = _fit(mesh, shape[2], seq_axes)
+            tail = [None] * (nd - 3)
+            return P(None, bspec, sspec, *tail)
+        if name == "ssm":                         # (L, B, H, N, P)
+            return P(None, bspec, _fit(mesh, shape[2], model), None, None)
+        if name == "conv":                        # (L, B, K-1, C)
+            return P(None, bspec, None, _fit(mesh, shape[3], model))
+        if name in ("C",):                        # mlstm (L, B, H, P, P)
+            return P(None, bspec, _fit(mesh, shape[2], model), None, None)
+        if name in ("n", "m", "c", "h"):
+            return P(None, bspec, _fit(mesh, shape[2], model),
+                     *([None] * (nd - 3)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_shapes)
+
+
+def shardings(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def explain(shapes, specs, mesh):
+    """Human-readable table: path, shape, spec, bytes/device."""
+    rows = []
+
+    def visit(path, leaf, spec):
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        n_shards = 1
+        for ax in jax.tree.leaves(tuple(spec)):
+            if ax is not None:
+                n_shards *= _axsize(mesh, ax)
+        nbytes = np.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+        rows.append((p, leaf.shape, str(spec), nbytes / n_shards))
+
+    jax.tree_util.tree_map_with_path(visit, shapes, specs)
+    return rows

@@ -1,0 +1,10 @@
+"""The paper's benchmark suite as GCV-Turbo layer graphs.
+
+  tasks.py    b1-b6 GNN-based CV tasks (Table III/IV)
+  cnn_zoo.py  c1-c5 CNNs (scope 1)
+  gnn_zoo.py  g1-g3 GNNs on citation/recommendation graphs (scope 2)
+  graphs.py   synthetic graph generators with the published statistics
+"""
+from repro.gnncv.cnn_zoo import CNN_ZOO          # noqa: F401
+from repro.gnncv.gnn_zoo import GNN_ZOO          # noqa: F401
+from repro.gnncv.tasks import TASKS              # noqa: F401

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the GCV-Turbo primitive set + LM hot-spots.
+
+Kernels (each ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec tiling;
+``ops.py`` the jit'd wrappers; ``ref.py`` the pure-jnp oracles):
+
+  ddmm.py             dense-dense matmul (primitive 1) + fused epilogue
+  spdmm.py            ELL sparse-dense matmul (primitive 2, TPU adaptation)
+  sddmm.py            block-sampled dense-dense matmul (primitive 3)
+  shift_conv.py       Fig. 7 Conv mapping: k1*k2 matmuls + fused shift-add
+  flash_attention.py  fused SDDMM+softmax+SpDMM for the LM attention path
+
+PSVM / PVVA (primitives 4-5) are VPU elementwise ops with no tiling freedom;
+they are realized directly as jnp ops inside the executor (core/executor.py)
+where XLA already emits optimal vector code — a kernel would add nothing.
+"""
+from repro.kernels import ops, ref  # noqa: F401

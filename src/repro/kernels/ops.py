@@ -1,0 +1,114 @@
+"""Public jit'd kernel entry points + the Step-4 sparsity-aware dispatch.
+
+This module is the seam between the GCV-Turbo compiler (core/) and the Pallas
+kernels, and is *also* used directly by the LM framework (models/) so the
+paper's primitive vocabulary is a first-class feature of the whole system
+(DESIGN.md §4). Every wrapper falls back to the jnp oracle when
+``use_pallas=False`` (useful under vmap/pjit tracing where a pure-XLA path
+fuses better — on a real TPU the Pallas path is the default).
+
+Sparsity-aware dispatch (paper §V-C5): ``matmul_auto`` picks DDMM vs SpDMM
+from *static* sparsity metadata using the TPU cost model — the same decision
+GCV-Turbo's Step 4 makes from its FPGA latency models. Thresholds:
+  DDMM cost  ∝ S1 · S2 · S3            (MXU, dense)
+  SpDMM cost ∝ S1 · L · S3 · G         (gather+FMA; G ≈ MXU/VPU throughput
+                                        penalty of the gather pipeline, ~8)
+so SpDMM wins when padded density L/S2 < 1/G. The FPGA crossover (paper) is
+L/S2 < 1/2; both models live in core/perf_model.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ddmm import ddmm
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.sddmm import sddmm
+from repro.kernels.shift_conv import shift_conv2d
+from repro.kernels.spdmm import dense_to_ell, spdmm
+
+# Gather-pipeline throughput penalty vs MXU on TPU (DESIGN.md §2).
+TPU_SPARSE_PENALTY = 8.0
+
+
+@functools.partial(jax.jit, static_argnames=("act", "use_pallas"))
+def matmul(x, y, bias=None, residual=None, *, act=None, use_pallas=True):
+    """Dense matmul with fused epilogue; >2-D x is flattened on the left."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    res2 = residual.reshape(-1, residual.shape[-1]) if residual is not None \
+        else None
+    if use_pallas:
+        out = ddmm(x2, y, bias=bias, residual=res2, act=act)
+    else:
+        out = ref.ddmm_ref(x2, y, bias=bias, residual=res2, act=act)
+    return out.reshape(*lead, y.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def sparse_matmul(idx, val, y, *, use_pallas=True):
+    if use_pallas:
+        return spdmm(idx, val, y)
+    return ref.spdmm_ref(idx, val, y)
+
+
+@functools.partial(jax.jit, static_argnames=("elementwise", "use_pallas"))
+def sampled_matmul(x, y, mask, *, elementwise=True, use_pallas=True):
+    if use_pallas:
+        return sddmm(x, y, mask, elementwise=elementwise)
+    return ref.sddmm_ref(x, y, mask, elementwise=elementwise)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "padding", "use_pallas"))
+def conv2d(x, w, *, stride=1, padding="SAME", use_pallas=True):
+    """Batched conv. x: (B, c_in, H, W) or (c_in, H, W)."""
+    fn = (functools.partial(shift_conv2d, stride=stride, padding=padding)
+          if use_pallas else
+          functools.partial(ref.conv2d_ref, stride=stride, padding=padding))
+    if x.ndim == 3:
+        return fn(x, w)
+    return jax.vmap(lambda xi: fn(xi, w))(x)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas"))
+def attention(q, k, v, *, causal=True, use_pallas=True):
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal)
+    return ref.attention_ref(q, k, v, causal=causal)
+
+
+def choose_primitive(s1: int, s2: int, s3: int, nnz_padded: int, *,
+                     penalty: float = TPU_SPARSE_PENALTY) -> str:
+    """Step-4 decision on static metadata: 'DDMM' or 'SpDMM'."""
+    dense_cost = float(s1) * s2 * s3
+    sparse_cost = float(nnz_padded) * s3 * penalty
+    return "SpDMM" if sparse_cost < dense_cost else "DDMM"
+
+
+def matmul_auto(x_dense, y, *, ell=None, use_pallas=True):
+    """Sparsity-aware matmul: dispatch to SpDMM when the (compile-time) ELL
+    metadata says the gather pipeline beats the MXU, else DDMM.
+
+    ``ell``: optional (idx, val) precomputed at compile time (the paper's
+    offline three-tuple conversion). Decision is static — latency stays
+    deterministic, per the paper's autonomous-driving argument.
+    """
+    s1, s2 = x_dense.shape
+    s3 = y.shape[-1]
+    if ell is not None:
+        idx, val = ell
+        prim = choose_primitive(s1, s2, s3, idx.shape[0] * idx.shape[1])
+        if prim == "SpDMM":
+            return sparse_matmul(idx, val, y, use_pallas=use_pallas), prim
+    return matmul(x_dense, y, use_pallas=use_pallas), "DDMM"
+
+
+__all__ = [
+    "matmul", "sparse_matmul", "sampled_matmul", "conv2d", "attention",
+    "matmul_auto", "choose_primitive", "dense_to_ell", "ddmm", "spdmm",
+    "sddmm", "shift_conv2d", "flash_attention", "TPU_SPARSE_PENALTY",
+]

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth the kernels are validated
+against (tests/test_kernels.py sweeps shapes/dtypes in interpret mode).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ddmm_ref(x, y, *, bias=None, residual=None, act=None, out_dtype=None):
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if act is not None:
+        out = {"relu": jax.nn.relu, "gelu": jax.nn.gelu,
+               "silu": jax.nn.silu, "tanh": jnp.tanh}[act](out)
+    if residual is not None:
+        out = out + residual.astype(jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def spdmm_ref(idx, val, y, *, out_dtype=None):
+    """ELL sparse @ dense: Z[i] = sum_l val[i,l] * y[idx[i,l]]."""
+    rows = y.astype(jnp.float32)[idx]                    # (S1, L, N)
+    out = (rows * val.astype(jnp.float32)[..., None]).sum(1)
+    return out.astype(out_dtype or y.dtype)
+
+
+def sddmm_ref(x, y, mask, *, elementwise=True, out_dtype=None):
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+    if elementwise:
+        out = out * mask.astype(jnp.float32)
+    else:                       # block-sampled: keep live blocks whole
+        out = out
+    return out.astype(out_dtype or x.dtype)
+
+
+def conv2d_ref(x, w, *, stride=1, padding="SAME"):
+    """x: (c_in, H, W), w: (k1, k2, c_in, c_out) -> (c_out, H', W')."""
+    strides = (stride, stride) if isinstance(stride, int) else tuple(stride)
+    lhs = x[None].astype(jnp.float32)                    # NCHW
+    rhs = jnp.transpose(w, (3, 2, 0, 1)).astype(jnp.float32)  # OIHW
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=strides, padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return out[0].astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, scale=None):
+    """q: (B,Hq,Sq,D), k/v: (B,Hkv,Sk,D); GQA by head repetition."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        offset = Sk - Sq
+        qpos = jnp.arange(Sq)[:, None] + offset
+        kpos = jnp.arange(Sk)[None, :]
+        s = jnp.where(kpos <= qpos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,113 @@
+"""Shift-add convolution — the paper's Fig. 7 Conv-layer mapping, fused.
+
+GCV-Turbo maps a Conv layer to matrix operations by rearranging the kernel
+tensor W (c_out, c_in, k1, k2) into k1*k2 submatrices KM_i of shape
+(c_in, c_out), multiplying each with the IFM matrix (c_in, h*w), and merging
+the k1*k2 partial OFMs with shift-add. The payoff is layout-centric: IFM/OFM
+stay in ``channels x pixels`` layout across consecutive Conv layers AND across
+CNN->GNN transitions (channel-to-node DM becomes a no-op; patch-to-node
+becomes a transpose folded into the next matmul).
+
+This kernel fuses all k1*k2 matmuls and the shift-add merge into one pass:
+  grid = (c_out/bm, c_in/bk), c_in innermost (reduction);
+  IFM block (bk, H, W) resident in VMEM, statically unrolled loop over the
+  k1*k2 taps, each tap = static shift (jnp.roll + edge mask, VPU) feeding an
+  MXU matmul, accumulated in fp32 scratch.
+
+The kernel computes the VALID correlation; the jit wrapper realizes SAME by
+explicit input pre-padding and stride by output subsampling (production TPU
+note: for large H*W a halo-tiled spatial grid replaces the fully-resident
+plane; paper-scale CV workloads fit VMEM after the c_in split).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._util import default_interpret, pad_to, unpad
+
+
+def _shift_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int,
+                       k1: int, k2: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                      # (bk, H, W)
+    _, H, W = x.shape
+    yy = jax.lax.broadcasted_iota(jnp.int32, (1, H, W), 1)
+    xx = jax.lax.broadcasted_iota(jnp.int32, (1, H, W), 2)
+    bm = acc_ref.shape[0]
+    for dy in range(k1):                # statically unrolled taps
+        for dx in range(k2):
+            shifted = x if (dy == 0 and dx == 0) else jnp.roll(
+                x, (-dy, -dx), (1, 2))
+            shifted = jnp.where((yy < H - dy) & (xx < W - dx), shifted, 0.0)
+            km = w_ref[dy, dx]          # (bk, bm)
+            part = jnp.dot(km.T, shifted.reshape(x.shape[0], H * W),
+                           preferred_element_type=jnp.float32)
+            acc_ref[...] += part.reshape(bm, H, W)
+
+    @pl.when(pl.program_id(1) == nk - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _shift_conv_valid(x: jax.Array, w: jax.Array, *, bm: int, bk: int,
+                      out_dtype, interpret: bool) -> jax.Array:
+    """VALID correlation, x: (c_in, H, W), w: (k1, k2, c_in, c_out)."""
+    c_in, H, W = x.shape
+    k1, k2, _, c_out = w.shape
+    bm = min(bm, max(8, pl.next_power_of_2(c_out)))
+    bk = min(bk, max(8, pl.next_power_of_2(c_in)))
+    xp = pad_to(x, (bk, 1, 1))
+    wp = pad_to(w, (1, 1, bk, bm))
+    nk = xp.shape[0] // bk
+    grid = (wp.shape[3] // bm, nk)
+    out = pl.pallas_call(
+        functools.partial(_shift_conv_kernel, nk=nk, k1=k1, k2=k2),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, H, W), lambda i, k: (k, 0, 0)),
+            pl.BlockSpec((k1, k2, bk, bm), lambda i, k: (0, 0, k, i)),
+        ],
+        out_specs=pl.BlockSpec((bm, H, W), lambda i, k: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((wp.shape[3], H, W), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, H, W), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xp, wp)
+    return unpad(out, (c_out, H, W))[:, : H - k1 + 1, : W - k2 + 1]
+
+
+def shift_conv2d(x: jax.Array, w: jax.Array, *, stride=1,
+                 padding: str = "SAME", bm: int = 128, bk: int = 128,
+                 out_dtype=None, interpret: bool | None = None) -> jax.Array:
+    """2-D convolution via the Fig. 7 shift-add mapping.
+
+    x: (c_in, H, W) single image (vmap for batch), w: (k1, k2, c_in, c_out).
+    ``stride`` may be an int or (sh, sw). Returns (c_out, H_out, W_out).
+    """
+    interpret = default_interpret(interpret)
+    out_dtype = out_dtype or x.dtype
+    k1, k2 = w.shape[0], w.shape[1]
+    sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    if padding == "SAME":
+        H, W = x.shape[1:]
+        # SAME for stride s: total pad = max((ceil(H/s)-1)*s + k - H, 0)
+        ph = max((-(-H // sh) - 1) * sh + k1 - H, 0)
+        pw = max((-(-W // sw) - 1) * sw + k2 - W, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2)))
+    elif padding != "VALID":
+        raise ValueError(padding)
+    out = _shift_conv_valid(x, w, bm=bm, bk=bk, out_dtype=out_dtype,
+                            interpret=interpret)
+    if sh > 1 or sw > 1:
+        out = out[:, ::sh, ::sw]
+    return out

@@ -1,0 +1,112 @@
+"""SpDMM — sparse-dense matrix multiplication (GCV-Turbo primitive 2, §IV-A).
+
+GCV-Turbo executes SpDMM with scatter-gather pipelines over CSR-style
+``(src, dst, val)`` tuples, routed per-nonzero by the B2P network —
+fine-grained dynamic routing that has no TPU analogue. The TPU-native
+adaptation (DESIGN.md §2) is **ELL format**: every row of the sparse matrix X
+is padded to a fixed ``L = max_nnz_per_row`` slots of ``(col_idx, val)``.
+The kernel then becomes a *regular* gather of Y rows plus a dense
+multiply-accumulate — predictable, shape-static latency, which is exactly the
+determinism property the paper targets for autonomous driving.
+
+  Z[i, :] = sum_l val[i, l] * Y[idx[i, l], :]
+
+Cost model analogue: paper ``l_SpDMM = ceil(nnz/(p_ca/2)) * ceil(s3/p_ca)``;
+here cost ∝ ``S1*L*N`` (padded-nnz × row width), so primitive selection
+(passes/select.py) compares ``S1*L*N`` (SpDMM) against ``S1*S2*N`` (DDMM).
+
+Block layout:
+  grid = (S1/bm, N/bn, L/bl), L innermost.
+  idx/val blocks (bm, bl); Y block (S2, bn) — full row dimension resident in
+  VMEM (production note: for very large S2 a two-level scheme with row-bucket
+  pre-sorting would tile Y; all paper graphs fit: max S2 = 16384 → 8 MiB/fp32
+  column block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._util import default_interpret, pad_to, unpad
+
+
+def _spdmm_kernel(idx_ref, val_ref, y_ref, o_ref, acc_ref, *, nl: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bm, bl = idx_ref.shape
+    bn = y_ref.shape[1]
+    rows = jnp.take(y_ref[...], idx_ref[...].reshape(-1), axis=0)
+    rows = rows.reshape(bm, bl, bn).astype(jnp.float32)
+    acc_ref[...] += (rows * val_ref[...].astype(jnp.float32)[..., None]).sum(1)
+
+    @pl.when(pl.program_id(2) == nl - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def spdmm(idx: jax.Array, val: jax.Array, y: jax.Array, *,
+          bm: int = 64, bl: int = 16, bn: int = 128,
+          out_dtype=None, interpret: bool | None = None) -> jax.Array:
+    """ELL sparse (S1, L) @ dense (S2, N) -> (S1, N).
+
+    ``idx[i, l]`` is the column (= row of ``y``) of the l-th nonzero of row i;
+    padding slots must have ``val == 0`` (their ``idx`` is ignored).
+    """
+    assert idx.shape == val.shape and idx.ndim == 2
+    interpret = default_interpret(interpret)
+    out_dtype = out_dtype or y.dtype
+    S1, L = idx.shape
+    S2, N = y.shape
+    bm = min(bm, max(8, pl.next_power_of_2(S1)))
+    bl = min(bl, max(1, pl.next_power_of_2(L)))
+    bn = min(bn, max(128, pl.next_power_of_2(N)))
+    idxp = pad_to(idx, (bm, bl))
+    valp = pad_to(val, (bm, bl))
+    yp = pad_to(y, (8, bn))
+    nl = idxp.shape[1] // bl
+    grid = (idxp.shape[0] // bm, yp.shape[1] // bn, nl)
+
+    out = pl.pallas_call(
+        functools.partial(_spdmm_kernel, nl=nl),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bl), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bm, bl), lambda i, j, l: (i, l)),
+            pl.BlockSpec((yp.shape[0], bn), lambda i, j, l: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((idxp.shape[0], yp.shape[1]),
+                                       out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(idxp, valp, yp)
+    return unpad(out, (S1, N))
+
+
+def dense_to_ell(x: np.ndarray | jax.Array,
+                 max_nnz: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """Convert a dense sparse-valued matrix to ELL ``(idx, val)`` arrays.
+
+    Offline (compile-time) conversion — mirrors the paper's compiler preparing
+    the three-tuple representation of the adjacency/weight matrix.
+    """
+    x = np.asarray(x)
+    S1, _ = x.shape
+    nnz_per_row = (x != 0).sum(axis=1)
+    L = int(max_nnz if max_nnz is not None else max(1, nnz_per_row.max()))
+    idx = np.zeros((S1, L), np.int32)
+    val = np.zeros((S1, L), x.dtype)
+    for i in range(S1):
+        cols = np.nonzero(x[i])[0][:L]
+        idx[i, : len(cols)] = cols
+        val[i, : len(cols)] = x[i, cols]
+    return jnp.asarray(idx), jnp.asarray(val)

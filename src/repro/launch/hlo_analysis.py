@@ -1,0 +1,392 @@
+"""Post-optimization HLO text analysis: per-device collective bytes.
+
+``compiled.cost_analysis()`` has no collective term, so we parse the
+partitioned HLO. Collectives inside ``while`` loops (lax.scan over layers)
+execute trip-count times — the analyzer resolves loop trip counts from the
+loop-condition computation and multiplies through, recursively.
+
+Per-device bytes-moved model (ring algorithms, N = group size, ~(N-1)/N
+rounded to 1):
+    all-gather          result_bytes          (received)
+    reduce-scatter      sum(operand_bytes)    (sent)
+    all-reduce          2 x result_bytes      (reduce-scatter + all-gather)
+    all-to-all          result_bytes
+    collective-permute  result_bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z]*\d*)\[([\d,]*)\]")
+_DOT_RE = re.compile(r"=\s*(\S+)\s+dot\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(
+    r"conditional\(.*?(?:branch_computations=\{([^}]*)\}|"
+    r"true_computation=%?([\w.\-]+),\s*false_computation=%?([\w.\-]+))")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _line_shapes(line: str):
+    return [_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(line)]
+
+
+def split_computations(hlo: str):
+    """-> ({name: [lines]}, entry_name)."""
+    comps = {}
+    entry = None
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if (line and not line[0].isspace()
+                and ("{" in line and "->" in line)):
+            m = _COMP_HDR.match(stripped)
+            if m:
+                if cur_name:
+                    comps[cur_name] = cur_lines
+                cur_name, cur_lines = m.group(1), []
+                if stripped.startswith("ENTRY"):
+                    entry = cur_name
+                continue
+        if stripped.startswith("}"):
+            if cur_name:
+                comps[cur_name] = cur_lines
+                cur_name, cur_lines = None, []
+            continue
+        if cur_name:
+            cur_lines.append(stripped)
+    if cur_name:
+        comps[cur_name] = cur_lines
+    return comps, entry
+
+
+def _trip_count(cond_lines):
+    consts = [int(m.group(1)) for ln in cond_lines
+              for m in _CONST_RE.finditer(ln)]
+    return max(consts) if consts else 1
+
+
+# ----------------------------------------------------------- flops/bytes ---
+def _dot_flops(line: str):
+    """2 x prod(result dims) x prod(lhs contracting dims)."""
+    shapes = _SHAPE_RE.findall(line)
+    if len(shapes) < 2:
+        return 0.0
+    res_dims = [int(d) for d in shapes[0][1].split(",") if d]
+    lhs_dims = [int(d) for d in shapes[1][1].split(",") if d]
+    m = _CONTRACT_RE.search(line)
+    contract = 1
+    if m:
+        for idx in m.group(1).split(","):
+            if idx:
+                contract *= lhs_dims[int(idx)]
+    n = 1
+    for d in res_dims:
+        n *= d
+    return 2.0 * n * contract
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=")
+_OPC_RE = re.compile(r"=\s*(?:\([^=]*?\)|\S+)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _def_info(lines):
+    """Symbol table: %name -> (total_bytes, dims_of_first_shape)."""
+    table = {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        shapes = _SHAPE_RE.findall(ln)
+        if not shapes:
+            table[m.group(1)] = (0.0, [])
+            continue
+        total = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        dims = [int(x) for x in shapes[0][1].split(",") if x]
+        table[m.group(1)] = (total, dims)
+    return table
+
+
+def program_costs(hlo: str):
+    """Trip-count-weighted per-device FLOPs and HBM bytes from the
+    partitioned HLO.
+
+    FLOPs: dot ops, with operand shapes resolved through a per-computation
+    symbol table (post-opt HLO does not inline operand shapes); walks into
+    fusion bodies; while bodies multiplied by trip count. Elementwise
+    FLOPs are ignored — matmuls dominate every cell here by >100x.
+    Bytes: per *executing* op line, result bytes + operand bytes, with
+    slicing ops charged for the data they actually touch:
+      dynamic-slice            2 x slice (read + write), NOT the buffer;
+      dynamic-update-slice     2 x update operand (in-place region);
+      gather                   2 x result;
+      fusions rooted in dus    2 x non-buffer operands (in-place alias).
+    Fusion internals are excluded (the call-site operands/result are the
+    HBM traffic of the fused kernel); parameter/constant/tuple plumbing
+    and control-flow ops are skipped.
+    """
+    comps, entry = split_computations(hlo)
+
+    # root opcode per computation (for in-place fusion detection)
+    root_op = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            if ln.startswith("ROOT"):
+                m = _OPC_RE.search(ln)
+                root_op[name] = m.group(1) if m else ""
+
+    # Per-fusion parameter read sizes: a fusion that only *slices* a
+    # parameter reads the slice, not the buffer (scan bodies slice
+    # loop-invariant xs inside fusions — charging the full buffer per
+    # iteration overstates traffic by the sequence length).
+    _PARAM_RE = re.compile(
+        r"^(?:ROOT\s+)?%([\w.\-]+)\s*=.*?\sparameter\((\d+)\)")
+    param_reads = {}          # comp -> {param_idx: bytes or None (=full)}
+    for name, lines in comps.items():
+        params = {}
+        for ln in lines:
+            m = _PARAM_RE.match(ln)
+            if m:
+                params[m.group(1)] = int(m.group(2))
+        if not params:
+            continue
+        uses = {p: [] for p in params}
+        for ln in lines:
+            om = _OPC_RE.search(ln)
+            if not om or om.group(1) == "parameter":
+                continue
+            opc = om.group(1)
+            shapes = _SHAPE_RE.findall(ln)
+            res_b = _shape_bytes(*shapes[0]) if shapes else 0.0
+            lp = ln.find(opc + "(")
+            if lp < 0:
+                continue
+            seg = ln[lp + len(opc) + 1:]
+            seg = seg[:seg.find(")")] if ")" in seg else seg
+            for o in _OPERAND_RE.findall(seg):
+                if o in uses:
+                    uses[o].append((opc, res_b))
+        reads = {}
+        for pname, idx in params.items():
+            u = uses[pname]
+            if u and all(op in ("slice", "dynamic-slice") for op, _ in u):
+                reads[idx] = sum(rb for _, rb in u)
+            else:
+                reads[idx] = None
+        param_reads[name] = reads
+
+    fusion_calls = {}   # comp -> [called comps]  (flops walk only)
+    ctrl_calls = {}     # comp -> [(called, trips)]
+    own_flops = {}
+    own_bytes = {}
+    _skip_ops = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "after-all", "partition-id", "replica-id",
+                 "iota", "while", "conditional"}
+    for name, lines in comps.items():
+        table = _def_info(lines)
+        fl = 0.0
+        by = 0.0
+        fcalls = []
+        ccalls = []
+        for ln in lines:
+            om = _OPC_RE.search(ln)
+            opcode = om.group(1) if om else ""
+            # control flow
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                ccalls.append((body, trips))
+                ccalls.append((cond, trips))
+                continue
+            cm = _COND_RE.search(ln)
+            if cm:
+                branches = [b.strip().lstrip("%")
+                            for b in cm.group(1).split(",")] \
+                    if cm.group(1) else [cm.group(2), cm.group(3)]
+                ccalls.extend((b, 1) for b in branches if b)
+                continue
+            called = None
+            if opcode in ("fusion", "call"):
+                m2 = _CALLS_RE.search(ln)
+                if m2:
+                    called = m2.group(1)
+                    fcalls.append(called)
+            # operand list = %refs inside the first paren group
+            lp = ln.find(opcode + "(") if opcode else -1
+            operands = []
+            if lp >= 0:
+                seg = ln[lp + len(opcode) + 1:]
+                seg = seg[:seg.find(")")] if ")" in seg else seg
+                operands = _OPERAND_RE.findall(seg)
+            if opcode == "dot":
+                shapes = _SHAPE_RE.findall(ln)
+                res_dims = [int(x) for x in shapes[0][1].split(",") if x] \
+                    if shapes else []
+                lhs_dims = table.get(operands[0], (0.0, []))[1] \
+                    if operands else []
+                cmatch = _CONTRACT_RE.search(ln)
+                contract = 1
+                if cmatch and lhs_dims:
+                    for idx in cmatch.group(1).split(","):
+                        if idx:
+                            contract *= lhs_dims[int(idx)]
+                n = 1
+                for d in res_dims:
+                    n *= d
+                fl += 2.0 * n * contract
+            if opcode in _skip_ops or not opcode:
+                continue
+            res_shapes = _line_shapes(ln)
+            res = res_shapes[0] if res_shapes else 0.0
+            op_bytes = [table.get(o, (0.0, []))[0] for o in operands]
+            if called and called in param_reads:
+                pr = param_reads[called]
+                op_bytes = [ob if pr.get(i) is None else min(ob, pr[i])
+                            for i, ob in enumerate(op_bytes)]
+            if opcode == "dynamic-slice":
+                by += 2 * res
+            elif opcode == "dynamic-update-slice":
+                upd = op_bytes[1] if len(op_bytes) > 1 else res
+                by += 2 * upd
+            elif opcode == "gather":
+                by += 2 * res
+            elif opcode in ("fusion", "call") and \
+                    root_op.get(called, "") == "dynamic-update-slice":
+                # in-place update fusion: buffer operand aliases the result
+                by += 2 * sum(ob for ob in op_bytes if ob != res)
+            else:
+                by += res + sum(op_bytes)
+        own_flops[name] = fl
+        own_bytes[name] = by
+        fusion_calls[name] = fcalls
+        ctrl_calls[name] = ccalls
+
+    fmemo, bmemo = {}, {}
+
+    def flops(name):
+        if name in fmemo:
+            return fmemo[name]
+        fmemo[name] = 0.0
+        total = own_flops.get(name, 0.0)
+        for c in fusion_calls.get(name, []):
+            total += flops(c)
+        for c, t in ctrl_calls.get(name, []):
+            total += flops(c) * t
+        fmemo[name] = total
+        return total
+
+    def nbytes(name):
+        if name in bmemo:
+            return bmemo[name]
+        bmemo[name] = 0.0
+        total = own_bytes.get(name, 0.0)
+        for c, t in ctrl_calls.get(name, []):
+            total += nbytes(c) * t
+        bmemo[name] = total
+        return total
+
+    if entry is None:
+        entry = next((n for n in comps if "main" in n), None)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0}
+    return {"flops": flops(entry), "bytes": nbytes(entry)}
+
+
+def collective_bytes(hlo: str):
+    """-> dict: per-kind and total per-device collective bytes (trip-count
+    weighted), plus an op-count breakdown."""
+    comps, entry = split_computations(hlo)
+
+    own = {}          # comp -> {kind: bytes}
+    counts = {}       # comp -> {kind: n_ops}
+    whiles = {}       # comp -> [(cond, body)]
+    for name, lines in comps.items():
+        table = _def_info(lines)
+        b = defaultdict(float)
+        c = defaultdict(int)
+        w = []
+        for ln in lines:
+            m = _COLL_RE.search(ln)
+            if m:
+                kind = m.group(1)
+                shapes = _line_shapes(ln)
+                if not shapes:
+                    continue
+                result = shapes[0]
+                lp = ln.find(kind)
+                seg = ln[lp:]
+                seg = seg[seg.find("(") + 1:]
+                seg = seg[:seg.find(")")] if ")" in seg else seg
+                onames = _OPERAND_RE.findall(seg)
+                operands = [table[o][0] for o in onames if o in table] \
+                    or [result]
+                if kind == "all-gather":
+                    moved = result
+                elif kind == "reduce-scatter":
+                    moved = sum(operands)
+                elif kind == "all-reduce":
+                    moved = 2 * result
+                else:
+                    moved = result
+                b[kind] += moved
+                c[kind] += 1
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                w.append((wm.group(1), wm.group(2)))
+        own[name] = dict(b)
+        counts[name] = dict(c)
+        whiles[name] = w
+
+    memo = {}
+
+    def total(name):
+        if name in memo:
+            return memo[name]
+        memo[name] = defaultdict(float)   # cycle guard
+        agg = defaultdict(float)
+        for k, v in own.get(name, {}).items():
+            agg[k] += v
+        for cond, body in whiles.get(name, []):
+            trips = _trip_count(comps.get(cond, []))
+            for k, v in total(body).items():
+                agg[k] += v * trips
+        # nested computations referenced via calls/fusions rarely hold
+        # collectives; conditionals are handled conservatively by the
+        # while-walk above.
+        memo[name] = agg
+        return agg
+
+    if entry is None:
+        entry = next((n for n in comps if "main" in n), None)
+    agg = total(entry) if entry else defaultdict(float)
+    out = {k: float(v) for k, v in agg.items()}
+    out["total"] = float(sum(agg.values()))
+    out["op_counts"] = {k: int(v) for k, v in
+                        (counts.get(entry) or {}).items()}
+    return out

@@ -1,0 +1,39 @@
+"""Production mesh builders.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import; smoke
+tests see 1 device).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) = one v5e pod (256 chips); (2, 16, 16) = 2 pods.
+
+    The 'pod' axis is pure DP (+ FSDP spill); 'data' is FSDP/DP within a
+    pod; 'model' is TP/EP/SP. The same rule-set generalizes to more pods —
+    nothing below assumes pod == 2.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
+
+
+def make_host_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh over whatever host devices exist (distributed tests)."""
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
+
+
+def mesh_axes(mesh):
+    """(dp_axes, model_axis, fsdp_axes) conventions for a mesh."""
+    names = mesh.axis_names
+    model = "model" if "model" in names else names[-1]
+    dp = tuple(n for n in names if n != model)
+    return dp, model, dp

@@ -1,0 +1,119 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Perf probe: compile one cell, dump the HLO, and rank the trip-weighted
+byte/flop contributors — the dry-run profiler for §Perf iterations.
+
+Usage: python -m repro.launch.perf_probe --arch llama3.2-1b --shape train_4k
+"""
+import argparse
+import re
+from collections import defaultdict, deque
+
+from repro.launch import hlo_analysis as ha
+
+
+def weighted_lines(hlo):
+    """Yield (weight, comp, line) for every op line, weight = product of
+    enclosing loop trip counts."""
+    comps, entry = ha.split_computations(hlo)
+    fus, ctl = {}, {}
+    for name, lines in comps.items():
+        f, c = [], []
+        for ln in lines:
+            wm = ha._WHILE_RE.search(ln)
+            if wm:
+                c.append((wm.group(2),
+                          ha._trip_count(comps.get(wm.group(1), []))))
+                continue
+            if "fusion(" in ln or " call(" in ln:
+                m2 = ha._CALLS_RE.search(ln)
+                if m2:
+                    f.append(m2.group(1))
+        fus[name], ctl[name] = f, c
+    w = defaultdict(float)
+    w[entry] = 1.0
+    q = deque([entry])
+    while q:
+        n = q.popleft()
+        for c in fus.get(n, []):
+            w[c] += w[n]
+            q.append(c)
+        for c, t in ctl.get(n, []):
+            w[c] += w[n] * t
+            q.append(c)
+    return comps, w
+
+
+def top_bytes(hlo, n=25, ctrl_only=True):
+    comps, w = weighted_lines(hlo)
+    rows = []
+    skip = {"parameter", "constant", "tuple", "get-tuple-element",
+            "bitcast", "after-all", "iota", "while", "conditional"}
+    for name, lines in comps.items():
+        if w.get(name, 0) == 0:
+            continue
+        if ctrl_only and ("fused" in name or "wrapped" in name
+                          or name.endswith(".clone")):
+            pass  # fusion bodies excluded from bytes below anyway
+        table = ha._def_info(lines)
+        for ln in lines:
+            om = ha._OPC_RE.search(ln)
+            if not om or om.group(1) in skip:
+                continue
+            opcode = om.group(1)
+            shapes = ha._SHAPE_RE.findall(ln)
+            if not shapes:
+                continue
+            res = ha._shape_bytes(*shapes[0])
+            lp = ln.find(opcode + "(")
+            seg = ln[lp + len(opcode) + 1:]
+            seg = seg[:seg.find(")")] if ")" in seg else seg
+            ops = ha._OPERAND_RE.findall(seg)
+            tot = res + sum(table.get(o, (0.0, []))[0] for o in ops)
+            rows.append((tot * w[name], w[name], opcode, name[:36],
+                         ln[:130]))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:n]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--hlo-out", default=None)
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args(argv)
+
+    from repro.launch.dryrun import lower_cell  # noqa: E402 (XLA_FLAGS set)
+    import repro.launch.dryrun as dr
+
+    # monkeypatch to capture the HLO text
+    captured = {}
+    orig = ha.program_costs
+
+    def capture(hlo):
+        captured["hlo"] = hlo
+        return orig(hlo)
+
+    ha.program_costs = capture
+    try:
+        res = lower_cell(args.arch, args.shape, multi_pod=args.multi_pod)
+    finally:
+        ha.program_costs = orig
+    hlo = captured["hlo"]
+    if args.hlo_out:
+        with open(args.hlo_out, "w") as f:
+            f.write(hlo)
+    print(f"flops/dev {res['flops_per_device']:.3e}  "
+          f"bytes/dev {res['bytes_per_device']:.3e}  "
+          f"coll/dev {res['collective_bytes_per_device']['total']:.3e}")
+    print("---- top byte contributors (trip-weighted) ----")
+    for tot, ww, opcode, comp, ln in top_bytes(hlo, args.top):
+        print(f"{tot:9.3e}  w={ww:6.0f} {opcode:18s} {comp}\n    {ln}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,513 @@
+"""Attention for the LM stack: GQA and MLA (DeepSeek), with three
+realizations of the paper's SDDMM+softmax+SpDMM pattern:
+
+  naive    full (Sq, Sk) scores — oracle + tiny shapes.
+  chunked  online-softmax over kv chunks via lax.scan — differentiable,
+           O(chunk) memory; the pure-XLA realization of the flash algorithm
+           (rectangular: masked dead blocks still cost FLOPs).
+  tri      prefill-only triangular schedule — per-q-chunk dynamic-bound
+           fori_loop visits only blocks at/below the causal diagonal (the
+           SDDMM dead-block skip, ~2x FLOP cut at long context). Not
+           reverse-differentiable -> inference paths only.
+
+On real TPU the Pallas kernel (kernels/flash_attention.py) replaces these;
+dry-run graphs use the XLA paths (Mosaic does not lower to host CPU).
+
+MLA decode uses the weight-absorption trick: scores and context are computed
+directly in the compressed kv_lora space, so the 32k-token cache stays at
+(kv_lora + rope_dim) = 576 per token instead of H*(nope+v) = 32768.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (dot, head_rms_norm, rms_norm, rope,
+                                 wsc)
+
+NEG = -1e30
+
+
+
+# ----------------------------------------------------------------- cores --
+def naive_attention(q, k, v, *, causal: bool, offset: int = 0,
+                    scale: float | None = None, length=None):
+    """q (B,Sq,H,hd); k,v (B,Sk,Hkv,hd). ``length``: valid kv length —
+    scalar or per-row (B,) vector (continuous-batching decode)."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = scale or 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, group, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((B, Sq, Sk), bool)
+    if causal:
+        mask &= (kpos[None, :] <= jnp.arange(Sq)[:, None] + offset)[None]
+    if length is not None:
+        lv = jnp.asarray(length).reshape(-1, 1, 1)      # scalar or (B,)
+        mask &= kpos[None, None, :] < lv
+    s = jnp.where(mask[:, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, offset: int = 0,
+                      scale: float | None = None, chunk: int = 512):
+    """Online-softmax scan over kv chunks. Differentiable (train path).
+
+    Runs at full H heads (kv repeated group-wise) so the head dim is
+    divisible by the model axis even for small n_kv_heads, and pins the
+    sharding of every scan-carried tensor: batch -> dp, heads -> model.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = scale or 1.0 / math.sqrt(hd)
+    chunk = min(chunk, Sk)
+    assert Sk % chunk == 0, (Sk, chunk)
+    nkc = Sk // chunk
+    dv = v.shape[-1]
+    qf = wsc(q.astype(jnp.float32) * scale, "dp", None, "model", None)
+    if group > 1:
+        k = jnp.repeat(k, group, 2)
+        v = jnp.repeat(v, group, 2)
+    kc = wsc(k.reshape(B, nkc, chunk, H, hd),
+             "dp", None, None, "model", None)
+    vc = wsc(v.reshape(B, nkc, chunk, H, dv),
+             "dp", None, None, "model", None)
+    qpos = jnp.arange(Sq) + offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, ci = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+        s = wsc(s, "dp", "model", None, None)
+        if causal:
+            kpos = ci * chunk + jnp.arange(chunk)
+            s = jnp.where(kpos[None, :] <= qpos[:, None], s, NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        carry = (wsc(m_new, "dp", "model", None),
+                 wsc(l, "dp", "model", None),
+                 wsc(acc, "dp", "model", None, None))
+        return carry, None
+
+    m0 = wsc(jnp.full((B, H, Sq), -jnp.inf, jnp.float32),
+             "dp", "model", None)
+    l0 = wsc(jnp.zeros((B, H, Sq), jnp.float32), "dp", "model", None)
+    a0 = wsc(jnp.zeros((B, H, Sq, dv), jnp.float32),
+             "dp", "model", None, None)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nkc)))
+    out = acc / jnp.where(l == 0, 1.0, l)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def tri_attention(q, k, v, *, offset: int = 0, scale: float | None = None,
+                  chunk: int = 512):
+    """Causal, prefill-only: per q-chunk, visit kv chunks 0..diag via a
+    dynamic-bound fori_loop (FLOPs ~ S^2/2 instead of S^2)."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    scale = scale or 1.0 / math.sqrt(hd)
+    chunk = min(chunk, Sq, Sk)
+    assert Sq % chunk == 0 and Sk % chunk == 0
+    nqc = Sq // chunk
+    dv = v.shape[-1]
+    qf = q.astype(jnp.float32).reshape(B, nqc, chunk, Hkv, group, hd) * scale
+
+    def q_chunk(qi, qb):
+        qpos = qi * chunk + jnp.arange(chunk) + offset
+
+        def kv_step(ci, carry):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ci * chunk, chunk, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ci * chunk, chunk, 1)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb.astype(jnp.float32))
+            kpos = ci * chunk + jnp.arange(chunk)
+            s = jnp.where(kpos[None, :] <= qpos[:, None], s, NEG)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+            return m_new, l, acc
+
+        m0 = jnp.full((B, Hkv, group, chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, group, chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, group, chunk, dv), jnp.float32)
+        # diagonal chunk index for this q chunk (offset aligns q to kv end)
+        diag = (qi * chunk + chunk - 1 + offset) // chunk + 1
+        m, l, acc = jax.lax.fori_loop(0, diag, kv_step, (m0, l0, a0))
+        out = acc / jnp.where(l == 0, 1.0, l)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, chunk, H, dv)
+
+    outs = jax.lax.map(lambda args: q_chunk(*args),
+                       (jnp.arange(nqc), qf.transpose(1, 0, 2, 3, 4, 5)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, dv).astype(
+        q.dtype)
+
+
+def decode_attention(q, kcache, vcache, length, *,
+                     scale: float | None = None):
+    """Single-token decode: q (B,1,H,hd), caches (B,S,Hkv,hd), ``length`` =
+    current valid length (scalar). Memory-bound cache sweep."""
+    return naive_attention(q, kcache, vcache, causal=False, scale=scale,
+                           length=length)
+
+
+
+# ------------------------------------------------- flash (custom_vjp) -----
+# Perf iteration 2: the scan-based chunked attention saves stacked
+# per-chunk residuals (nkc, B, H, Sq, chunk) for its backward — O(S^2)
+# bytes that GSPMD additionally fails to batch-shard. This custom_vjp is
+# the flash-attention backward at the XLA level: fwd saves only
+# (q, k, v, out, LSE); bwd recomputes scores chunk-by-chunk. Residual
+# memory O(S^2) -> O(S); it is the exact XLA twin of
+# kernels/flash_attention.py (SDDMM + softmax + SpDMM fused, paper IV-A).
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_xla(q, k, v, causal: bool = True, offset: int = 0,
+                        scale: float | None = None, chunk: int = 512):
+    out, _ = _flash_fwd_impl(q, k, v, causal, offset, scale, chunk)
+    return out
+
+
+# Attention sharding mode: "heads" = TP over the head dim; "context" =
+# CP over the q sequence dim (kv streamed chunk-wise, scores 1/model_size
+# per device — the right layout for long-context prefill, Perf iter 7).
+ATTN_SHARD = {"mode": "context"}
+
+
+def _qspec():
+    # q (B, Sq, Hk, g, hd)
+    return ("dp", "model", None, None, None) \
+        if ATTN_SHARD["mode"] == "context" \
+        else ("dp", None, "model", None, None)
+
+
+def _sspec():
+    # scores (B, Hk, g, Sq, chunk)
+    return ("dp", None, None, "model", None) \
+        if ATTN_SHARD["mode"] == "context" \
+        else ("dp", "model", None, None, None)
+
+
+def _rowspec():
+    # running stats (B, Hk, g, Sq)
+    return ("dp", None, None, "model") \
+        if ATTN_SHARD["mode"] == "context" \
+        else ("dp", "model", None, None)
+
+
+def _flash_fwd_impl(q, k, v, causal, offset, scale, chunk):
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    group = H // k.shape[2]
+    dv = v.shape[-1]
+    scale = scale or 1.0 / math.sqrt(hd)
+    chunk = min(chunk, Sk)
+    assert Sk % chunk == 0, (Sk, chunk)
+    nkc = Sk // chunk
+    if group > 1 and ATTN_SHARD["mode"] == "heads":
+        # heads mode shards H — needs full-H kv; context mode keeps kv at
+        # n_kv_heads (grouped einsum), saving group x kv bytes
+        k = jnp.repeat(k, group, 2)
+        v = jnp.repeat(v, group, 2)
+    Hk = k.shape[2]
+    g = H // Hk
+    qf = wsc((q.astype(jnp.float32) * scale).reshape(B, Sq, Hk, g, hd),
+             *_qspec())
+    kc = wsc(k.reshape(B, nkc, chunk, Hk, hd),
+             "dp", None, None, None, None)
+    vc = wsc(v.reshape(B, nkc, chunk, Hk, dv),
+             "dp", None, None, None, None)
+    qpos = jnp.arange(Sq) + offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, ci = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb.astype(jnp.float32))
+        s = wsc(s, *_sspec())
+        if causal:
+            kpos = ci * chunk + jnp.arange(chunk)
+            s = jnp.where(kpos[None, :] <= qpos[:, None], s, NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        carry = (wsc(m_new, *_rowspec()),
+                 wsc(l, *_rowspec()),
+                 wsc(acc, *_rowspec(), None))
+        return carry, None
+
+    m0 = wsc(jnp.full((B, Hk, g, Sq), NEG, jnp.float32), *_rowspec())
+    l0 = wsc(jnp.zeros((B, Hk, g, Sq), jnp.float32), *_rowspec())
+    a0 = wsc(jnp.zeros((B, Hk, g, Sq, dv), jnp.float32),
+             *_rowspec(), None)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nkc)))
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30))).reshape(B, H, Sq)
+    out = (acc / jnp.where(l == 0, 1.0, l)[..., None]).reshape(
+        B, H, Sq, dv).transpose(0, 2, 1, 3).astype(q.dtype)  # (B,Sq,H,dv)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, offset, scale, chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, offset, scale, chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, offset, scale, chunk, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    dv = v.shape[-1]
+    scale_v = scale or 1.0 / math.sqrt(hd)
+    chunk_v = min(chunk, Sk)
+    nkc = Sk // chunk_v
+    if group > 1 and ATTN_SHARD["mode"] == "heads":
+        k = jnp.repeat(k, group, 2)
+        v = jnp.repeat(v, group, 2)
+    Hk = k.shape[2]
+    g = H // Hk
+    qf = wsc(q.astype(jnp.float32).reshape(B, Sq, Hk, g, hd), *_qspec())
+    kc = wsc(k.reshape(B, nkc, chunk_v, Hk, hd).astype(jnp.float32),
+             "dp", None, None, None, None)
+    vc = wsc(v.reshape(B, nkc, chunk_v, Hk, dv).astype(jnp.float32),
+             "dp", None, None, None, None)
+    do = wsc(dout.astype(jnp.float32).reshape(B, Sq, Hk, g, dv), *_qspec())
+    lse_g = lse.reshape(B, Hk, g, Sq)
+    # D_i = sum_d dO * O  (B,Hk,g,Sq)
+    Dterm = wsc(jnp.einsum("bqhgd,bqhgd->bhgq", do,
+                           out.astype(jnp.float32).reshape(
+                               B, Sq, Hk, g, dv)), *_rowspec())
+    qpos = jnp.arange(Sq) + offset
+
+    def step(dq, inp):
+        kb, vb, ci = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb) * scale_v
+        s = wsc(s, *_sspec())
+        if causal:
+            kpos = ci * chunk_v + jnp.arange(chunk_v)
+            s = jnp.where(kpos[None, :] <= qpos[:, None], s, NEG)
+        p = jnp.exp(s - lse_g[..., None])             # (B,Hk,g,Sq,chunk)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", do, vb)
+        ds = p * (dp - Dterm[..., None]) * scale_v
+        dq = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kb)
+        dkb = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qf)
+        dvb = jnp.einsum("bhgqk,bqhgd->bkhd", p, do)
+        return wsc(dq, *_qspec()), (dkb, dvb)
+
+    dq0 = jnp.zeros((B, Sq, Hk, g, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(
+        step, dq0,
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nkc)))
+    dq = dq.reshape(B, Sq, H, hd)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Sk, Hk, hd)
+    dv_ = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Sk, Hk, dv)
+    if Hk != Hkv:                     # heads mode: fold repeats back
+        dk = dk.reshape(B, Sk, Hkv, group, hd).sum(3)
+        dv_ = dv_.reshape(B, Sk, Hkv, group, dv).sum(3)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv_.astype(v.dtype))
+
+
+flash_attention_xla.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_chunked_attention(q, k, v, *, causal: bool, offset: int = 0,
+                            scale: float | None = None, chunk: int = 512):
+    return flash_attention_xla(q, k, v, causal, offset, scale, chunk)
+
+
+ATTN_IMPLS = {"naive": naive_attention, "chunked": flash_chunked_attention,
+              "chunked_scan": chunked_attention}
+
+
+
+# ------------------------------------------------------------------- GQA --
+def init_gqa(key, cfg, dtype):
+    from repro.models.layers import init_linear
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": init_linear(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+         "wk": init_linear(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+         "wv": init_linear(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+         "wo": init_linear(ks[3], cfg.n_heads * hd, cfg.d_model, dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def gqa_project(params, x, positions, cfg):
+    """-> q (B,S,H,hd), k, v (B,S,Hkv,hd) with bias/qk-norm/rope applied."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = dot(x, params["wq"])
+    k = dot(x, params["wk"])
+    v = dot(x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(jnp.float32)
+        k = k + params["bk"].astype(jnp.float32)
+        v = v + params["bv"].astype(jnp.float32)
+    q = q.astype(x.dtype).reshape(B, S, cfg.n_heads, hd)
+    k = k.astype(x.dtype).reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.astype(x.dtype).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.pos_emb == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(params, x, positions, cfg, *, impl="chunked", offset=0):
+    q, k, v = gqa_project(params, x, positions, cfg)
+    if impl == "tri":
+        out = tri_attention(q, k, v, offset=offset)
+    else:
+        out = ATTN_IMPLS[impl](q, k, v, causal=True, offset=offset)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, -1)
+    return dot(out, params["wo"]).astype(x.dtype)
+
+
+def _pos_vec(length, b):
+    """length scalar or (b,) -> positions (b, 1) int32."""
+    lv = jnp.asarray(length, jnp.int32)
+    return jnp.broadcast_to(lv.reshape(-1, 1), (b, 1))
+
+
+def gqa_decode(params, x, cache_k, cache_v, length, cfg):
+    """x (B,1,d). ``length``: scalar or per-row (B,) vector. Returns
+    (out, new_k_cache, new_v_cache) — the caller owns the sharded
+    buffers."""
+    b = x.shape[0]
+    positions = _pos_vec(length, b)
+    q, k1, v1 = gqa_project(params, x, positions, cfg)
+    rows = jnp.arange(b)
+    pos = positions[:, 0]
+    k = cache_k.at[rows, pos].set(k1[:, 0], mode="drop")
+    v = cache_v.at[rows, pos].set(v1[:, 0], mode="drop")
+    out = decode_attention(q, k, v, jnp.asarray(length) + 1)
+    out = out.reshape(b, 1, -1)
+    return dot(out, params["wo"]).astype(x.dtype), k, v
+
+
+# ------------------------------------------------------------------- MLA --
+def init_mla(key, cfg, dtype):
+    from repro.models.layers import init_linear
+    m = cfg.mla
+    H = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    qh = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wdq": init_linear(ks[0], cfg.d_model, m.q_lora_rank, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wuq": init_linear(ks[1], m.q_lora_rank, H * qh, dtype),
+        "wdkv": init_linear(ks[2], cfg.d_model,
+                            m.kv_lora_rank + m.rope_head_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wukv": init_linear(ks[3], m.kv_lora_rank,
+                            H * (m.nope_head_dim + m.v_head_dim), dtype),
+        "wo": init_linear(ks[4], H * m.v_head_dim, cfg.d_model, dtype),
+    }
+
+
+def _mla_qkr(params, x, positions, cfg):
+    """Shared q/compressed-kv projections. Returns q_nope (B,S,H,nope),
+    q_rope (B,S,H,rope), ckv (B,S,kv_lora), kr (B,S,1,rope)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = rms_norm(dot(x, params["wdq"]).astype(x.dtype), params["q_norm"],
+                  cfg.norm_eps)
+    q = dot(cq, params["wuq"]).astype(x.dtype).reshape(
+        B, S, H, m.nope_head_dim + m.rope_head_dim)
+    qn, qr = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    qr = rope(qr, positions, cfg.rope_theta)
+    dkv = dot(x, params["wdkv"]).astype(x.dtype)
+    ckv = rms_norm(dkv[..., :m.kv_lora_rank], params["kv_norm"],
+                   cfg.norm_eps)
+    kr = rope(dkv[..., None, m.kv_lora_rank:], positions, cfg.rope_theta)
+    return qn, qr, ckv, kr
+
+
+def mla_forward(params, x, positions, cfg, *, impl="chunked", offset=0):
+    """Training/prefill MLA: decompress per-head K/V, standard attention."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qn, qr, ckv, kr = _mla_qkr(params, x, positions, cfg)
+    kv = dot(ckv, params["wukv"]).astype(x.dtype).reshape(
+        B, S, H, m.nope_head_dim + m.v_head_dim)
+    kn, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
+    q = jnp.concatenate([qn, qr], -1)
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr, qr.shape[:2] + (H,)
+                                              + kr.shape[-1:])], -1)
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    if impl == "tri":
+        out = tri_attention(q, k, v, offset=offset, scale=scale)
+    else:
+        out = ATTN_IMPLS[impl](q, k, v, causal=True, offset=offset,
+                               scale=scale)
+    return dot(out.reshape(B, S, -1), params["wo"]).astype(x.dtype)
+
+
+def mla_decode(params, x, cache_ckv, cache_kr, length, cfg):
+    """Absorbed decode in the compressed space.
+
+    caches: ckv (B,S,kv_lora), kr (B,S,rope). ``length``: scalar or (B,).
+    Scores = (q_nope W_uk) ckvᵀ + q_rope krᵀ; context stays rank-kv_lora."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    positions = _pos_vec(length, B)
+    qn, qr, ckv1, kr1 = _mla_qkr(params, x, positions, cfg)
+    rows = jnp.arange(B)
+    pos = positions[:, 0]
+    ckv = cache_ckv.at[rows, pos].set(ckv1[:, 0], mode="drop")
+    kr = cache_kr.at[rows, pos].set(kr1[:, 0, 0], mode="drop")
+    wukv = params["wukv"].reshape(m.kv_lora_rank, H,
+                                  m.nope_head_dim + m.v_head_dim)
+    w_uk = wukv[..., :m.nope_head_dim]           # (kv_lora, H, nope)
+    w_uv = wukv[..., m.nope_head_dim:]           # (kv_lora, H, v)
+    q_abs = jnp.einsum("bthn,khn->bthk", qn.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    s = jnp.einsum("bthk,bsk->bhts", q_abs, ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bthr,bsr->bhts", qr.astype(jnp.float32),
+                       kr.astype(jnp.float32))
+    s = s / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    lv = jnp.asarray(length).reshape(-1, 1, 1, 1)
+    mask = jnp.arange(ckv.shape[1])[None, None, None, :] <= lv
+    p = jax.nn.softmax(jnp.where(mask, s, NEG), axis=-1)
+    ctx = jnp.einsum("bhts,bsk->bthk", p, ckv.astype(jnp.float32))
+    out = jnp.einsum("bthk,khv->bthv", ctx, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, -1).astype(x.dtype)
+    return dot(out, params["wo"]).astype(x.dtype), ckv, kr

@@ -1,0 +1,167 @@
+"""Shared LM building blocks: norms, RoPE, embeddings, dense MLP, init.
+
+Parameters are plain nested dicts of jax.Arrays (stackable for scan).
+All matmuls accumulate in fp32 (``preferred_element_type``); norms and
+softmax run in fp32 and cast back — standard bf16 training practice.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ------------------------------------------------------- sharding context --
+# Role-based activation constraints (the data-layout-centric mapping of
+# DESIGN.md §4 at the activation level). lm_forward/prefill/decode set the
+# active (dp, model) axis names; wsc() pins tensor dims to them wherever the
+# dims divide. Without these pins GSPMD drops batch/head sharding on scan
+# residuals and replicates (B, S, S)-sized attention tensors per device
+# (§Perf iteration 1).
+_AXES = {"dp": ("data",), "model": "model", "mesh": None}
+
+
+@contextlib.contextmanager
+def shard_axes(dp=("data",), model="model", mesh=None):
+    """Activate role-based constraints for the enclosed trace. ``mesh``
+    must be the concrete jax.sharding.Mesh (a bare ``with mesh:`` block
+    does NOT populate the abstract-mesh context, so wsc builds explicit
+    NamedShardings from it)."""
+    prev = dict(_AXES)
+    _AXES.update(dp=tuple(dp) if not isinstance(dp, str) else (dp,),
+                 model=model, mesh=mesh)
+    try:
+        yield
+    finally:
+        _AXES.update(prev)
+
+
+def wsc(x, *roles):
+    """with_sharding_constraint by role: each entry is None, "dp", "model"
+    or "dp+model". Dims that don't divide the axis product stay
+    unconstrained; outside a shard_axes(mesh=...) context this is a
+    no-op."""
+    mesh = _AXES["mesh"]
+    if mesh is None or os.environ.get("REPRO_NO_WSC"):
+        return x
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    spec = []
+    for role, dim in zip(roles, x.shape):
+        if role is None:
+            spec.append(None)
+            continue
+        axes = ()
+        if "dp" in role:
+            axes += _AXES["dp"]
+        if "model" in role:
+            axes += (_AXES["model"],)
+        n = 1
+        for a in axes:
+            if a not in mesh.axis_names:
+                n = 0
+                break
+            n *= mesh.shape[a]
+        spec.append((axes if len(axes) > 1 else axes[0])
+                    if n and dim % n == 0 else None)
+    if all(sp is None for sp in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def dot(x, w):
+    return jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def rms_norm(x, scale, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def head_rms_norm(x, scale, eps=1e-5):
+    """Per-head qk-norm (qwen3 / chameleon): x (..., H, hd)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, hd), positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = (1.0 / theta) ** (jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32)[..., None, :] \
+        * freqs  # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), \
+        x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions, d_model: int):
+    half = d_model // 2
+    freqs = (1.0 / 10_000.0) ** (jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+def mlp_apply(params, x, act: str = "swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(dot(x, params["wg"])) * dot(x, params["wi"])
+    else:
+        h = jax.nn.gelu(dot(x, params["wi"]))
+    return dot(h.astype(x.dtype), params["wo"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- init --
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_linear(key, fin, fout, dtype, *, scale=None):
+    return _normal(key, (fin, fout), dtype,
+                   scale if scale is not None else 1.0 / math.sqrt(fin))
+
+
+def init_mlp(key, d, ff, dtype, act="swiglu"):
+    ks = jax.random.split(key, 3)
+    p = {"wi": init_linear(ks[0], d, ff, dtype),
+         "wo": init_linear(ks[1], ff, d, dtype)}
+    if act == "swiglu":
+        p["wg"] = init_linear(ks[2], d, ff, dtype)
+    return p
+
+
+def stack_params(trees):
+    """Stack a list of identical pytrees along axis 0 (for lax.scan)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, 0), *trees)
+
+
+def causal_mask(sq: int, sk: int, offset: int):
+    q = jnp.arange(sq)[:, None] + offset
+    k = jnp.arange(sk)[None, :]
+    return k <= q
+
+
+def cross_entropy(logits, labels, *, ignore_id: int = -1):
+    """logits (..., V) fp32-cast; labels (...) int32. Mean over valid."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = logz - gold
+    valid = (labels != ignore_id).astype(jnp.float32)
+    return (nll * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+def as_np_tree_size(tree) -> float:
+    return sum(np.prod(x.shape) for x in jax.tree.leaves(tree))

@@ -1,0 +1,468 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM, sLSTM).
+
+In the paper's primitive vocabulary (DESIGN.md §4) the chunked SSD scan *is*
+the uniform mapping of a recurrence onto matrix primitives: the intra-chunk
+term is a masked DDMM pair (``(C Bᵀ ⊙ L) X``), the inter-chunk term a small
+DDMM against the carried state, and the decay matrices are PSVM/PVVA work.
+The token-level recurrence only survives as a ``lax.scan`` over chunks.
+
+Every recurrence ships three realizations:
+  *_seq      token-level scan — oracle for tests + decode-step maths,
+  *_chunked  chunk-parallel matrix form — the train/prefill path,
+  *_step     single-token state update — the serving decode path.
+
+All carry/compute in fp32; block I/O in the model dtype.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dot, init_linear, rms_norm, wsc
+
+NEG = -1e30  # finite -inf stand-in (avoids inf-inf NaNs in grads)
+
+
+# ====================================================================== SSD =
+def ssd_seq(x, dt, A, B, C, D, *, state=None):
+    """Token-level SSD reference.
+
+    x (b,S,H,P); dt (b,S,H) >0; A (H,) <0; B,C (b,S,G,N); D (H,).
+    state (b,H,N,P) or None. Returns (y (b,S,H,P), final state).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    a = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (b,S,H)
+    Bx = jnp.repeat(B.astype(jnp.float32), rep, 2)               # (b,S,H,N)
+    Cx = jnp.repeat(C.astype(jnp.float32), rep, 2)
+    dx = dt.astype(jnp.float32)[..., None] * xf                  # (b,S,H,P)
+    s0 = jnp.zeros((b, H, N, P), jnp.float32) if state is None \
+        else state.astype(jnp.float32)
+
+    def step(s, inp):
+        a_t, B_t, C_t, dx_t = inp
+        s = a_t[:, :, None, None] * s + B_t[..., None] * dx_t[..., None, :]
+        y = jnp.einsum("bhn,bhnp->bhp", C_t, s)
+        return s, y
+
+    xs = (a.transpose(1, 0, 2), Bx.transpose(1, 0, 2, 3),
+          Cx.transpose(1, 0, 2, 3), dx.transpose(1, 0, 2, 3))
+    s, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3) + D.astype(jnp.float32)[:, None] * xf
+    return y.astype(x.dtype), s
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int, state=None):
+    """Chunk-parallel SSD (Mamba2 Alg. 1 adapted): intra-chunk masked DDMM +
+    inter-chunk state DDMM, ``lax.scan`` only over n_chunks."""
+    b, S0, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Q = min(chunk, S0)
+    if S0 % Q:                       # pad with dt=0 tokens (a=1, no-ops)
+        pad = Q - S0 % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = x.shape[1]
+    nc = S // Q
+    xf = x.astype(jnp.float32).reshape(b, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, Q, H)
+    la = dtf * A.astype(jnp.float32)                    # log a  (b,nc,Q,H)
+    Bx = jnp.repeat(B.astype(jnp.float32), rep, 2).reshape(b, nc, Q, H, N)
+    Cx = jnp.repeat(C.astype(jnp.float32), rep, 2).reshape(b, nc, Q, H, N)
+    dx = dtf[..., None] * xf                            # (b,nc,Q,H,P)
+
+    xf = wsc(xf, "dp", "model", None, None, None)
+    dx = wsc(dx, "dp", "model", None, None, None)
+    Bx = wsc(Bx, "dp", "model", None, None, None)
+    Cx = wsc(Cx, "dp", "model", None, None, None)
+    cum = jnp.cumsum(la, axis=2)                        # inclusive  A_cum
+    total = cum[:, :, -1]                               # (b,nc,H)
+    # L[i,j] = exp(cum_i - cum_j) for i>=j  (within chunk)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (b,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = wsc(jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0),
+            "dp", "model", None, None, None)
+    scores = wsc(jnp.einsum("bcqhn,bckhn->bcqkh", Cx, Bx) * L,
+                 "dp", "model", None, None, None)
+    y_intra = wsc(jnp.einsum("bcqkh,bckhp->bcqhp", scores, dx),
+                  "dp", "model", None, None, None)
+    # per-chunk local final state: sum_j exp(total - cum_j) B_j dx_j^T
+    w = jnp.exp(total[:, :, None] - cum)                # (b,nc,Q,H)
+    s_loc = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", w, Bx, dx)
+
+    s0 = jnp.zeros((b, H, N, P), jnp.float32) if state is None \
+        else state.astype(jnp.float32)
+
+    def chunk_step(s, inp):
+        tot_c, sl_c = inp                               # (b,H), (b,H,N,P)
+        s_next = jnp.exp(tot_c)[:, :, None, None] * s + sl_c
+        return s_next, s                                # emit incoming state
+
+    (s_fin, s_in) = jax.lax.scan(
+        chunk_step, s0, (total.transpose(1, 0, 2),
+                         s_loc.transpose(1, 0, 2, 3, 4)))
+    s_in = s_in.transpose(1, 0, 2, 3, 4)                # (b,nc,H,N,P)
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", Cx, s_in, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, S, H, P) \
+        + D.astype(jnp.float32)[:, None] * x.astype(jnp.float32)
+    return y[:, :S0].astype(x.dtype), s_fin
+
+
+def ssd_step(x, dt, A, B, C, D, state):
+    """Single-token decode. x (b,H,P); dt (b,H); B,C (b,G,N);
+    state (b,H,N,P). Returns (y, new_state)."""
+    H, G = x.shape[1], B.shape[1]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    a = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))
+    Bx = jnp.repeat(B.astype(jnp.float32), rep, 1)
+    Cx = jnp.repeat(C.astype(jnp.float32), rep, 1)
+    dx = dt.astype(jnp.float32)[..., None] * xf
+    s = a[:, :, None, None] * state.astype(jnp.float32) \
+        + Bx[..., None] * dx[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", Cx, s) \
+        + D.astype(jnp.float32)[:, None] * xf
+    return y.astype(x.dtype), s
+
+
+# ============================================================= Mamba2 block =
+def init_mamba2(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    dt0 = jnp.exp(jax.random.uniform(ks[2], (nheads,), jnp.float32,
+                                     math.log(1e-3), math.log(1e-1)))
+    return {
+        "in_proj": init_linear(
+            ks[0], d, 2 * d_in + 2 * s.n_groups * s.d_state + nheads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch),
+                                     jnp.float32)
+                   / math.sqrt(s.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)),
+        "dt_bias": dt0 + jnp.log(-jnp.expm1(-dt0)),     # inv-softplus
+        "D": jnp.ones((nheads,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": init_linear(ks[3], d_in, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b, *, tail=None):
+    """Depthwise causal conv. x (b,S,C); w (K,C). ``tail`` (b,K-1,C) is the
+    carried left context (decode); returns (y, new_tail)."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], 1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(jnp.float32)
+            for i in range(K))
+    new_tail = xp[:, -(K - 1):] if K > 1 else tail
+    return (y + b.astype(jnp.float32)).astype(x.dtype), new_tail
+
+
+def mamba2_forward(params, x, cfg, *, state=None, impl="chunked"):
+    """x (b,S,d). state: None or dict(conv (b,K-1,convch), ssm (b,H,N,P)).
+    Returns (out, new_state)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    gN = s.n_groups * s.d_state
+    nheads = d_in // s.head_dim
+    proj = dot(x, params["in_proj"]).astype(x.dtype)
+    z, xBC, dtr = jnp.split(proj, [d_in, 2 * d_in + 2 * gN], -1)
+    conv_tail = None if state is None else state["conv"]
+    xBC, new_tail = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                 tail=conv_tail)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs, B, C = jnp.split(xBC, [d_in, d_in + gN], -1)
+    b, S = x.shape[:2]
+    xs = xs.reshape(b, S, nheads, s.head_dim)
+    B = B.reshape(b, S, s.n_groups, s.d_state)
+    C = C.reshape(b, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32)
+                         + params["dt_bias"])          # (b,S,H)
+    A = -jnp.exp(params["A_log"])
+    ssm0 = None if state is None else state["ssm"]
+    fn = ssd_chunked if impl == "chunked" else ssd_seq
+    kw = {"chunk": s.chunk} if impl == "chunked" else {}
+    y, ssm1 = fn(xs, dt, A, B, C, params["D"], state=ssm0, **kw)
+    y = y.reshape(b, S, d_in)
+    y = rms_norm((y.astype(jnp.float32)
+                  * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 params["norm"], cfg.norm_eps)
+    out = dot(y, params["out_proj"]).astype(x.dtype)
+    return out, {"conv": new_tail, "ssm": ssm1}
+
+
+def mamba2_init_state(cfg, batch, dtype):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    nheads = d_in // s.head_dim
+    return {"conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+            "ssm": jnp.zeros((batch, nheads, s.d_state, s.head_dim),
+                             jnp.float32)}
+
+
+# ==================================================================== mLSTM =
+def mlstm_seq(q, k, v, li, lf, *, state=None):
+    """Stabilized token-level mLSTM. q,k,v (b,S,H,P); li,lf (b,S,H) log-gates.
+    state: (C (b,H,P,P), n (b,H,P), m (b,H)). Returns (h, state)."""
+    b, S, H, P = q.shape
+    qf = q.astype(jnp.float32) / math.sqrt(P)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    if state is None:
+        state = (jnp.zeros((b, H, P, P), jnp.float32),
+                 jnp.zeros((b, H, P), jnp.float32),
+                 jnp.full((b, H), NEG, jnp.float32))
+
+    def step(carry, inp):
+        Cm, n, m = carry
+        q_t, k_t, v_t, li_t, lf_t = inp
+        m_new = jnp.maximum(lf_t + m, li_t)
+        fp = jnp.exp(lf_t + m - m_new)
+        ip = jnp.exp(li_t - m_new)
+        Cm = fp[..., None, None] * Cm \
+            + ip[..., None, None] * k_t[..., :, None] * v_t[..., None, :]
+        n = fp[..., None] * n + ip[..., None] * k_t
+        num = jnp.einsum("bhp,bhpv->bhv", q_t, Cm)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q_t, n)),
+                          jnp.exp(-m_new))
+        return (Cm, n, m_new), num / den[..., None]
+
+    xs = (qf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), li.astype(jnp.float32).transpose(1, 0, 2),
+          lf.astype(jnp.float32).transpose(1, 0, 2))
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3).astype(q.dtype), state
+
+
+def mlstm_chunked(q, k, v, li, lf, *, chunk: int, state=None):
+    """Chunkwise-parallel stabilized mLSTM (intra = masked DDMM pair, inter =
+    DDMM vs carried (C, n); scan over chunks only)."""
+    b, S0, H, P = q.shape
+    Q = min(chunk, S0)
+    if S0 % Q:                       # pad: li=NEG (no input), lf=0 (no decay)
+        pad = Q - S0 % Q
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, zpad) for a in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=NEG)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    S = q.shape[1]
+    nc = S // Q
+    qf = (q.astype(jnp.float32) / math.sqrt(P)).reshape(b, nc, Q, H, P)
+    kf = k.astype(jnp.float32).reshape(b, nc, Q, H, P)
+    vf = v.astype(jnp.float32).reshape(b, nc, Q, H, P)
+    lif = li.astype(jnp.float32).reshape(b, nc, Q, H)
+    lff = lf.astype(jnp.float32).reshape(b, nc, Q, H)
+    qf = wsc(qf, "dp", "model", None, None, None)
+    kf = wsc(kf, "dp", "model", None, None, None)
+    vf = wsc(vf, "dp", "model", None, None, None)
+    bcum = jnp.cumsum(lff, axis=2)                      # inclusive
+    btot = bcum[:, :, -1]                               # (b,nc,H)
+    # intra weights: D[i,j] = b_i - b_j + li_j  (j<=i)
+    dmat = bcum[:, :, :, None, :] - bcum[:, :, None, :, :] \
+        + lif[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    dmat = wsc(jnp.where(tri, dmat, NEG),
+               "dp", "model", None, None, None)
+    m_intra = dmat.max(3)                               # (b,nc,Q,H)
+    # chunk-local state weights: b_tot - b_j + li_j
+    wloc = btot[:, :, None] - bcum + lif                # (b,nc,Q,H)
+    m_loc = wloc.max(2)                                 # (b,nc,H)
+
+    if state is None:
+        C0 = jnp.zeros((b, H, P, P), jnp.float32)
+        n0 = jnp.zeros((b, H, P), jnp.float32)
+        m0 = jnp.full((b, H), NEG, jnp.float32)
+    else:
+        C0, n0, m0 = [s.astype(jnp.float32) for s in state]
+
+    def chunk_step(carry, inp):
+        Cm, n, m = carry
+        btot_c, mloc_c, wloc_c, kc, vc = inp
+        m_next = jnp.maximum(btot_c + m, mloc_c)
+        w = jnp.exp(wloc_c - m_next[:, None])           # (b,Q,H)
+        dec = jnp.exp(btot_c + m - m_next)
+        C_next = dec[..., None, None] * Cm \
+            + jnp.einsum("bqh,bqhp,bqhv->bhpv", w, kc, vc)
+        n_next = dec[..., None] * n + jnp.einsum("bqh,bqhp->bhp", w, kc)
+        return (C_next, n_next, m_next), (Cm, n, m)
+
+    (Cf, nf, mf), (C_in, n_in, m_in) = jax.lax.scan(
+        chunk_step, (C0, n0, m0),
+        (btot.transpose(1, 0, 2), m_loc.transpose(1, 0, 2),
+         wloc.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3, 4),
+         vf.transpose(1, 0, 2, 3, 4)))
+    C_in = C_in.transpose(1, 0, 2, 3, 4)                # (b,nc,H,P,P)
+    n_in = n_in.transpose(1, 0, 2, 3)
+    m_in = m_in.transpose(1, 0, 2)                      # (b,nc,H)
+
+    m_inter = bcum + m_in[:, :, None]                   # (b,nc,Q,H)
+    m_new = jnp.maximum(m_intra, m_inter)
+    w_intra = jnp.exp(dmat - m_new[:, :, :, None])      # (b,nc,Q,Q,H)
+    qk = wsc(jnp.einsum("bcqhp,bckhp->bcqkh", qf, kf),
+             "dp", "model", None, None, None)
+    scores = qk * w_intra
+    num = wsc(jnp.einsum("bcqkh,bckhv->bcqhv", scores, vf),
+              "dp", "model", None, None, None)
+    den_intra = jnp.einsum("bcqkh->bcqh", scores)
+    w_inter = jnp.exp(m_inter - m_new)                  # (b,nc,Q,H)
+    num = num + w_inter[..., None] * jnp.einsum(
+        "bcqhp,bchpv->bcqhv", qf, C_in)
+    den = den_intra + w_inter * jnp.einsum("bcqhp,bchp->bcqh", qf, n_in)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, S, H, P)
+    return h[:, :S0].astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_step(q, k, v, li, lf, state):
+    """Single-token decode. q,k,v (b,H,P); li,lf (b,H)."""
+    h, state = mlstm_seq(q[:, None], k[:, None], v[:, None],
+                         li[:, None], lf[:, None], state=state)
+    return h[:, 0], state
+
+
+def init_mlstm(key, cfg, dtype):
+    x = cfg.xlstm
+    d = cfg.d_model
+    d_in = int(x.proj_factor * d)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": init_linear(ks[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (x.conv_width, d_in),
+                                     jnp.float32)
+                   / math.sqrt(x.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": init_linear(ks[2], d_in, d_in, dtype),
+        "wk": init_linear(ks[3], d_in, d_in, dtype),
+        "wv": init_linear(ks[4], d_in, d_in, dtype),
+        "wif": init_linear(ks[5], d_in, 2 * H, dtype),
+        "if_bias": jnp.concatenate([
+            jnp.zeros((H,), jnp.float32),
+            jnp.linspace(3.0, 6.0, H, dtype=jnp.float32)]),
+        "skip": jnp.ones((d_in,), dtype),
+        "norm": jnp.ones((d_in,), dtype),
+        "down": init_linear(ks[6], d_in, d, dtype),
+    }
+
+
+def mlstm_block(params, x, cfg, *, state=None, impl="chunked"):
+    """Post-up-projection mLSTM block. state: dict(conv, C, n, m) or None."""
+    xc = cfg.xlstm
+    b, S, d = x.shape
+    d_in = int(xc.proj_factor * d)
+    H = cfg.n_heads
+    P = d_in // H
+    up = dot(x, params["up"]).astype(x.dtype)
+    h_in, z = jnp.split(up, [d_in], -1)
+    conv_tail = None if state is None else state["conv"]
+    hc, new_tail = _causal_conv(h_in, params["conv_w"], params["conv_b"],
+                                tail=conv_tail)
+    hc = jax.nn.silu(hc.astype(jnp.float32)).astype(x.dtype)
+    q = dot(hc, params["wq"]).astype(x.dtype).reshape(b, S, H, P)
+    k = dot(hc, params["wk"]).astype(x.dtype).reshape(b, S, H, P)
+    v = dot(h_in, params["wv"]).astype(x.dtype).reshape(b, S, H, P)
+    gates = dot(hc, params["wif"]) + params["if_bias"]
+    li, lfr = jnp.split(gates, 2, -1)                   # (b,S,H) each
+    lf = jax.nn.log_sigmoid(lfr)
+    st0 = None if state is None else (state["C"], state["n"], state["m"])
+    fn = mlstm_chunked if impl == "chunked" else mlstm_seq
+    kw = {"chunk": xc.chunk} if impl == "chunked" else {}
+    hout, (C1, n1, m1) = fn(q, k, v, li, lf, state=st0, **kw)
+    hout = hout.reshape(b, S, d_in)
+    from repro.models.layers import head_rms_norm
+    hout = head_rms_norm(hout.reshape(b, S, H, P),
+                         params["norm"].reshape(H, P).astype(x.dtype)[
+                             None, None], cfg.norm_eps).reshape(b, S, d_in)
+    hout = hout + params["skip"].astype(jnp.float32) * hc
+    hout = hout.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    out = dot(hout.astype(x.dtype), params["down"]).astype(x.dtype)
+    return out, {"conv": new_tail, "C": C1, "n": n1, "m": m1}
+
+
+def mlstm_init_state(cfg, batch, dtype):
+    x = cfg.xlstm
+    d_in = int(x.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    P = d_in // H
+    return {"conv": jnp.zeros((batch, x.conv_width - 1, d_in), dtype),
+            "C": jnp.zeros((batch, H, P, P), jnp.float32),
+            "n": jnp.zeros((batch, H, P), jnp.float32),
+            "m": jnp.full((batch, H), NEG, jnp.float32)}
+
+
+# ==================================================================== sLSTM =
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w": init_linear(ks[0], d, 4 * d, dtype),       # z,i,f,o
+        "r": (jax.random.normal(ks[1], (H, hd, 4 * hd), jnp.float32)
+              / math.sqrt(hd)).astype(dtype),           # block-diag recurrent
+        "bias": jnp.concatenate([
+            jnp.zeros((2 * d,), jnp.float32),
+            jnp.linspace(3.0, 6.0, d, dtype=jnp.float32),   # forget bias
+            jnp.zeros((d,), jnp.float32)]),
+        "norm": jnp.ones((d,), dtype),
+        "out": init_linear(ks[2], d, d, dtype),
+    }
+
+
+def slstm_block(params, x, cfg, *, state=None):
+    """Sequential sLSTM (token scan — inherently recurrent, DESIGN §5).
+    state: dict(c,n,m,h) each (b,H,hd) or None."""
+    b, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    wx = dot(x, params["w"]) + params["bias"]           # (b,S,4d) fp32
+    if state is None:
+        z = jnp.zeros((b, H, hd), jnp.float32)
+        state = {"c": z, "n": z, "m": jnp.full((b, H, hd), NEG,
+                                               jnp.float32), "h": z}
+    rw = params["r"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        c, n, m, h = carry
+        rec = jnp.einsum("bhd,hdk->bhk", h, rw)         # (b,H,4hd)
+        # wx is ordered as (z,i,f,o) blocks of d; regroup per head
+        zt, it, ft, ot = jnp.split(
+            wx_t.reshape(b, 4, H, hd).transpose(0, 2, 1, 3)
+            .reshape(b, H, 4 * hd) + rec, 4, -1)
+        zt = jnp.tanh(zt)
+        m_new = jnp.maximum(ft + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(ft + m - m_new)
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        h_new = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h_new), h_new
+
+    (c, n, m, h), hs = jax.lax.scan(
+        step, (state["c"], state["n"], state["m"], state["h"]),
+        wx.astype(jnp.float32).transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, S, d).astype(x.dtype)
+    hs = rms_norm(hs, params["norm"], cfg.norm_eps)
+    out = dot(hs, params["out"]).astype(x.dtype)
+    return out, {"c": c, "n": n, "m": m, "h": h}
+
+
+def slstm_init_state(cfg, batch, dtype):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": z,
+            "m": jnp.full((batch, H, hd), NEG, jnp.float32), "h": z}

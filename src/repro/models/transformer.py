@@ -1,0 +1,509 @@
+"""Generic decoder-only LM assembled from a block pattern.
+
+The 10 assigned architectures are all instances of one pattern language
+(``ModelConfig.pattern``): a sequence of block kinds drawn from
+{attn, mamba2, mlstm, slstm}, plus per-arch flags (GQA/MLA, MoE, qk-norm,
+shared zamba2 blocks). Layers of identical kind+variant are grouped into
+*stages*; each stage's parameters are stacked on a leading axis and executed
+with ``lax.scan`` (MaxText-style), which keeps HLO size and compile time
+independent of depth — essential for the 61–80-layer dry-run cells.
+
+Remat: ``remat="block"`` wraps each scanned block body in ``jax.checkpoint``
+(dots recomputed, block inputs saved) — the activation-memory knob used by
+the §Perf iterations.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.attention import (gqa_decode, gqa_forward, init_gqa,
+                                    init_mla, mla_decode, mla_forward)
+from repro.models.config import ModelConfig
+from repro.models.layers import (cross_entropy, dot, init_linear, init_mlp,
+                                 mlp_apply, rms_norm, shard_axes,
+                                 sinusoidal_pos, stack_params, wsc)
+
+
+from repro.models.moe import init_moe, moe_apply
+
+
+def _embed(params, cfg, tokens, embeds, positions):
+    x = params["embed"][tokens] if embeds is None \
+        else embeds.astype(params["embed"].dtype)
+    if cfg.pos_emb == "sinusoidal":
+        x = (x.astype(jnp.float32)
+             + sinusoidal_pos(positions, cfg.d_model)).astype(x.dtype)
+    return x
+
+
+# ==================================================================== plan ==
+def build_stages(cfg: ModelConfig):
+    """Group the block pattern into maximal same-(kind, variant) runs.
+
+    Returns a list of (kind, variant, layer_indices). variant is "mlp" or
+    "moe" for attn blocks, "" otherwise.
+    """
+    out: list[tuple[str, str, list[int]]] = []
+    attn_seen = 0
+    for i, kind in enumerate(cfg.pattern):
+        variant = ""
+        if kind == "attn":
+            if cfg.moe is not None and attn_seen >= cfg.moe.first_dense_layers:
+                variant = "moe"
+            else:
+                variant = "mlp"
+            attn_seen += 1
+        if out and out[-1][0] == kind and out[-1][1] == variant:
+            out[-1][2].append(i)
+        else:
+            out.append((kind, variant, [i]))
+    return out
+
+
+def _dense_ff(cfg):
+    if cfg.moe is not None and cfg.moe.d_ff_dense:
+        return cfg.moe.d_ff_dense
+    return cfg.d_ff
+
+
+# ==================================================================== init ==
+def _init_block(key, cfg, kind, variant, dtype):
+    ks = jax.random.split(key, 4)
+    if kind == "attn":
+        init_attn = init_mla if cfg.attn_type == "mla" else init_gqa
+        p = {"norm1": jnp.ones((cfg.d_model,), dtype),
+             "attn": init_attn(ks[0], cfg, dtype),
+             "norm2": jnp.ones((cfg.d_model,), dtype)}
+        if variant == "moe":
+            p["moe"] = init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, _dense_ff(cfg), dtype,
+                                cfg.mlp_act)
+        return p
+    if kind == "mamba2":
+        return {"norm": jnp.ones((cfg.d_model,), dtype),
+                "body": ssm.init_mamba2(ks[0], cfg, dtype)}
+    if kind == "mlstm":
+        return {"norm": jnp.ones((cfg.d_model,), dtype),
+                "body": ssm.init_mlstm(ks[0], cfg, dtype)}
+    if kind == "slstm":
+        return {"norm": jnp.ones((cfg.d_model,), dtype),
+                "body": ssm.init_slstm(ks[0], cfg, dtype)}
+    raise ValueError(kind)
+
+
+def init_lm(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    stages = build_stages(cfg)
+    n_keys = len(stages) + 3
+    ks = jax.random.split(key, n_keys)
+    params = {"embed": (jax.random.normal(
+        ks[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        params["head"] = init_linear(ks[1], cfg.d_model, cfg.vocab, dtype)
+    for si, (kind, variant, idxs) in enumerate(stages):
+        bks = jax.random.split(ks[2 + si], len(idxs))
+        blocks = [_init_block(bk, cfg, kind, variant, dtype) for bk in bks]
+        params[f"stage_{si}"] = stack_params(blocks)
+    if cfg.shared_attn_every:
+        sks = jax.random.split(ks[-1], cfg.n_shared_blocks)
+        shared = [{"norm1": jnp.ones((cfg.d_model,), dtype),
+                   "attn": init_gqa(sk, cfg, dtype),
+                   "norm2": jnp.ones((cfg.d_model,), dtype),
+                   "mlp": init_mlp(jax.random.fold_in(sk, 1), cfg.d_model,
+                                   cfg.d_ff, dtype, cfg.mlp_act)}
+                  for sk in sks]
+        params["shared"] = stack_params(shared)
+    return params
+
+
+# ================================================================= forward ==
+def _attn_block(p, x, positions, cfg, variant, *, impl, mesh, dp_axes,
+                model_axis):
+    # sequence-parallel block boundary: the remat-saved residual (this
+    # block's input) shards over model on S — ZeRO-R / SP (Perf iter 4)
+    x = wsc(x, "dp", "model", None)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    fwd = mla_forward if cfg.attn_type == "mla" else gqa_forward
+    x = x + fwd(p["attn"], h, positions, cfg, impl=impl)
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if variant == "moe":
+        out, aux = moe_apply(p["moe"], h, cfg, mesh=mesh, dp_axes=dp_axes,
+                             model_axis=model_axis)
+    else:
+        out, aux = mlp_apply(p["mlp"], h, cfg.mlp_act), 0.0
+    return x + out, aux
+
+
+def _rec_block(p, x, cfg, kind, *, impl, state=None):
+    x = wsc(x, "dp", "model", None)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    if kind == "mamba2":
+        out, st = ssm.mamba2_forward(p["body"], h, cfg, state=state,
+                                     impl=impl)
+    elif kind == "mlstm":
+        out, st = ssm.mlstm_block(p["body"], h, cfg, state=state, impl=impl)
+    else:
+        out, st = ssm.slstm_block(p["body"], h, cfg, state=state)
+    return x + out, st
+
+
+def _scan_stage(stage_params, x, body, *, remat: bool):
+    """Scan ``body(block_params, x) -> (x, aux)`` over stacked params."""
+    def step(carry, bp):
+        x, aux = carry
+        fn = jax.checkpoint(body) if remat else body
+        x, a = fn(bp, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, 0.0), stage_params)
+    return x, aux
+
+
+def lm_forward(params, cfg: ModelConfig, tokens=None, embeds=None,
+               positions=None, *, impl="chunked", rec_impl="chunked",
+               mesh=None, dp_axes=("data",), model_axis="model",
+               remat=False):
+    """Full-sequence forward. Returns (logits (b,S,V), aux_loss scalar)."""
+    import os as _os
+    impl = _os.environ.get("REPRO_ATTN_IMPL", impl)
+    # (shard_axes wrap added below)
+    b, S = (tokens if embeds is None else embeds).shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (b, S))
+    with shard_axes(dp=dp_axes, model=model_axis, mesh=mesh):
+        x = _embed(params, cfg, tokens, embeds, positions)
+        aux_total = 0.0
+        stages = build_stages(cfg)
+
+        if cfg.shared_attn_every:
+            x, aux_total = _forward_shared(params, cfg, x, positions,
+                                           stages, impl=impl,
+                                           rec_impl=rec_impl, remat=remat)
+        else:
+            for si, (kind, variant, _) in enumerate(stages):
+                if kind == "attn":
+                    body = partial(_attn_block, positions=positions,
+                                   cfg=cfg, variant=variant, impl=impl,
+                                   mesh=mesh, dp_axes=dp_axes,
+                                   model_axis=model_axis)
+                    bw = lambda p, xx, body=body: body(p, xx)
+                else:
+                    def bw(p, xx, kind=kind):
+                        out, _ = _rec_block(p, xx, cfg, kind,
+                                            impl=rec_impl)
+                        return out, 0.0
+                x, aux = _scan_stage(params[f"stage_{si}"], x, bw,
+                                     remat=remat)
+                aux_total = aux_total + aux
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        logits = wsc(dot(x, head), "dp", None, "model")
+    return logits, aux_total
+
+
+def _forward_shared(params, cfg, x, positions, stages, *, impl, rec_impl,
+                    remat):
+    """zamba2: backbone blocks with a shared GQA+MLP block applied every
+    ``shared_attn_every`` layers, alternating ``n_shared_blocks`` copies."""
+    (kind, variant, idxs), = stages      # homogeneous backbone required
+    every = cfg.shared_attn_every
+    n = len(idxs)
+    assert n % every == 0, (n, every)
+    n_super = n // every
+    sp = jax.tree.map(
+        lambda a: a.reshape((n_super, every) + a.shape[1:]),
+        params[f"stage_{0}"])
+
+    def super_step(carry, inp):
+        x, aux = carry
+        bp, idx = inp
+
+        def backbone(p, xx):
+            out, _ = _rec_block(p, xx, cfg, kind, impl=rec_impl)
+            return out, 0.0
+
+        x, a = _scan_stage(bp, x, backbone, remat=remat)
+        shared = jax.tree.map(
+            lambda s: s[idx % cfg.n_shared_blocks], params["shared"])
+
+        def shared_body(p, xx):
+            return _shared_block(p, xx, positions, cfg, impl)
+
+        body = jax.checkpoint(shared_body) if remat else shared_body
+        x = body(shared, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(super_step, (x, 0.0),
+                               (sp, jnp.arange(n_super)))
+    return x, aux
+
+
+def _shared_block(p, x, positions, cfg, impl):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    x = x + gqa_forward(p["attn"], h, positions, cfg, impl=impl)
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    return x + mlp_apply(p["mlp"], h, cfg.mlp_act)
+
+
+# ==================================================================== loss ==
+def lm_loss(params, cfg, batch, *, mesh=None, dp_axes=("data",),
+            model_axis="model", impl="chunked", rec_impl="chunked",
+            remat=False, aux_weight=1e-2):
+    logits, aux = lm_forward(
+        params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+        impl=impl, rec_impl=rec_impl, mesh=mesh, dp_axes=dp_axes,
+        model_axis=model_axis, remat=remat)
+    loss = cross_entropy(logits, batch["labels"])
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ================================================================== caches ==
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Per-layer decode caches, stacked per stage (for lax.scan decode)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    caches = {}
+    for si, (kind, variant, idxs) in enumerate(build_stages(cfg)):
+        L = len(idxs)
+        if kind == "attn":
+            if cfg.attn_type == "mla":
+                m = cfg.mla
+                c = {"ckv": jnp.zeros((L, batch, max_len, m.kv_lora_rank),
+                                      dtype),
+                     "kr": jnp.zeros((L, batch, max_len, m.rope_head_dim),
+                                     dtype)}
+            else:
+                c = {"k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, hd),
+                                    dtype),
+                     "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, hd),
+                                    dtype)}
+        elif kind == "mamba2":
+            c = jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape),
+                             ssm.mamba2_init_state(cfg, batch, dtype))
+        elif kind == "mlstm":
+            c = jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape),
+                             ssm.mlstm_init_state(cfg, batch, dtype))
+        else:
+            c = jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape),
+                             ssm.slstm_init_state(cfg, batch, dtype))
+        caches[f"stage_{si}"] = c
+    if cfg.shared_attn_every:
+        n_apps = len(build_stages(cfg)[0][2]) // cfg.shared_attn_every
+        caches["shared"] = {
+            "k": jnp.zeros((n_apps, batch, max_len, cfg.n_kv_heads, hd),
+                           dtype),
+            "v": jnp.zeros((n_apps, batch, max_len, cfg.n_kv_heads, hd),
+                           dtype)}
+    return caches
+
+
+def lm_decode_step(params, cfg: ModelConfig, tokens, caches, length, *,
+                   mesh=None, dp_axes=("data",), model_axis="model"):
+    """One decode step. tokens (b,) int32; length scalar or per-row (b,)
+    int32 (current context size). Returns (logits (b,V), new caches)."""
+    from repro.models.attention import _pos_vec
+    positions = _pos_vec(length, tokens.shape[0])
+    with shard_axes(dp=dp_axes, model=model_axis, mesh=mesh):
+        x = _embed(params, cfg, tokens[:, None], None, positions)  # (b,1,d)
+        stages = build_stages(cfg)
+
+        if cfg.shared_attn_every:
+            x, caches = _decode_shared(params, cfg, x, caches, length,
+                                       stages)
+        else:
+            for si, (kind, variant, _) in enumerate(stages):
+                key = f"stage_{si}"
+                x, caches[key] = _decode_stage(
+                    params[key], caches[key], x, length, cfg, kind,
+                    variant, mesh=mesh, dp_axes=dp_axes,
+                    model_axis=model_axis)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        logits = dot(x, head)[:, 0]
+    return logits, caches
+
+
+def _decode_stage(stage_params, stage_cache, x, length, cfg, kind, variant,
+                  *, mesh=None, dp_axes=("data",), model_axis="model"):
+    def step(x, inp):
+        bp, cache = inp
+        if kind == "attn":
+            h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+            if cfg.attn_type == "mla":
+                out, ckv, kr = mla_decode(bp["attn"], h, cache["ckv"],
+                                          cache["kr"], length, cfg)
+                cache = {"ckv": ckv, "kr": kr}
+            else:
+                out, k, v = gqa_decode(bp["attn"], h, cache["k"], cache["v"],
+                                       length, cfg)
+                cache = {"k": k, "v": v}
+            x = x + out
+            h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+            if variant == "moe":
+                out, _ = moe_apply(bp["moe"], h, cfg, mesh=mesh,
+                                   dp_axes=dp_axes, model_axis=model_axis)
+            else:
+                out = mlp_apply(bp["mlp"], h, cfg.mlp_act)
+            return x + out, cache
+        x, st = _rec_block(bp, x, cfg, kind, impl="seq", state=cache)
+        return x, st
+
+    return jax.lax.scan(step, x, (stage_params, stage_cache))
+
+
+def _decode_shared(params, cfg, x, caches, length, stages):
+    (kind, variant, idxs), = stages
+    every = cfg.shared_attn_every
+    n_super = len(idxs) // every
+    sp = jax.tree.map(
+        lambda a: a.reshape((n_super, every) + a.shape[1:]),
+        params["stage_0"])
+    sc = jax.tree.map(
+        lambda a: a.reshape((n_super, every) + a.shape[1:]),
+        caches["stage_0"])
+
+    def super_step(x, inp):
+        bp, bc, shc, idx = inp
+
+        def inner(x, inp2):
+            p, c = inp2
+            x, st = _rec_block(p, x, cfg, kind, impl="seq", state=c)
+            return x, st
+
+        x, bc = jax.lax.scan(inner, x, (bp, bc))
+        shared = jax.tree.map(
+            lambda s: s[idx % cfg.n_shared_blocks], params["shared"])
+        h = rms_norm(x, shared["norm1"], cfg.norm_eps)
+        out, k, v = gqa_decode(shared["attn"], h, shc["k"], shc["v"],
+                               length, cfg)
+        x = x + out
+        h = rms_norm(x, shared["norm2"], cfg.norm_eps)
+        x = x + mlp_apply(shared["mlp"], h, cfg.mlp_act)
+        return x, (bc, {"k": k, "v": v})
+
+    x, (sc, shc) = jax.lax.scan(
+        super_step, x, (sp, sc, caches["shared"], jnp.arange(n_super)))
+    caches["stage_0"] = jax.tree.map(
+        lambda a: a.reshape((n_super * every,) + a.shape[2:]), sc)
+    caches["shared"] = shc
+    return x, caches
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens=None, embeds=None, *,
+               max_len: int, impl="tri", rec_impl="chunked", mesh=None,
+               dp_axes=("data",), model_axis="model", last_index=None):
+    """Prefill: forward over the prompt, materializing decode caches.
+
+    Returns (last_logits (b,V), caches, length). Cache layout matches
+    ``init_caches``; attention K/V are projected once and written at
+    positions [0, S). ``last_index``: scalar or (b,) index of the true
+    last prompt token (right-padded prompts are causal-safe — pads never
+    influence positions <= last_index).
+    """
+    b, S = (tokens if embeds is None else embeds).shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                 (b, S))
+    ctx = shard_axes(dp=dp_axes, model=model_axis, mesh=mesh)
+    ctx.__enter__()
+    x = _embed(params, cfg, tokens, embeds, positions)
+    caches = init_caches(cfg, b, max_len)
+    stages = build_stages(cfg)
+
+    def pad_to_max(arr):                                 # (b,S,...)->(b,max)
+        pad = [(0, 0)] * arr.ndim
+        pad[1] = (0, max_len - S)
+        return jnp.pad(arr, pad)
+
+    if cfg.shared_attn_every:
+        x, caches = _prefill_shared(params, cfg, x, positions, caches,
+                                    stages, impl, rec_impl, pad_to_max)
+    else:
+        for si, (kind, variant, _) in enumerate(stages):
+            key = f"stage_{si}"
+
+            def body(carry, inp, kind=kind, variant=variant):
+                x = carry
+                bp = inp
+                if kind == "attn":
+                    from repro.models.attention import (gqa_project,
+                                                        _mla_qkr)
+                    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+                    if cfg.attn_type == "mla":
+                        out = mla_forward(bp["attn"], h, positions, cfg,
+                                          impl=impl)
+                        _, _, ckv, kr = _mla_qkr(bp["attn"], h, positions,
+                                                 cfg)
+                        cache = {"ckv": pad_to_max(ckv),
+                                 "kr": pad_to_max(kr[:, :, 0])}
+                    else:
+                        out = gqa_forward(bp["attn"], h, positions, cfg,
+                                          impl=impl)
+                        q, k, v = gqa_project(bp["attn"], h, positions, cfg)
+                        cache = {"k": pad_to_max(k), "v": pad_to_max(v)}
+                    x = x + out
+                    h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+                    if variant == "moe":
+                        out, _ = moe_apply(bp["moe"], h, cfg, mesh=mesh,
+                                           dp_axes=dp_axes,
+                                           model_axis=model_axis)
+                    else:
+                        out = mlp_apply(bp["mlp"], h, cfg.mlp_act)
+                    return x + out, cache
+                x, st = _rec_block(bp, x, cfg, kind, impl=rec_impl)
+                return x, st
+
+            x, caches[key] = jax.lax.scan(body, x, params[key])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    if last_index is None:
+        x_last = x[:, -1:]
+        length = jnp.int32(S)
+    else:
+        idx = jnp.broadcast_to(jnp.asarray(last_index, jnp.int32), (b,))
+        x_last = jnp.take_along_axis(x, idx[:, None, None].astype(jnp.int32)
+                                     .clip(0, S - 1), axis=1)
+        length = idx + 1
+    logits = dot(x_last, head)[:, 0]
+    ctx.__exit__(None, None, None)
+    return logits, caches, length
+
+
+def _prefill_shared(params, cfg, x, positions, caches, stages, impl,
+                    rec_impl, pad_to_max):
+    from repro.models.attention import gqa_project
+    (kind, variant, idxs), = stages
+    every = cfg.shared_attn_every
+    n_super = len(idxs) // every
+    sp = jax.tree.map(
+        lambda a: a.reshape((n_super, every) + a.shape[1:]),
+        params["stage_0"])
+
+    def super_step(x, inp):
+        bp, idx = inp
+
+        def inner(x, p):
+            x, st = _rec_block(p, x, cfg, kind, impl=rec_impl)
+            return x, st
+
+        x, bc = jax.lax.scan(inner, x, bp)
+        shared = jax.tree.map(
+            lambda s: s[idx % cfg.n_shared_blocks], params["shared"])
+        h = rms_norm(x, shared["norm1"], cfg.norm_eps)
+        x = x + gqa_forward(shared["attn"], h, positions, cfg, impl=impl)
+        _, k, v = gqa_project(shared["attn"], h, positions, cfg)
+        h = rms_norm(x, shared["norm2"], cfg.norm_eps)
+        x = x + mlp_apply(shared["mlp"], h, cfg.mlp_act)
+        return x, (bc, {"k": pad_to_max(k), "v": pad_to_max(v)})
+
+    x, (sc, shc) = jax.lax.scan(super_step, x, (sp, jnp.arange(n_super)))
+    caches["stage_0"] = jax.tree.map(
+        lambda a: a.reshape((n_super * every,) + a.shape[2:]), sc)
+    caches["shared"] = shc
+    return x, caches

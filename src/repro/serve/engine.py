@@ -1,0 +1,156 @@
+"""Batched serving engine: slot-based continuous batching.
+
+vLLM-style control flow reduced to its JAX-native core:
+  * a fixed pool of ``slots`` (the decode batch dimension) with per-slot
+    lengths — decode steps run in lockstep over all slots, per-slot
+    causal masks handle ragged lengths;
+  * prompts are prefilled one-at-a-time into a free slot (cache rows are
+    written in place), generation joins the next decode step — no
+    stop-the-world rebatching;
+  * finished slots (EOS or max_new) are recycled immediately.
+
+The decode step is a single jit-compiled function of static shape —
+deterministic latency per step (the paper's argument for fixed-function
+execution, §VII-D2, carried to the LM world).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (init_caches, lm_decode_step,
+                                      lm_prefill)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new: int = 32
+    eos_id: int | None = None
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, slots: int = 8, max_len: int = 512,
+                 mesh=None, dp_axes=("data",), model_axis="model",
+                 greedy: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.mesh = mesh
+        self.greedy = greedy
+        self._rng = jax.random.PRNGKey(seed)
+        self._rid = itertools.count()
+        self.queue: list[Request] = []
+        self.active: list[Request | None] = [None] * slots
+        self.lengths = jnp.zeros((slots,), jnp.int32)
+        self.last_tok = jnp.zeros((slots,), jnp.int32)
+        self.caches = init_caches(cfg, slots, max_len)
+        self._decode = jax.jit(partial(
+            lm_decode_step, cfg=cfg, mesh=mesh, dp_axes=dp_axes,
+            model_axis=model_axis))
+        self._prefill = jax.jit(
+            partial(lm_prefill, cfg=cfg, max_len=max_len, impl="chunked",
+                    mesh=mesh, dp_axes=dp_axes, model_axis=model_axis),
+            static_argnames=())
+
+    # ------------------------------------------------------------ intake --
+    def submit(self, prompt, max_new: int = 32, eos_id: int | None = None):
+        req = Request(next(self._rid), np.asarray(prompt, np.int32),
+                      max_new=max_new, eos_id=eos_id)
+        self.queue.append(req)
+        return req
+
+    def _free_slot(self):
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    @staticmethod
+    def _bucket(n, quantum=16):
+        return max(quantum, -(-n // quantum) * quantum)
+
+    @property
+    def _attention_only(self):
+        return all(k == "attn" for k in self.cfg.pattern)
+
+    def _admit(self):
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            S = len(req.prompt)
+            if self._attention_only:
+                # right-pad to a bucket boundary: causal-safe for pure
+                # attention (pads sit in the masked future; one compile
+                # per bucket, not per length)
+                padded = np.zeros((self._bucket(S),), np.int32)
+                padded[:S] = req.prompt
+                logits, caches1, length = self._prefill(
+                    self.params, tokens=jnp.asarray(padded)[None],
+                    last_index=jnp.int32(S - 1))
+            else:
+                # recurrent state absorbs every token it sees — prefill at
+                # the exact prompt length (one compile per length)
+                logits, caches1, length = self._prefill(
+                    self.params, tokens=jnp.asarray(req.prompt)[None])
+            # splice slot row from the single-row prefill caches
+            self.caches = jax.tree.map(
+                lambda full, one: full.at[:, slot].set(one[:, 0]),
+                self.caches, caches1)
+            tok = self._sample(logits)[0]
+            req.out.append(int(tok))
+            self.active[slot] = req
+            self.lengths = self.lengths.at[slot].set(
+                int(np.asarray(length).reshape(-1)[0]))
+            self.last_tok = self.last_tok.at[slot].set(tok)
+
+    def _sample(self, logits):
+        if self.greedy:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        self._rng, k = jax.random.split(self._rng)
+        return jax.random.categorical(k, logits).astype(jnp.int32)
+
+    # -------------------------------------------------------------- step --
+    def step(self):
+        """Admit pending prompts, then decode one token for every active
+        slot. Returns the number of active requests."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return 0
+        logits, self.caches = self._decode(
+            self.params, tokens=self.last_tok, caches=self.caches,
+            length=self.lengths)
+        toks = self._sample(logits)
+        self.lengths = self.lengths + jnp.asarray(
+            [r is not None for r in self.active], jnp.int32)
+        self.last_tok = toks
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            t = int(toks[i])
+            req.out.append(t)
+            hit_eos = req.eos_id is not None and t == req.eos_id
+            if hit_eos or len(req.out) >= req.max_new \
+                    or int(self.lengths[i]) >= self.max_len - 1:
+                req.done = True
+                self.active[i] = None
+                self.lengths = self.lengths.at[i].set(0)
+        return sum(r is not None for r in self.active)
+
+    def run(self, max_steps: int = 10_000):
+        """Drive until queue + slots drain."""
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0 and not self.queue:
+                break

@@ -1,0 +1,5 @@
+from repro.train.optim import adamw, sgd
+from repro.train.step import build_train_step
+from repro.train.checkpoint import CheckpointManager
+
+__all__ = ["adamw", "sgd", "build_train_step", "CheckpointManager"]

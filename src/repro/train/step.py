@@ -1,0 +1,61 @@
+"""Train step builder: loss + grad + optimizer, with optional gradient
+accumulation (scanned microbatches — compute/comm overlap comes free from
+XLA pipelining the per-microbatch psums) and remat policy selection.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import lm_loss
+
+
+def build_train_step(cfg, optimizer, *, mesh=None, dp_axes=("data",),
+                     model_axis="model", remat=False, microbatches: int = 1,
+                     impl="chunked", rec_impl="chunked", aux_weight=1e-2):
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics)``. ``batch`` = {"tokens"|"embeds", "labels"} with leading
+    global-batch dim; with ``microbatches > 1`` the batch is split on dim 0
+    and grads are accumulated in fp32 via lax.scan."""
+    loss_fn = partial(lm_loss, cfg=cfg, mesh=mesh, dp_axes=dp_axes,
+                      model_axis=model_axis, impl=impl, rec_impl=rec_impl,
+                      remat=remat, aux_weight=aux_weight)
+
+    def fwd(params, batch):
+        loss, parts = loss_fn(params, batch=batch)
+        return loss, parts
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, parts), grads = jax.value_and_grad(
+                fwd, has_aux=True)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatches,
+                                     a.shape[0] // microbatches)
+                                    + a.shape[1:]), batch)
+
+            def micro(acc, b):
+                (l, p), g = jax.value_and_grad(fwd, has_aux=True)(params, b)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc_g, g)
+                return (acc_g, acc_l + l), p
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), parts_all = jax.lax.scan(
+                micro, (zero, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            parts = jax.tree.map(lambda x: x.mean(), parts_all)
+
+        updates, opt_state, om = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params,
+                              updates)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,95 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward +
+train step asserting shapes and no NaNs, plus prefill/decode consistency
+against the full forward — deliverable (f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.transformer import (build_stages, init_lm, lm_decode_step,
+                                      lm_forward, lm_loss, lm_prefill)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=16):
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    if cfg.embed_inputs:
+        return {"tokens": tokens, "labels": tokens}, tokens, None
+    embeds = jax.random.normal(KEY, (b, s, cfg.d_model), jnp.float32)
+    return {"embeds": embeds, "labels": tokens}, tokens, embeds
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_forward_and_grad(arch):
+    cfg = configs.get_smoke(arch)
+    params = init_lm(KEY, cfg)
+    batch, tokens, embeds = _batch(cfg)
+    logits, aux = lm_forward(params, cfg, tokens=None if embeds is not None
+                             else tokens, embeds=embeds)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+    loss, _ = lm_loss(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: lm_loss(p, cfg, batch)[0])(params)
+    gn = sum(float(jnp.abs(x).sum()) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_prefill_decode_match_forward(arch):
+    cfg = configs.get_smoke(arch)
+    params = init_lm(KEY, cfg)
+    _, tokens, embeds = _batch(cfg)
+    logits, _ = lm_forward(params, cfg, tokens=None if embeds is not None
+                           else tokens, embeds=embeds)
+    last, caches, length = lm_prefill(
+        params, cfg, tokens=tokens if embeds is None else None,
+        embeds=embeds, max_len=24, impl="chunked")
+    np.testing.assert_allclose(np.asarray(last, np.float32),
+                               np.asarray(logits[:, -1], np.float32),
+                               rtol=2e-4, atol=2e-4)
+    nxt = jnp.argmax(last, -1).astype(jnp.int32)
+    logits2, _ = lm_decode_step(params, cfg, nxt, caches, length)
+    toks2 = jnp.concatenate([tokens, nxt[:, None]], 1)
+    if embeds is None:
+        ref2, _ = lm_forward(params, cfg, tokens=toks2)
+    else:
+        emb2 = jnp.concatenate(
+            [embeds, params["embed"][nxt][:, None].astype(jnp.float32)], 1)
+        ref2, _ = lm_forward(params, cfg, embeds=emb2)
+    np.testing.assert_allclose(np.asarray(logits2, np.float32),
+                               np.asarray(ref2[:, -1], np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_full_config_structure(arch):
+    """Full (published) configs: stage plan covers exactly n_layers; param
+    count is in the advertised ballpark."""
+    cfg = configs.get(arch)
+    stages = build_stages(cfg)
+    assert sum(len(idx) for _, _, idx in stages) == cfg.n_layers
+    n = cfg.params_count()
+    expected = {
+        "zamba2-2.7b": 2.7e9, "deepseek-v3-671b": 671e9,
+        "grok-1-314b": 314e9, "qwen2-72b": 72e9, "codeqwen1.5-7b": 7e9,
+        "llama3.2-1b": 1.2e9, "qwen3-0.6b": 0.6e9,
+        "musicgen-medium": 1.5e9, "xlstm-350m": 0.35e9,
+        "chameleon-34b": 34e9}[arch]
+    assert 0.4 * expected < n < 2.6 * expected, (arch, n, expected)
+
+
+def test_moe_active_params_less_than_total():
+    cfg = configs.get("deepseek-v3-671b")
+    assert cfg.active_params_count() < 0.1 * cfg.params_count()
+
+
+def test_cells_enumeration():
+    cells = configs.cells()
+    assert len(cells) == 32            # 10*3 + 2 sub-quadratic long_500k
+    assert ("zamba2-2.7b", "long_500k") in cells
+    assert ("xlstm-350m", "long_500k") in cells
+    assert ("qwen2-72b", "long_500k") not in cells
+    assert len(configs.cells(include_na=True)) == 40

@@ -1,0 +1,121 @@
+"""End-to-end behaviour tests for the paper's benchmark models (reduced
+configs): every task/zoo model compiles through the five passes, runs, and
+is invariant to the compiler options (fusion / sparsity-aware mapping)."""
+import numpy as np
+import pytest
+
+from repro.core import CompileOptions, build_runner, compile_graph
+from repro.core.executor import random_inputs
+from repro.gnncv.cnn_zoo import CNN_ZOO
+from repro.gnncv.gnn_zoo import GNN_ZOO
+from repro.gnncv.graphs import GraphSpec
+from repro.gnncv.tasks import TASKS
+
+SMALL_TASKS = {
+    "b1": dict(input_hw=16, embed_ch=16, gnn_dim=32, gnn_blocks=2),
+    "b2": dict(input_hw=32, width_mult=0.125, n_labels=16, label_feat=32),
+    "b3-r50": dict(input_hw=32, width_mult=0.125, reduce_ch=64),
+    "b3-r101": dict(input_hw=32, width_mult=0.0625, reduce_ch=32),
+    "b4": dict(frames=16, channels=(16, 32), strides=(1, 2)),
+    "b5": dict(input_hw=16, feat=8),
+    "b6": dict(n_points=64, knn=5, dims=(8, 16), feat_out=32),
+}
+MINI_GRAPH = GraphSpec("mini", 128, 512, 32, 7)
+
+
+@pytest.mark.parametrize("task", sorted(SMALL_TASKS))
+def test_task_compiles_and_runs(task):
+    g = TASKS[task](**SMALL_TASKS[task])
+    plan = compile_graph(g, CompileOptions(target="fpga"))
+    outs = build_runner(plan)(**random_inputs(plan, seed=1))
+    for o in outs:
+        assert np.isfinite(np.asarray(o)).all()
+    assert plan.meta["fpga_latency_s"] > 0
+    # every op got a primitive or is a pure layout op
+    for op in plan.ops:
+        assert op.primitive is not None or op.kind in {
+            "identity", "transpose", "reshape", "concat"}
+
+
+@pytest.mark.parametrize("task", ["b3-r50", "b4", "b5"])
+def test_task_option_invariance(task):
+    g = TASKS[task](**SMALL_TASKS[task])
+    ins, ref = None, None
+    for fuse in (True, False):
+        for sp in (True, False):
+            plan = compile_graph(g, CompileOptions(
+                fuse=fuse, sparsity_aware=sp, target="fpga"))
+            if ins is None:
+                ins = random_inputs(plan, seed=3)
+            out = np.asarray(build_runner(plan)(**ins)[0])
+            if ref is None:
+                ref = out
+            scale = max(1.0, float(np.abs(ref).max()))
+            np.testing.assert_allclose(out / scale, ref / scale,
+                                       rtol=1e-4, atol=1e-5)
+
+
+def test_task_portions_match_model_type():
+    """CNN+GNN tasks must show both portions (paper Fig. 2); b6 is
+    GNN-only."""
+    g = TASKS["b4"](**SMALL_TASKS["b4"])
+    pc = compile_graph(g, CompileOptions(target="fpga")).meta[
+        "portion_cycles"]
+    assert pc.get("cnn", 0) > 0 and pc.get("gnn", 0) > 0
+    g = TASKS["b6"](**SMALL_TASKS["b6"])
+    pc = compile_graph(g, CompileOptions(target="fpga")).meta[
+        "portion_cycles"]
+    assert pc.get("cnn", 0) == 0 and pc.get("gnn", 0) > 0
+
+
+def test_b6_sparsity_ablation_is_noop():
+    """Paper §VII-C: b6's GNN has no exploitable weight sparsity -> 0%."""
+    g = TASKS["b6"](**SMALL_TASKS["b6"])
+    on = compile_graph(g, CompileOptions(sparsity_aware=True, target="fpga"))
+    off = compile_graph(g, CompileOptions(sparsity_aware=False,
+                                          target="fpga"))
+    assert on.meta["fpga_latency_s"] == off.meta["fpga_latency_s"]
+
+
+def test_b5_sparsity_ablation_helps():
+    g = TASKS["b5"](**SMALL_TASKS["b5"])
+    on = compile_graph(g, CompileOptions(sparsity_aware=True, target="fpga"))
+    off = compile_graph(g, CompileOptions(sparsity_aware=False,
+                                          target="fpga"))
+    assert on.meta["fpga_latency_s"] < off.meta["fpga_latency_s"]
+
+
+@pytest.mark.parametrize("model", sorted(CNN_ZOO))
+def test_cnn_zoo_runs(model):
+    g = CNN_ZOO[model](input_hw=32, width_mult=0.125, classes=10)
+    plan = compile_graph(g, CompileOptions(target="fpga"))
+    out = build_runner(plan)(**random_inputs(plan, seed=1))[0]
+    assert out.shape == (10,) and np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("model", sorted(GNN_ZOO))
+def test_gnn_zoo_runs(model):
+    g = GNN_ZOO[model](MINI_GRAPH)
+    plan = compile_graph(g, CompileOptions(target="fpga"))
+    out = build_runner(plan)(**random_inputs(plan, seed=1))[0]
+    assert out.shape == (MINI_GRAPH.num_nodes, MINI_GRAPH.num_classes)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_gat_attention_rows_normalized():
+    """The segment softmax must produce a stochastic attention vector."""
+    import jax.numpy as jnp
+    from repro.core.executor import _run_op
+    g = GNN_ZOO["g3_gat"](MINI_GRAPH)
+    plan = compile_graph(g, CompileOptions(target="fpga"))
+    ins = random_inputs(plan, seed=1)
+    env = {k: jnp.asarray(v) for k, v in ins.items()}
+    for op in plan.ops:
+        env[op.name] = _run_op(op, env, False)
+    alpha = np.asarray(env["alpha0"])
+    rows = np.asarray([o for o in plan.ops if o.name == "attnmp0"][0]
+                      .weights["coo_rows"])
+    sums = np.zeros(MINI_GRAPH.num_nodes)
+    np.add.at(sums, rows, alpha)
+    touched = np.unique(rows)
+    np.testing.assert_allclose(sums[touched], 1.0, rtol=1e-5)

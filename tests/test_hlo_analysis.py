@@ -1,0 +1,126 @@
+"""HLO analyzer: flop/byte/collective counters vs programs with known
+costs (incl. scan trip-count weighting — the thing cost_analysis misses)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    res = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+def test_flops_exact_on_scan_remat_nested():
+    out = run_sub("""
+    import jax, jax.numpy as jnp
+    from repro.launch import hlo_analysis as ha
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    W = jax.ShapeDtypeStruct((16, 256, 256), jnp.float32)
+    base = 16 * 2 * 128 * 256 * 256
+
+    def f(x, W):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, W)[0]
+    got = ha.program_costs(
+        jax.jit(f).lower(x, W).compile().as_text())["flops"]
+    assert abs(got / base - 1) < 1e-6, got
+
+    def g(x, W):
+        def step(c, w):
+            return jax.checkpoint(lambda c, w: jnp.tanh(c @ w))(c, w), None
+        return jax.lax.scan(step, x, W)[0].sum()
+    got = ha.program_costs(
+        jax.jit(jax.grad(g, argnums=1)).lower(x, W).compile()
+        .as_text())["flops"]
+    assert abs(got / (4 * base) - 1) < 1e-6, got
+
+    def h(x, W):
+        def outer(c, w):
+            inner = lambda c2, _: (jnp.tanh(c2 @ w), None)
+            return jax.lax.scan(inner, c, jnp.arange(4))[0], None
+        return jax.lax.scan(outer, x, W)[0]
+    got = ha.program_costs(
+        jax.jit(h).lower(x, W).compile().as_text())["flops"]
+    assert abs(got / (4 * base) - 1) < 1e-6, got
+    print("FLOPS-OK")
+    """)
+    assert "FLOPS-OK" in out
+
+
+def test_collectives_counted_with_trips():
+    out = run_sub("""
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch import hlo_analysis as ha
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh((8,), ("model",))
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    W = jax.ShapeDtypeStruct((16, 256, 256), jnp.float32)
+
+    def f(x, W):
+        # contraction over a model-sharded dim -> all-reduce per scan step
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, W)[0]
+
+    with mesh:
+        c = jax.jit(f, in_shardings=(
+            NamedSharding(mesh, P(None, "model")),
+            NamedSharding(mesh, P(None, "model", None)))).lower(
+                x, W).compile()
+    coll = ha.collective_bytes(c.as_text())
+    assert coll["total"] > 0
+    # 16 iterations x all-reduce of a (128,256) f32 = 16*2*131072 bytes min
+    assert coll.get("all-reduce", 0) >= 16 * 2 * 128 * 256 * 4 * 0.9, coll
+    print("COLL-OK", coll["total"])
+    """)
+    assert "COLL-OK" in out
+
+
+def test_bytes_counter_reasonable():
+    out = run_sub("""
+    import jax, jax.numpy as jnp
+    from repro.launch import hlo_analysis as ha
+
+    # one big copy: bytes >= 2x array size (read + write)
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    f = lambda x: (x * 2.0 + 1.0)
+    c = jax.jit(f).lower(x).compile()
+    got = ha.program_costs(c.as_text())["bytes"]
+    size = 1024 * 1024 * 4
+    assert 1.5 * size <= got <= 6 * size, got
+    print("BYTES-OK")
+    """, devices=1)
+    assert "BYTES-OK" in out
+
+
+def test_computation_splitter_handles_tuples():
+    from repro.launch.hlo_analysis import split_computations
+    hlo = """\
+HloModule m
+
+%cond.1 (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]{0}) parameter(0)
+  %g = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%g, %c), direction=LT
+}
+
+ENTRY %main.2 (a: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  ROOT %r = f32[4]{0} add(%a, %a)
+}
+"""
+    comps, entry = split_computations(hlo)
+    assert entry == "main.2"
+    assert "cond.1" in comps
+    from repro.launch.hlo_analysis import _trip_count
+    assert _trip_count(comps["cond.1"]) == 7

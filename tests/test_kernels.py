@@ -1,0 +1,139 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles.
+
+Sweeps shapes (aligned + ragged) and dtypes per the brief; tolerances account
+for fp32-accumulation ordering differences only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ddmm import ddmm
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.sddmm import sddmm
+from repro.kernels.shift_conv import shift_conv2d
+from repro.kernels.spdmm import dense_to_ell, spdmm
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 128), (256, 128, 384), (8, 128, 128),
+    (100, 70, 130), (33, 257, 129), (1, 1, 1),
+])
+def test_ddmm_matches_ref(m, k, n, dtype):
+    x, y = rand((m, k), dtype), rand((k, n), dtype)
+    out = ddmm(x, y, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref.ddmm_ref(x, y),
+                                                np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("act", [None, "relu", "gelu", "silu"])
+def test_ddmm_fused_epilogue(act):
+    m, k, n = 72, 96, 160
+    x, y = rand((m, k), jnp.float32), rand((k, n), jnp.float32)
+    bias, res = rand((n,), jnp.float32), rand((m, n), jnp.float32)
+    out = ddmm(x, y, bias=bias, residual=res, act=act, interpret=True)
+    want = ref.ddmm_ref(x, y, bias=bias, residual=res, act=act)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s1,s2,n,density", [
+    (64, 64, 128, 0.1), (100, 80, 64, 0.3), (256, 256, 128, 0.02),
+    (16, 300, 200, 0.5), (33, 57, 7, 0.15),
+])
+def test_spdmm_matches_ref_and_dense(s1, s2, n, density, dtype):
+    dense = RNG.standard_normal((s1, s2)) * (RNG.random((s1, s2)) < density)
+    idx, val = dense_to_ell(dense.astype(np.float32))
+    val = val.astype(dtype)
+    y = rand((s2, n), dtype)
+    out = spdmm(idx, val, y, interpret=True)
+    want = ref.spdmm_ref(idx, val, y)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+    # and against the true dense product
+    want2 = jnp.asarray(dense, dtype) @ y
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want2, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("m,k,n,density", [
+    (128, 64, 128, 0.2), (256, 128, 256, 0.05), (100, 50, 70, 0.4),
+])
+def test_sddmm_matches_ref(m, k, n, density):
+    x, y = rand((m, k), jnp.float32), rand((k, n), jnp.float32)
+    mask = jnp.asarray(RNG.random((m, n)) < density, jnp.float32)
+    out = sddmm(x, y, mask, interpret=True)
+    np.testing.assert_allclose(out, ref.sddmm_ref(x, y, mask),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sddmm_skips_dead_blocks_exactly():
+    """Blocks with no sampled element must be exactly zero (skipped)."""
+    m = n = 256
+    x, y = rand((m, 64), jnp.float32), rand((64, n), jnp.float32)
+    mask = jnp.zeros((m, n), jnp.float32).at[:128, :128].set(1.0)
+    out = sddmm(x, y, mask, bm=128, bn=128, interpret=True)
+    assert np.all(np.asarray(out[128:, :]) == 0)
+    assert np.all(np.asarray(out[:, 128:]) == 0)
+
+
+@pytest.mark.parametrize("cin,cout,hw,k,stride,padding", [
+    (8, 16, 16, 3, 1, "SAME"), (16, 8, 12, 3, 2, "SAME"),
+    (3, 32, 20, 5, 1, "SAME"), (4, 4, 9, 3, 1, "VALID"),
+    (8, 8, 16, 1, 1, "SAME"), (3, 12, 17, 7, 2, "SAME"),
+    (5, 9, 11, 4, 1, "SAME"),
+])
+def test_shift_conv_matches_lax(cin, cout, hw, k, stride, padding):
+    x = rand((cin, hw, hw), jnp.float32)
+    w = rand((k, k, cin, cout), jnp.float32)
+    out = shift_conv2d(x, w, stride=stride, padding=padding, interpret=True)
+    want = ref.conv2d_ref(x, w, stride=stride, padding=padding)
+    assert out.shape == want.shape, (out.shape, want.shape)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d,causal", [
+    (1, 4, 4, 128, 128, 64, True),
+    (2, 8, 2, 128, 128, 64, True),      # GQA group 4
+    (1, 2, 2, 100, 100, 32, True),      # ragged
+    (1, 4, 1, 64, 256, 64, True),       # continuation (Sq < Sk)
+    (1, 2, 2, 128, 128, 64, False),
+    (2, 2, 1, 77, 154, 48, False),
+])
+def test_flash_attention_matches_ref(b, hq, hkv, sq, sk, d, causal, dtype):
+    q = rand((b, hq, sq, d), dtype)
+    k = rand((b, hkv, sk, d), dtype)
+    v = rand((b, hkv, sk, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=64, bk=128,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 2e-5,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 2e-5)
+
+
+def test_flash_attention_decode_shape():
+    """Single-query decode against a long KV prefix."""
+    q = rand((2, 4, 1, 64), jnp.float32)
+    k = rand((2, 4, 300, 64), jnp.float32)
+    v = rand((2, 4, 300, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,64 @@
+"""Roofline analysis math + report plumbing (no compilation)."""
+import json
+
+from repro.launch import roofline
+
+
+def _rec(**over):
+    base = {
+        "arch": "llama3.2-1b", "shape": "train_4k", "kind": "train",
+        "mesh": "16x16", "tag": "", "status": "ok", "multi_pod": False,
+        "devices": 256,
+        "flops_per_device": 4.6e13,
+        "bytes_per_device": 2.8e12,
+        "collective_bytes_per_device": {"total": 1.1e11},
+        "params": 1.24e9, "active_params": 1.24e9,
+    }
+    base.update(over)
+    return base
+
+
+def test_terms_and_dominant():
+    r = roofline.analyze(_rec())
+    assert abs(r["compute_s"] - 4.6e13 / 197e12) < 1e-9
+    assert abs(r["memory_s"] - 2.8e12 / 819e9) < 1e-9
+    assert abs(r["collective_s"] - 1.1e11 / 50e9) < 1e-9
+    assert r["dominant"] == "memory"
+    assert 0 < r["roofline_fraction"] < 1
+
+
+def test_model_flops_train_vs_decode():
+    tr = roofline.analyze(_rec())
+    de = roofline.analyze(_rec(shape="decode_32k", kind="decode",
+                               flops_per_device=1e12))
+    # train: 6*N*D tokens=4096*256; decode: 2*N*128 tokens
+    assert abs(tr["model_flops_per_device"]
+               - 6 * 1.24e9 * 4096 * 256 / 256) < 1e3
+    assert abs(de["model_flops_per_device"]
+               - 2 * 1.24e9 * 128 / 256) < 1e3
+
+
+def test_moe_uses_active_params():
+    r = roofline.analyze(_rec(params=671e9, active_params=37e9))
+    assert abs(r["model_flops_per_device"]
+               - 6 * 37e9 * 4096 * 256 / 256) < 1e6
+
+
+def test_useful_ratio_flags_waste():
+    wasteful = roofline.analyze(_rec(flops_per_device=4.6e14))
+    tight = roofline.analyze(_rec(flops_per_device=3.2e13))
+    assert wasteful["useful_flops_ratio"] < tight["useful_flops_ratio"]
+    assert "useful" in wasteful["note"] or "bound" in wasteful["note"]
+
+
+def test_markdown_and_na_rows(tmp_path):
+    ok = roofline.analyze(_rec())
+    rows = [{"status": "ok", **ok},
+            {"arch": "qwen2-72b", "shape": "long_500k", "status": "n/a"}]
+    md = roofline.to_markdown(rows)
+    assert "n/a" in md and "llama3.2-1b" in md
+    # load() roundtrip through files
+    d = tmp_path / "a.json"
+    d.write_text(json.dumps(_rec()))
+    out = roofline.load(str(tmp_path))
+    assert len(out) == 1 and out[0]["dominant"] == "memory"

@@ -1,0 +1,147 @@
+"""SSM/recurrent blocks: chunk-parallel forms vs token-level oracles,
+decode-step consistency, and hypothesis property tests on the recurrence
+invariants (chunking is associative; state handoff is exact)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import configs
+from repro.models import ssm
+
+RNG = np.random.default_rng(0)
+
+
+def _ssd_inputs(b=2, S=32, H=4, P=8, G=2, N=4):
+    x = jnp.asarray(RNG.standard_normal((b, S, H, P)), jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.asarray(RNG.standard_normal((b, S, H)), jnp.float32))
+    A = -jnp.exp(jnp.asarray(RNG.standard_normal((H,)), jnp.float32))
+    B = jnp.asarray(RNG.standard_normal((b, S, G, N)), jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((b, S, G, N)), jnp.float32)
+    D = jnp.ones((H,), jnp.float32)
+    return x, dt, A, B, C, D
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32, 64])
+def test_ssd_chunked_matches_seq(chunk):
+    args = _ssd_inputs()
+    y1, s1 = ssm.ssd_seq(*args)
+    y2, s2 = ssm.ssd_chunked(*args, chunk=chunk)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_ragged_length_padding():
+    x, dt, A, B, C, D = _ssd_inputs(S=19)
+    y1, s1 = ssm.ssd_seq(x, dt, A, B, C, D)
+    y2, s2 = ssm.ssd_chunked(x, dt, A, B, C, D, chunk=8)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+
+
+@given(split=st.integers(1, 31))
+@settings(max_examples=8, deadline=None)
+def test_ssd_state_handoff_property(split):
+    """Running [0:split) then [split:S) with carried state == one pass."""
+    x, dt, A, B, C, D = _ssd_inputs(S=32)
+    y_full, s_full = ssm.ssd_seq(x, dt, A, B, C, D)
+    y1, s1 = ssm.ssd_chunked(x[:, :split], dt[:, :split], A, B[:, :split],
+                             C[:, :split], D, chunk=8)
+    y2, s2 = ssm.ssd_chunked(x[:, split:], dt[:, split:], A, B[:, split:],
+                             C[:, split:], D, chunk=8, state=s1)
+    np.testing.assert_allclose(
+        np.concatenate([y1, y2], 1), y_full, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s2, s_full, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_step_matches_seq():
+    x, dt, A, B, C, D = _ssd_inputs(S=8)
+    _, s_ref = ssm.ssd_seq(x, dt, A, B, C, D)
+    s = jnp.zeros_like(s_ref)
+    ys = []
+    for t in range(8):
+        y, s = ssm.ssd_step(x[:, t], dt[:, t], A, B[:, t], C[:, t], D, s)
+        ys.append(y)
+    y_ref, _ = ssm.ssd_seq(x, dt, A, B, C, D)
+    np.testing.assert_allclose(jnp.stack(ys, 1), y_ref, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(s, s_ref, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ mLSTM --
+def _mlstm_inputs(b=2, S=32, H=2, P=8):
+    q = jnp.asarray(RNG.standard_normal((b, S, H, P)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, S, H, P)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, S, H, P)), jnp.float32)
+    li = jnp.asarray(RNG.standard_normal((b, S, H)), jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        jnp.asarray(RNG.standard_normal((b, S, H)) + 2.0, jnp.float32))
+    return q, k, v, li, lf
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+def test_mlstm_chunked_matches_seq(chunk):
+    args = _mlstm_inputs()
+    h1, (C1, n1, m1) = ssm.mlstm_seq(*args)
+    h2, (C2, n2, m2) = ssm.mlstm_chunked(*args, chunk=chunk)
+    np.testing.assert_allclose(h1, h2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(C1, C2, rtol=1e-4, atol=1e-4)
+
+
+@given(split=st.sampled_from([4, 8, 12, 16, 20, 28]))
+@settings(max_examples=6, deadline=None)
+def test_mlstm_state_handoff_property(split):
+    q, k, v, li, lf = _mlstm_inputs(S=32)
+    h_full, st_full = ssm.mlstm_seq(q, k, v, li, lf)
+    h1, st1 = ssm.mlstm_chunked(q[:, :split], k[:, :split], v[:, :split],
+                                li[:, :split], lf[:, :split], chunk=8)
+    h2, st2 = ssm.mlstm_chunked(q[:, split:], k[:, split:], v[:, split:],
+                                li[:, split:], lf[:, split:], chunk=8,
+                                state=st1)
+    np.testing.assert_allclose(
+        np.concatenate([h1, h2], 1), h_full, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st2[0], st_full[0], rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_step_matches_seq():
+    q, k, v, li, lf = _mlstm_inputs(S=6)
+    h_ref, st_ref = ssm.mlstm_seq(q, k, v, li, lf)
+    st = None
+    hs = []
+    for t in range(6):
+        h, st = ssm.mlstm_step(q[:, t], k[:, t], v[:, t], li[:, t],
+                               lf[:, t], st)
+        hs.append(h)
+    np.testing.assert_allclose(jnp.stack(hs, 1), h_ref, rtol=1e-4,
+                               atol=1e-4)
+
+
+# ------------------------------------------------------------------ blocks --
+def test_mamba2_block_prefill_decode_consistency():
+    cfg = configs.get_smoke("zamba2-2.7b")
+    params = ssm.init_mamba2(jax.random.PRNGKey(1), cfg, jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((2, 12, cfg.d_model)), jnp.float32)
+    y_full, st_full = ssm.mamba2_forward(params, x, cfg)
+    # prefix then one token
+    y_pre, st = ssm.mamba2_forward(params, x[:, :11], cfg)
+    y_tok, st2 = ssm.mamba2_forward(params, x[:, 11:], cfg, state=st,
+                                    impl="seq")
+    np.testing.assert_allclose(y_tok, y_full[:, 11:], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st2["ssm"], st_full["ssm"], rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_slstm_block_state_handoff():
+    cfg = configs.get_smoke("xlstm-350m")
+    params = ssm.init_slstm(jax.random.PRNGKey(2), cfg, jnp.float32)
+    x = jnp.asarray(RNG.standard_normal((2, 10, cfg.d_model)), jnp.float32)
+    y_full, st_full = ssm.slstm_block(params, x, cfg)
+    y1, st1 = ssm.slstm_block(params, x[:, :6], cfg)
+    y2, st2 = ssm.slstm_block(params, x[:, 6:], cfg, state=st1)
+    np.testing.assert_allclose(
+        np.concatenate([y1, y2], 1), y_full, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st2["c"], st_full["c"], rtol=1e-4,
+                               atol=1e-4)
