@@ -19,6 +19,8 @@ SECTIONS = [
      "benchmarks.ablation_sparsity"),
     ("Beyond-paper — 40-cell LM roofline (from dry-run artifacts)",
      "benchmarks.lm_cells"),
+    ("Beyond-paper — micro-batched GNN-CV serving throughput + liveness "
+     "memory planning", "benchmarks.serve_gnncv"),
 ]
 
 

@@ -1,0 +1,101 @@
+"""Throughput of the micro-batching GNN-CV serving engine vs one-at-a-time
+execution over a mixed b1/b4/b6 request stream, plus the liveness-planner's
+peak-working-set reduction per task.
+
+    PYTHONPATH=src python -m benchmarks.serve_gnncv [--requests N]
+                                                    [--max-batch B]
+
+One-at-a-time = the seed serving story: every request dispatches its own
+jit'd per-sample runner.  Engine = requests queue per task and drain through
+power-of-two-bucketed batched runners from the plan/runner cache.  Both
+paths are warmed before timing so compile time is excluded (steady-state
+serving is the regime the paper's latency argument addresses).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import CompileOptions
+from repro.core.runtime.cache import cached_plan, cached_runner
+from repro.gnncv.tasks import SMALL_CONFIGS, build_task, request_inputs
+from repro.serve import GNNCVServeEngine
+
+from benchmarks.common import emit
+
+MIX = ("b1", "b4", "b6")
+
+
+def make_stream(plans, n):
+    return [(MIX[i % len(MIX)], request_inputs(plans[MIX[i % len(MIX)]],
+                                               seed=i))
+            for i in range(n)]
+
+
+def bench_one_at_a_time(graphs, options, stream):
+    runners = {t: cached_runner(graphs[t], options) for t in graphs}
+    for task, inputs in stream[:len(MIX)]:          # warm compiles
+        runners[task](**inputs)
+    t0 = time.perf_counter()
+    for task, inputs in stream:
+        # materialize each response, like a server answering the request
+        _ = [np.asarray(o) for o in runners[task](**inputs)]
+    return time.perf_counter() - t0
+
+
+def bench_engine(graphs, options, stream, max_batch):
+    eng = GNNCVServeEngine(graphs, options=options, max_batch=max_batch)
+    warm = GNNCVServeEngine(graphs, options=options, max_batch=max_batch)
+    bucket = 1
+    while bucket <= max_batch:                      # warm every bucket
+        for task in MIX:
+            for s in range(bucket):
+                warm.submit(task, **request_inputs(eng.plans[task], seed=s))
+        warm.run()
+        bucket *= 2
+    for task, inputs in stream:
+        eng.submit(task, **inputs)
+    t0 = time.perf_counter()
+    served = eng.run()
+    dt = time.perf_counter() - t0
+    assert served == len(stream)
+    return dt, eng.steps
+
+
+def run(requests: int = 96, max_batch: int = 8):
+    options = CompileOptions(target="fpga")
+    all_graphs = {t: build_task(t, small=True) for t in sorted(SMALL_CONFIGS)}
+    graphs = {t: all_graphs[t] for t in MIX}
+    plans = {t: cached_plan(g, options) for t, g in graphs.items()}
+    stream = make_stream(plans, requests)
+
+    loop_s = bench_one_at_a_time(graphs, options, stream)
+    eng_s, steps = bench_engine(graphs, options, stream, max_batch)
+    emit([["one_at_a_time", f"{loop_s * 1e3:.1f}",
+           f"{len(stream) / loop_s:.1f}", len(stream)],
+          ["serve_engine", f"{eng_s * 1e3:.1f}",
+           f"{len(stream) / eng_s:.1f}", steps]],
+         ["mode", "wall_ms", "req_per_s", "dispatches"])
+
+    rows = []
+    for task, g in all_graphs.items():
+        plan = cached_plan(g, options)
+        freed = plan.peak_live_bytes(free_dead=True)
+        kept = plan.peak_live_bytes(free_dead=False)
+        rows.append([task, freed, kept, f"{kept / freed:.2f}x"])
+    emit(rows, ["task", "peak_live_bytes_freed", "peak_live_bytes_kept",
+                "reduction"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--max-batch", type=int, default=8)
+    args = ap.parse_args()
+    run(requests=args.requests, max_batch=args.max_batch)
+
+
+if __name__ == "__main__":
+    main()

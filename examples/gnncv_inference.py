@@ -25,7 +25,8 @@ def main():
         "b5 SAR": lambda: tasks.b5_sar(input_hw=64),
         "b6 point-cloud": lambda: tasks.b6_pointcloud(n_points=256),
     }
-    print(f"{'task':15s} {'out':>8s} {'opt ms':>9s} {'no-opt ms':>10s}")
+    print(f"{'task':15s} {'out':>8s} {'opt ms':>9s} {'no-opt ms':>10s} "
+          f"{'live KB':>8s} {'kept KB':>8s}")
     for name, build in builders.items():
         g = build()
         plan = compile_graph(g, CompileOptions(target="fpga"))
@@ -35,9 +36,13 @@ def main():
         out = run(**random_inputs(plan))
         shape = np.asarray(out[0]).shape
         print(f"{name:15s} {str(shape):>8s} {latency_ms(plan):9.3f} "
-              f"{latency_ms(base):10.3f}")
-    print("\n(optimized = five-pass compile with DM fusion + "
-          "sparsity-aware mapping, per paper §V-C)")
+              f"{latency_ms(base):10.3f} "
+              f"{plan.peak_live_bytes() / 1024:8.0f} "
+              f"{plan.peak_live_bytes(free_dead=False) / 1024:8.0f}")
+    print("\n(optimized = six-pass compile with DM fusion, sparsity-aware "
+          "mapping and\n liveness memory planning, per paper §V-C; 'live' "
+          "vs 'kept' = peak activation\n working set with/without freeing "
+          "dead intermediates)")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,21 @@
-"""GCV-Turbo core: layer IR, five-pass compiler, plan executor, perf models.
+"""GCV-Turbo core: layer IR, six-pass compiler, plan runtime, perf models.
 
 The paper's primary contribution — a compiler + unified-primitive
 architecture for models that mix CNN and GNN layers — realized in JAX:
 
   ir.py          layer-graph IR + builder frontend (the input parser's role)
   passes/        Step 1 fusion, Step 2 uniform lowering, Step 3 tiling,
-                 Step 4 sparsity-aware primitive mapping, Step 5 scheduling
-  compiler.py    five-pass driver -> ExecutionPlan ("instruction sequence")
-  executor.py    jit'd plan interpreter (Pallas or pure-jnp data path)
+                 Step 4 sparsity-aware primitive mapping, Step 5 scheduling,
+                 Step 6 liveness (last-use annotations for memory planning)
+  compiler.py    pass driver -> ExecutionPlan ("instruction sequence")
+  runtime/       op-registry handlers (@register_op) + plan/runner cache
+  executor.py    thin driver: per-sample or vmap-batched plan execution,
+                 freeing dead env entries per the liveness annotations
   perf_model.py  FPGA cycle model (paper §IV/§VI) + TPU v5e roofline model
 """
 from repro.core.compiler import CompileOptions, compile_graph  # noqa: F401
 from repro.core.executor import build_runner                   # noqa: F401
 from repro.core.ir import Graph, GraphBuilder, Layer           # noqa: F401
 from repro.core.plan import ExecutionPlan, MatOp               # noqa: F401
+from repro.core.runtime.cache import (cached_plan,             # noqa: F401
+                                      cached_runner)

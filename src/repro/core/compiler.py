@@ -1,18 +1,21 @@
-"""The five-pass GCV-Turbo compiler driver (paper §V).
+"""The GCV-Turbo compiler driver (paper §V, plus Step-6 liveness).
 
-``compile_graph`` runs the passes in the paper's order and returns an
-``ExecutionPlan`` — the analogue of the instruction-sequence binary the APU
-executes. ``CompileOptions`` exposes exactly the knobs the paper ablates
-(§VII-C): layer fusion, DM fusion, sparsity-aware mapping, plus the cost
-target ('tpu' here / 'fpga' for reproducing the paper's numbers).
+``compile_graph`` runs the paper's five passes in order, then annotates
+liveness (Step 6 — last-use info the runtime uses to free dead values), and
+returns an ``ExecutionPlan`` — the analogue of the instruction-sequence
+binary the APU executes. ``CompileOptions`` exposes exactly the knobs the
+paper ablates (§VII-C): layer fusion, DM fusion, sparsity-aware mapping,
+plus the cost target ('tpu' here / 'fpga' for reproducing the paper's
+numbers).
 """
 from __future__ import annotations
 
 import dataclasses
 
 from repro.core.ir import Graph
-from repro.core.passes import (assign_tiles, fuse_layers, lower_to_matops,
-                               schedule_plan, select_primitives)
+from repro.core.passes import (annotate_liveness, assign_tiles, fuse_layers,
+                               lower_to_matops, schedule_plan,
+                               select_primitives)
 from repro.core.plan import ExecutionPlan
 
 
@@ -36,5 +39,6 @@ def compile_graph(g: Graph,
     plan = select_primitives(plan, target=options.target,   # Step 4
                              enable=options.sparsity_aware)
     plan = schedule_plan(plan)                          # Step 5
+    plan = annotate_liveness(plan)                      # Step 6
     plan.meta["options"] = dataclasses.asdict(options)
     return plan

@@ -1,6 +1,7 @@
-"""The five compilation passes (paper §V-B) as graph/plan transformations."""
+"""The compilation passes: the paper's five (§V-B) plus Step-6 liveness."""
 from repro.core.passes.fusion import fuse_layers          # noqa: F401
 from repro.core.passes.lower import lower_to_matops       # noqa: F401
 from repro.core.passes.tiling import assign_tiles         # noqa: F401
 from repro.core.passes.select import select_primitives    # noqa: F401
 from repro.core.passes.schedule import schedule_plan      # noqa: F401
+from repro.core.passes.liveness import annotate_liveness  # noqa: F401

@@ -42,6 +42,8 @@ class MatOp:
     cycles: float = 0.0              # FPGA cycles (one PE, pre-balancing)
     bytes_moved: float = 0.0
     flops: float = 0.0
+    # ---- Step 6: liveness ----
+    frees: tuple[str, ...] = ()      # env entries dead after this op runs
 
     def __post_init__(self):
         assert self.kind in MATOP_KINDS, self.kind
@@ -67,3 +69,24 @@ class ExecutionPlan:
         for op in self.ops:
             agg[op.portion] = agg.get(op.portion, 0.0) + op.cycles
         return agg
+
+    def peak_live_bytes(self, *, free_dead: bool = True,
+                        itemsize: int = 4) -> int:
+        """Peak environment working set (bytes) of one plan execution.
+
+        ``free_dead=True`` honours the Step-6 liveness annotations (the
+        runtime's behaviour); ``free_dead=False`` models the keep-everything
+        executor for comparison.  Per-sample; batched execution scales the
+        activations linearly."""
+        live: dict[str, int] = {}
+        for name, shape in self.meta.get("input_shapes", {}).items():
+            live[name] = int(np.prod(shape)) * itemsize
+        peak = sum(live.values())
+        for op in self.ops:
+            live[op.name] = int(np.prod(op.out_shape)) * itemsize \
+                if op.out_shape else itemsize
+            peak = max(peak, sum(live.values()))
+            if free_dead:
+                for name in op.frees:
+                    live.pop(name, None)
+        return peak

@@ -1,0 +1,26 @@
+"""The plan runtime: registry-dispatched op handlers (the APU's data path).
+
+Importing this package registers every handler module; ``validate_registry``
+then proves the runtime vocabulary and the lowering vocabulary
+(``plan.MATOP_KINDS``) agree, so a kind that lowers but cannot execute —
+or a handler for a kind nothing emits — fails at import time.
+
+    registry.py     @register_op decorator, OpHandler protocol, run_op
+    matmul.py       mm (all weight sides) + sddmm
+    conv.py         Fig. 7 shift-add convolution
+    elementwise.py  PSVM/PVVA family + the shared fused epilogue
+    pooling.py      pool2d / globalpool / ELL maxagg
+    shape.py        DM transposes, identity, reshape, concat
+    cache.py        plan/runner cache keyed on (graph, options, batch)
+"""
+from repro.core.plan import MATOP_KINDS
+from repro.core.runtime.registry import (OpHandler, get_handler,  # noqa
+                                         register_op, registered_kinds,
+                                         run_op, validate_registry)
+from repro.core.runtime import (conv, elementwise, matmul,  # noqa: F401
+                                pooling, shape)
+
+validate_registry(MATOP_KINDS)
+
+__all__ = ["OpHandler", "register_op", "get_handler", "registered_kinds",
+           "run_op", "validate_registry"]

@@ -1,0 +1,63 @@
+"""Plan/runner cache keyed on ``(graph, options, batch)``.
+
+Compilation (six passes) and jit tracing are both orders of magnitude more
+expensive than a single inference, so a serving process must never repeat
+them for a graph it has already seen.  Graphs are keyed by identity through
+a ``WeakKeyDictionary`` — entries die with their graph, so long-running
+servers cannot leak plans for models they dropped.
+"""
+from __future__ import annotations
+
+import weakref
+
+from repro.core.compiler import CompileOptions, compile_graph
+from repro.core.ir import Graph
+from repro.core.plan import ExecutionPlan
+
+_PLANS: "weakref.WeakKeyDictionary[Graph, dict]" = weakref.WeakKeyDictionary()
+_RUNNERS: "weakref.WeakKeyDictionary[Graph, dict]" = \
+    weakref.WeakKeyDictionary()
+
+
+def cached_plan(graph: Graph,
+                options: CompileOptions = CompileOptions()) -> ExecutionPlan:
+    """Compile ``graph`` once per distinct ``options``."""
+    per_graph = _PLANS.setdefault(graph, {})
+    if options not in per_graph:
+        per_graph[options] = compile_graph(graph, options)
+    return per_graph[options]
+
+
+def cached_runner(graph: Graph,
+                  options: CompileOptions = CompileOptions(), *,
+                  batch: int | None = None, use_pallas: bool = False,
+                  jit: bool | None = None, free_dead: bool = True):
+    """Compiled runner for ``graph``, one per (options, batch, ...).
+
+    ``jit`` defaults to None so ``build_runner`` resolves it batch-aware
+    (whole-program jit per-sample, per-op dispatch batched — preserving the
+    bit-for-bit-across-batch-sizes contract); the serving engine passes
+    ``jit=True`` explicitly for throughput.  The jit cache inside a
+    returned runner is what amortizes tracing, so the serving engine
+    quantizes ``batch`` to a few buckets and this cache holds one runner
+    per bucket.
+    """
+    from repro.core.executor import build_runner   # late: avoid import cycle
+    key = (options, batch, use_pallas, jit, free_dead)
+    per_graph = _RUNNERS.setdefault(graph, {})
+    if key not in per_graph:
+        per_graph[key] = build_runner(
+            cached_plan(graph, options), use_pallas=use_pallas, jit=jit,
+            batch=batch, free_dead=free_dead)
+    return per_graph[key]
+
+
+def cache_stats() -> dict[str, int]:
+    return {"graphs": len(_PLANS),
+            "plans": sum(len(v) for v in _PLANS.values()),
+            "runners": sum(len(v) for v in _RUNNERS.values())}
+
+
+def clear_caches() -> None:
+    _PLANS.clear()
+    _RUNNERS.clear()

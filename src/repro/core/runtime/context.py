@@ -1,0 +1,29 @@
+"""Execution-context flags the runtime driver sets for handlers.
+
+``batched_execution`` is active while ``build_runner(batch=N)`` traces the
+vmapped per-sample program.  Handlers may choose batch-size-stable
+realizations under it (e.g. conv routes through the shift/im2col GEMM
+instead of XLA's native conv, whose algorithm choice — and therefore float
+accumulation order — varies with batch size).  The flag is read at trace
+time, so it is baked into the compiled program.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_BATCHED: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "batched_execution", default=False)
+
+
+@contextlib.contextmanager
+def batched_execution(on: bool = True):
+    token = _BATCHED.set(on)
+    try:
+        yield
+    finally:
+        _BATCHED.reset(token)
+
+
+def in_batched_execution() -> bool:
+    return _BATCHED.get()

@@ -1,0 +1,85 @@
+"""Convolution handler — the Fig. 7 shift-add conv as one fused MatOp.
+
+Two realizations:
+
+  * unbatched / Pallas — the kernel seam (``kernels/ops.conv2d``): k1·k2
+    DDMMs + PVVA merges on the Pallas path, XLA's native conv on the jnp
+    path;
+  * batched jnp — an explicit shift/im2col GEMM (below).  XLA picks a
+    different conv algorithm (different float accumulation order) depending
+    on batch size, so a vmapped program using the native conv is not
+    bit-stable across batch sizes.  The shift-GEMM form reduces conv to the
+    one primitive that *is* batch-stable — a dense dot — which is also the
+    paper's own realization of convolution on the unified accelerator.
+
+Bias, fused activation and fused residual ride the shared epilogue either
+way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import MatOp
+from repro.core.runtime.context import in_batched_execution
+from repro.core.runtime.elementwise import apply_epilogue
+from repro.core.runtime.registry import register_op
+from repro.kernels import ops as kops
+
+
+def _shift_gemm_conv2d(x, w, *, stride, padding):
+    """Batch-size-stable conv: shifted slices + one dense GEMM.
+
+    x: (c_in, H, W), w: (k1, k2, c_in, c_out) -> (c_out, H', W').
+    SAME-padding arithmetic matches XLA's (TF convention: pad_before =
+    total // 2), so output shapes agree with the native realization.
+    """
+    k1, k2, cin, cout = w.shape
+    c, h, wd = x.shape
+    sh, sw = stride
+    if padding == "SAME":
+        ho, wo = -(-h // sh), -(-wd // sw)
+        pad_h = max((ho - 1) * sh + k1 - h, 0)
+        pad_w = max((wo - 1) * sw + k2 - wd, 0)
+        pads = ((pad_h // 2, pad_h - pad_h // 2),
+                (pad_w // 2, pad_w - pad_w // 2))
+    else:
+        ho = (h - k1) // sh + 1
+        wo = (wd - k2) // sw + 1
+        pads = ((0, 0), (0, 0))
+    xp = jnp.pad(x, ((0, 0),) + pads)
+    cols = []
+    for dy in range(k1):
+        for dx in range(k2):
+            cols.append(jax.lax.slice(
+                xp, (0, dy, dx),
+                (c, dy + (ho - 1) * sh + 1, dx + (wo - 1) * sw + 1),
+                (1, sh, sw)))                        # (c, ho, wo)
+    patches = jnp.stack(cols, 0).reshape(k1 * k2 * cin, ho * wo)
+    wm = w.reshape(k1 * k2 * cin, cout)              # same (dy, dx, c) order
+    if ho * wo == 1:
+        # Degenerate spatial output: under vmap the GEMM's M collapses to
+        # the batch size, and XLA's M=1 (GEMV) path accumulates K in a
+        # different order than M>1 — multiply+reduce keeps the K order
+        # independent of batch size.
+        return (patches * wm).sum(0).reshape(cout, ho, wo)
+    # Batched operand on the GEMM's left: under vmap this keeps the batch
+    # axis in the output rows, where XLA's row partitioning leaves each
+    # row's K-accumulation order independent of the batch size.
+    return (patches.T @ wm).T.reshape(cout, ho, wo)
+
+
+@register_op("conv")
+def run_conv(op: MatOp, env, use_pallas: bool):
+    x = env[op.inputs[0]]
+    if in_batched_execution() and not use_pallas:
+        fn = lambda xi: _shift_gemm_conv2d(  # noqa: E731
+            xi, jnp.asarray(op.weights["w"]), stride=op.attrs["stride"],
+            padding=op.attrs["padding"])
+        out = fn(x) if x.ndim == 3 else jax.vmap(fn)(x)
+    else:
+        out = kops.conv2d(x, jnp.asarray(op.weights["w"]),
+                          stride=op.attrs["stride"],
+                          padding=op.attrs["padding"],
+                          use_pallas=use_pallas)
+    return apply_epilogue(out, op, env)

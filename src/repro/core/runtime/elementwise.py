@@ -1,0 +1,83 @@
+"""Elementwise handlers (the PSVM/PVVA family) + the shared fused epilogue.
+
+Covers activations, residual add, dense/masked/segment softmax and the two
+norm flavours.  ``apply_epilogue`` is the one place bias + fused activation +
+fused residual semantics live; the matmul and conv handlers call it so the
+fusion pass's annotations mean the same thing for every producing op.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import MatOp
+from repro.core.runtime.registry import register_op
+
+ACTIVATIONS = {"relu": jax.nn.relu, "gelu": jax.nn.gelu, "silu": jax.nn.silu,
+               "tanh": jnp.tanh, "sigmoid": jax.nn.sigmoid,
+               "leaky_relu": lambda x: jax.nn.leaky_relu(x, 0.2)}
+
+
+def apply_epilogue(out, op: MatOp, env):
+    """Fused bias / activation / residual tail shared by mm + conv."""
+    b = op.weights.get("b")
+    if b is not None:
+        b = jnp.asarray(b)
+        if out.ndim >= 3:                      # conv OFM (..., C, H, W)
+            out = out + b[:, None, None]
+        else:
+            out = out + b
+    act = op.attrs.get("fused_act")
+    post = op.attrs.get("act_pos") == "post_res"
+    if act and not post:
+        out = ACTIVATIONS[act](out)
+    res = op.attrs.get("fused_residual")
+    if res:
+        out = out + env[res]
+    if act and post:
+        out = ACTIVATIONS[act](out)
+    return out
+
+
+@register_op("ew")
+def run_ew(op: MatOp, env, use_pallas: bool):
+    fn = op.attrs["fn"]
+    x = env[op.inputs[0]]
+    if fn == "add":
+        return x + env[op.inputs[1]]
+    if fn == "softmax":
+        if op.attrs.get("masked"):
+            mask = jnp.asarray(op.weights["mask"]) != 0
+            x = jnp.where(mask, x, -jnp.inf)
+            out = jax.nn.softmax(x, axis=op.attrs.get("axis", -1))
+            return jnp.where(mask, out, 0.0)
+        return jax.nn.softmax(x, axis=op.attrs.get("axis", -1))
+    if fn == "segment_softmax":
+        seg = jnp.asarray(op.weights["segments"])
+        n = op.attrs["num_segments"]
+        m = jax.ops.segment_max(x, seg, n)
+        e = jnp.exp(x - m[seg])
+        s = jax.ops.segment_sum(e, seg, n)
+        return e / jnp.where(s[seg] == 0, 1.0, s[seg])
+    if fn == "norm_batch":
+        eps = op.attrs.get("eps", 1e-5)
+        shape = (-1, 1, 1) if x.ndim == 3 else (1, -1)
+
+        def bc(k, d):
+            v = op.weights.get(k)
+            return jnp.asarray(v).reshape(shape) if v is not None else d
+
+        mean, var = bc("mean", 0.0), bc("var", 1.0)
+        scale, bias = bc("scale", 1.0), bc("bias", 0.0)
+        return (x - mean) * scale * jax.lax.rsqrt(var + eps) + bias
+    if fn == "norm_layer":
+        eps = op.attrs.get("eps", 1e-5)
+        mu = x.mean(-1, keepdims=True)
+        var = x.var(-1, keepdims=True)
+        out = (x - mu) * jax.lax.rsqrt(var + eps)
+        if "scale" in op.weights:
+            out = out * jnp.asarray(op.weights["scale"])
+        if "bias" in op.weights:
+            out = out + jnp.asarray(op.weights["bias"])
+        return out
+    return ACTIVATIONS[fn](x)

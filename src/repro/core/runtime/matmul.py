@@ -1,0 +1,118 @@
+"""Matmul-family handlers: dense/sparse ``mm`` and sampled ``sddmm``.
+
+``mm`` sub-dispatches on ``weight_side`` — the lowering pass's encoding of
+where the compile-time operand sits (right weight, left adjacency, COO
+scatter, runtime x runtime, and the ST-GCN (C,T,V) x Aᵀ layout).  SpDMM
+primitives route through the ELL kernels; DDMM through the dense matmul
+kernel (or plain ``@`` on the jnp fast path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import MatOp
+from repro.core.runtime.context import in_batched_execution
+from repro.core.runtime.elementwise import apply_epilogue
+from repro.core.runtime.registry import register_op
+from repro.kernels import ops as kops
+
+
+def _stable_matmul(x2, y2):
+    """Batch-size-stable dense matmul for batched (vmapped) execution.
+
+    Degenerate M=1 / N=1 products hit XLA's GEMV path, whose K-accumulation
+    order depends on how vmap collapsed the batch axis — multiply+reduce
+    keeps it batch-independent.  Regular shapes go through the plain dot.
+    """
+    if in_batched_execution():
+        if y2.shape[-1] == 1:
+            return (x2 * y2[:, 0]).sum(-1, keepdims=True)
+        if x2.shape[0] == 1:
+            return (x2[0][:, None] * y2).sum(0)[None]
+    return x2 @ y2
+
+
+def _coo_aggregate(op: MatOp, env, x):
+    """COO scatter message passing: rho({e_uv * h_u}) over static edges."""
+    rows = jnp.asarray(op.weights["coo_rows"])
+    cols = jnp.asarray(op.weights["coo_cols"])
+    vals = (env[op.inputs[1]] if op.attrs.get("runtime_edge")
+            else jnp.asarray(op.weights["coo_vals"]))
+    n = op.attrs["n"]
+    msg = vals[:, None] * x[cols]
+    if op.attrs.get("reduce", "sum") == "max":
+        agg = jax.ops.segment_max(msg, rows, n)
+        # Empty neighborhoods (segment_max's -inf identity) keep the node's
+        # own feature — the same self-fallback as the ELL maxagg path.  NaN
+        # messages propagate, also matching ELL.
+        return jnp.where(jnp.isneginf(agg), x, agg)
+    return jax.ops.segment_sum(msg, rows, n)
+
+
+@register_op("mm")
+def run_mm(op: MatOp, env, use_pallas: bool):
+    side = op.attrs["weight_side"]
+    x = env[op.inputs[0]]
+    if side == "right":
+        w = jnp.asarray(op.weights["w"])
+        x2 = x.reshape(-1, x.shape[-1])
+        if op.primitive == "SpDMM":
+            # w sparse: x @ w = (wᵀ @ x2ᵀ)ᵀ ; ELL stores wᵀ already
+            idx, val = (jnp.asarray(a) for a in op.ell)
+            out = kops.sparse_matmul(idx, val, x2.T,
+                                     use_pallas=use_pallas).T
+        else:
+            out = (kops.matmul(x2, w, use_pallas=use_pallas)
+                   if use_pallas else _stable_matmul(x2, w))
+        out = out.reshape(op.out_shape if op.out_shape else (-1,))
+    elif side == "left":
+        if op.primitive == "SpDMM":
+            idx, val = (jnp.asarray(a) for a in op.ell)
+            out = kops.sparse_matmul(idx, val, x, use_pallas=use_pallas)
+        else:
+            adj = jnp.asarray(op.weights["adj"])
+            out = (kops.matmul(adj, x, use_pallas=use_pallas)
+                   if use_pallas else _stable_matmul(adj, x))
+    elif side == "left_coo":
+        out = _coo_aggregate(op, env, x)
+    elif side == "left_runtime":
+        adj = env[op.inputs[1]]
+        out = (kops.matmul(adj, x, use_pallas=use_pallas)
+               if use_pallas else _stable_matmul(adj, x))
+    elif side == "both_runtime":
+        y = env[op.inputs[1]]
+        y2 = y.reshape(y.shape[0], -1)
+        x2 = x.reshape(-1, x.shape[-1])
+        out = (kops.matmul(x2, y2, use_pallas=use_pallas)
+               if use_pallas else _stable_matmul(x2, y2))
+        out = out.reshape(op.out_shape)
+    elif side == "right_t":                    # (C,T,V) x Aᵀ
+        c, t, v = x.shape
+        x2 = x.reshape(c * t, v)
+        if op.primitive == "SpDMM":            # ELL holds Aᵀ? stored A side
+            idx, val = (jnp.asarray(a) for a in op.ell)
+            out = kops.sparse_matmul(idx, val, x2.T,
+                                     use_pallas=use_pallas).T
+        else:
+            adj = jnp.asarray(op.weights["adj"])
+            out = (kops.matmul(x2, adj.T, use_pallas=use_pallas)
+                   if use_pallas else _stable_matmul(x2, adj.T))
+        out = out.reshape(c, t, v)
+    else:
+        raise ValueError(side)
+    return apply_epilogue(out, op, env)
+
+
+@register_op("sddmm")
+def run_sddmm(op: MatOp, env, use_pallas: bool):
+    x = env[op.inputs[0]]
+    if op.attrs.get("exec") == "coo":          # per-edge inner products
+        rows = jnp.asarray(op.weights["coo_rows"])
+        cols = jnp.asarray(op.weights["coo_cols"])
+        return (x[rows] * x[cols]).sum(-1)
+    if "mask" in op.weights:
+        mask = jnp.asarray(op.weights["mask"])
+        return kops.sampled_matmul(x, x.T, mask, use_pallas=use_pallas)
+    return kops.matmul(x, x.T, use_pallas=use_pallas) \
+        if use_pallas else x @ x.T

@@ -1,0 +1,45 @@
+"""Pooling-family handlers: windowed pool2d, global pooling, and the ELL
+max-aggregation used for dense-adjacency ``reduce='max'`` message passing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import MatOp
+from repro.core.runtime.registry import register_op
+
+
+@register_op("pool2d")
+def run_pool2d(op: MatOp, env, use_pallas: bool):
+    x = env[op.inputs[0]]
+    wdw, s = op.attrs["window"], op.attrs["stride"]
+    ones = (1,) * (x.ndim - 2)
+    win, strides = ones + (wdw, wdw), ones + (s, s)
+    if op.attrs["pool"] == "max":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, win, strides, "SAME")
+    out = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, win, strides, "SAME")
+    return out / (wdw * wdw)
+
+
+@register_op("globalpool")
+def run_globalpool(op: MatOp, env, use_pallas: bool):
+    x = env[op.inputs[0]]
+    # Rank recorded at lowering time so batched (vmapped) execution, which
+    # hides the batch axis from handlers, reduces the same axes.
+    rank = op.attrs.get("in_rank", x.ndim)
+    axes = {4: (2, 3), 3: (1, 2), 2: (0,)}[rank]
+    return x.max(axes) if op.attrs["pool"] == "max" else x.mean(axes)
+
+
+@register_op("maxagg")
+def run_maxagg(op: MatOp, env, use_pallas: bool):
+    x = env[op.inputs[0]]
+    idx, val = (jnp.asarray(a) for a in op.ell)
+    gathered = x[idx]                                 # (N, L, F)
+    valid = (val != 0)[..., None]
+    neg = jnp.full_like(gathered, -jnp.inf)
+    agg = jnp.where(valid, gathered, neg).max(axis=1)
+    return jnp.where(jnp.isneginf(agg), x, agg)

@@ -1,0 +1,71 @@
+"""Op registry — the single dispatch surface of the plan runtime.
+
+The seed executor interpreted plans through a 200-line ``if/elif`` chain,
+so adding a primitive meant editing the executor, the lowering pass and the
+kernel seam in lock-step.  The registry inverts that: each op kind lives in
+one handler module under ``repro/core/runtime/`` and announces itself with
+
+    @register_op("mm")
+    def run_mm(op, env, use_pallas): ...
+
+Handlers implement the ``OpHandler`` protocol; ``run_op`` is the only entry
+point the executor (and tests poking at single ops) need.  The registry is
+also the ground truth the lowering pass is validated against: every kind in
+``plan.MATOP_KINDS`` must have a handler (see ``validate_registry``), so an
+op that lowers but cannot execute is caught at import time, not mid-run.
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping, Protocol
+
+from repro.core.plan import MatOp
+
+
+class OpHandler(Protocol):
+    """A per-kind executor: consumes ``env`` entries named by ``op.inputs``
+    (plus any env names in ``op.attrs`` such as ``fused_residual``) and
+    returns the op's output array."""
+
+    def __call__(self, op: MatOp, env: Mapping, use_pallas: bool): ...
+
+
+_HANDLERS: dict[str, OpHandler] = {}
+
+
+def register_op(*kinds: str) -> Callable[[OpHandler], OpHandler]:
+    """Class-/function-decorator registering a handler for ``kinds``."""
+
+    def deco(fn: OpHandler) -> OpHandler:
+        for kind in kinds:
+            assert kind not in _HANDLERS, \
+                f"duplicate handler for op kind {kind!r}"
+            _HANDLERS[kind] = fn
+        return fn
+
+    return deco
+
+
+def get_handler(kind: str) -> OpHandler:
+    try:
+        return _HANDLERS[kind]
+    except KeyError:
+        raise NotImplementedError(
+            f"no registered handler for op kind {kind!r}; "
+            f"known: {sorted(_HANDLERS)}") from None
+
+
+def registered_kinds() -> frozenset[str]:
+    return frozenset(_HANDLERS)
+
+
+def run_op(op: MatOp, env: Mapping, use_pallas: bool = False):
+    """Execute one MatOp against ``env`` — the runtime's only dispatch."""
+    return get_handler(op.kind)(op, env, use_pallas)
+
+
+def validate_registry(expected_kinds: frozenset[str]) -> None:
+    """Assert the registry and the lowering vocabulary agree exactly."""
+    missing = expected_kinds - registered_kinds()
+    extra = registered_kinds() - expected_kinds
+    assert not missing, f"op kinds without handlers: {sorted(missing)}"
+    assert not extra, f"handlers for unknown op kinds: {sorted(extra)}"

@@ -1,0 +1,37 @@
+"""Layout handlers: DM transposes, identity (fused DM), reshape, concat.
+
+DM layers that survived fusion lower to ``transpose``/``identity`` ops whose
+only job is the paper's layout shuffles between CNN (C, H, W) and GNN (N, F)
+worlds; ``reshape``/``concat`` are the residual "Other Layers".
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.plan import MatOp
+from repro.core.runtime.registry import register_op
+
+
+@register_op("transpose", "identity")
+def run_dm(op: MatOp, env, use_pallas: bool):
+    x = env[op.inputs[0]]
+    mode = op.attrs["mode"]
+    if mode == "channel_to_node":
+        return x.reshape(x.shape[0], -1)
+    if mode == "patch_to_node":
+        return x.reshape(x.shape[0], -1).T
+    if mode == "node_to_channel":
+        f, h, w = op.out_shape
+        return x.T.reshape(f, h, w)
+    raise ValueError(mode)
+
+
+@register_op("reshape")
+def run_reshape(op: MatOp, env, use_pallas: bool):
+    return env[op.inputs[0]].reshape(op.attrs["shape"])
+
+
+@register_op("concat")
+def run_concat(op: MatOp, env, use_pallas: bool):
+    return jnp.concatenate([env[i] for i in op.inputs],
+                           axis=op.attrs["axis"])

@@ -1,0 +1,35 @@
+"""jax version compat for distributed primitives.
+
+jax promoted ``shard_map`` out of ``jax.experimental`` and renamed its
+``check_rep`` knob to ``check_vma`` (~0.6); support the 0.4-0.6 range
+declared by requirements.txt, like the kernels' ``CompilerParams`` shim.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+
+try:
+    shard_map = jax.shard_map                        # jax >= 0.6
+except AttributeError:
+    from jax.experimental.shard_map import shard_map  # 0.4-0.5
+
+if "check_vma" not in inspect.signature(shard_map).parameters:
+    _raw_shard_map = shard_map
+
+    @functools.wraps(_raw_shard_map)
+    def shard_map(*args, **kwargs):                   # noqa: F811
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _raw_shard_map(*args, **kwargs)
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a mapped mesh axis (``jax.lax.axis_size`` is ~0.6)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)
+    # late 0.4.x returns the int size; earlier 0.4.x the AxisEnvFrame
+    return frame if isinstance(frame, int) else frame.size

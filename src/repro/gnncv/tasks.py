@@ -230,3 +230,32 @@ TASKS = {
     "b5": b5_sar,
     "b6": b6_pointcloud,
 }
+
+# Reduced configs shared by tests, benchmarks and serving demos.  Every
+# input keeps a *per-sample* shape (no baked-in batch axis): the batch is a
+# runtime concern — ``build_runner(plan, batch=N)`` / the serving engine
+# prepend the batch axis, so the same graph serves any batch size.
+SMALL_CONFIGS = {
+    "b1": dict(input_hw=16, embed_ch=16, gnn_dim=32, gnn_blocks=2),
+    "b2": dict(input_hw=32, width_mult=0.125, n_labels=16, label_feat=32),
+    "b3-r50": dict(input_hw=32, width_mult=0.125, reduce_ch=64),
+    "b3-r101": dict(input_hw=32, width_mult=0.0625, reduce_ch=32),
+    "b4": dict(frames=16, channels=(16, 32), strides=(1, 2)),
+    "b5": dict(input_hw=16, feat=8),
+    "b6": dict(n_points=64, knn=5, dims=(8, 16), feat_out=32),
+}
+
+
+def build_task(task: str, *, small: bool = False, **overrides):
+    """Build one of b1-b6, optionally at the reduced test/serving scale."""
+    kwargs = dict(SMALL_CONFIGS[task]) if small else {}
+    kwargs.update(overrides)
+    return TASKS[task](**kwargs)
+
+
+def request_inputs(plan, seed: int = 0) -> dict:
+    """One serving request's worth of random per-sample inputs for ``plan``
+    (shapes from the plan's recorded input metadata — ready to ``submit``
+    to ``GNNCVServeEngine`` or to stack into a batched runner call)."""
+    from repro.core.executor import random_inputs
+    return random_inputs(plan, seed=seed)

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._util import default_interpret, pad_to, unpad
+from repro.kernels._util import CompilerParams, default_interpret, pad_to, unpad
 
 
 def _shift_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int,
@@ -78,7 +78,7 @@ def _shift_conv_valid(x: jax.Array, w: jax.Array, *, bm: int, bk: int,
         out_specs=pl.BlockSpec((bm, H, W), lambda i, k: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((wp.shape[3], H, W), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, H, W), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xp, wp)

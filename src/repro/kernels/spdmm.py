@@ -32,7 +32,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._util import default_interpret, pad_to, unpad
+from repro.kernels._util import CompilerParams, default_interpret, pad_to, unpad
 
 
 def _spdmm_kernel(idx_ref, val_ref, y_ref, o_ref, acc_ref, *, nl: int):
@@ -85,7 +85,7 @@ def spdmm(idx: jax.Array, val: jax.Array, y: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((idxp.shape[0], yp.shape[1]),
                                        out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(idxp, valp, yp)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.compat import axis_size, shard_map
 from repro.models.layers import init_linear, init_mlp, mlp_apply
 
 
@@ -108,7 +109,7 @@ def _moe_a2a_local(params, x, cfg, axis: str, dp_axes=("data",)):
     """Runs per-device under shard_map. x: (B_loc, S_loc, d)."""
     mo = cfg.moe
     d = cfg.d_model
-    M = jax.lax.axis_size(axis)
+    M = axis_size(axis)
     e_loc = mo.n_experts // M
     t = x.reshape(-1, d)
     T = t.shape[0]
@@ -175,7 +176,7 @@ def moe_a2a(params, x, cfg, *, mesh, dp_axes=("data",), model_axis="model"):
     if mo.n_shared:
         espec["shared"] = jax.tree.map(lambda _: P(), params["shared"])
     fn = partial(_moe_a2a_local, cfg=cfg, axis=model_axis, dp_axes=dp_axes)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         lambda p, xx: fn(p, xx),
         mesh=mesh,
         in_specs=(espec, P(dp_axes, model_axis, None)),
@@ -196,7 +197,7 @@ def _moe_gathered_local(params, x, cfg, axis: str, dp_axes=("data",)):
     ``axis``; expert weights sharded on dim 0."""
     mo = cfg.moe
     d = cfg.d_model
-    M = jax.lax.axis_size(axis)
+    M = axis_size(axis)
     ridx = jax.lax.axis_index(axis)
     e_loc = mo.n_experts // M
     t = x.reshape(-1, d)
@@ -247,7 +248,7 @@ def moe_gathered(params, x, cfg, *, mesh, dp_axes=("data",),
         espec["shared"] = jax.tree.map(lambda _: P(), params["shared"])
     fn = partial(_moe_gathered_local, cfg=cfg, axis=model_axis,
                  dp_axes=dp_axes)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         lambda p, xx: fn(p, xx),
         mesh=mesh,
         in_specs=(espec, P(dp_axes, None, None)),
@@ -272,9 +273,9 @@ def _moe_gathered2d_local(params, x, cfg, model_axis: str, fsdp_axis):
     """
     mo = cfg.moe
     d = cfg.d_model
-    M = jax.lax.axis_size(model_axis)
+    M = axis_size(model_axis)
     ridx = jax.lax.axis_index(model_axis)
-    D = jax.lax.axis_size(fsdp_axis) if isinstance(fsdp_axis, str) else 1
+    D = axis_size(fsdp_axis) if isinstance(fsdp_axis, str) else 1
     e_loc = mo.n_experts // M
     t = x.reshape(-1, d)
     T = t.shape[0]
@@ -336,7 +337,7 @@ def moe_gathered2d(params, x, cfg, *, mesh, dp_axes=("data",),
         espec["shared"] = jax.tree.map(lambda _: P(), params["shared"])
     fn = partial(_moe_gathered2d_local, cfg=cfg, model_axis=model_axis,
                  fsdp_axis=fsdp)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         lambda p, xx: fn(p, xx),
         mesh=mesh,
         in_specs=(espec, P(None, None, None)),

@@ -1,3 +1,4 @@
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.gnncv import GNNCVServeEngine, TaskRequest
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "GNNCVServeEngine", "TaskRequest"]

@@ -1,0 +1,137 @@
+"""Micro-batching request engine for the GNN-CV task family (b1-b6).
+
+The LM ``ServeEngine`` batches homogeneous decode steps over slots; GNN-CV
+inference is the opposite shape of problem — each request is one
+whole-program execution of a *heterogeneous* task (b1-b6), so the batching
+axis is requests-per-compiled-plan, not tokens-per-slot:
+
+  * requests queue per task; each engine step serves the task whose front
+    request has waited longest, draining everything queued behind it
+    through that task's batched runner (``build_runner(plan, batch=N)``);
+  * batch sizes are quantized to power-of-two buckets (short batches are
+    padded by repeating the tail request), so the plan/runner cache
+    (``core.runtime.cache``) holds at most log2(max_batch)+1 compiled
+    runners per task — the paper's fixed-latency argument (§VII-D2)
+    carried to serving: after warmup, no step ever recompiles;
+  * the Step-6 liveness annotations bound the per-sample activation
+    working set; ``plan.peak_live_bytes() x batch`` is the planner's
+    sizing model for a server (under jit, XLA's own buffer reuse — which
+    the annotations mirror — is what realizes it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+
+import numpy as np
+
+from repro.core.compiler import CompileOptions
+from repro.core.executor import stack_inputs
+from repro.core.ir import Graph
+from repro.core.runtime.cache import cached_plan, cached_runner
+
+
+@dataclasses.dataclass
+class TaskRequest:
+    rid: int
+    task: str
+    inputs: dict                       # per-sample input arrays, unstacked
+    result: tuple | None = None        # tuple of np outputs once done
+    done: bool = False
+
+
+class GNNCVServeEngine:
+    """Queue heterogeneous task requests, drain them in per-plan batches."""
+
+    def __init__(self, graphs: dict[str, Graph], *,
+                 options: CompileOptions = CompileOptions(),
+                 max_batch: int = 8, use_pallas: bool = False,
+                 jit: bool = True):
+        self.graphs = dict(graphs)
+        self.options = options
+        # power of two keeps _bucket's doubling landing on the cap and the
+        # runner cache on its log2(max_batch)+1 contract; rejecting other
+        # values beats silently serving at a different capacity
+        assert max_batch >= 1 and max_batch & (max_batch - 1) == 0, \
+            f"max_batch must be a power of two, got {max_batch}"
+        self.max_batch = max_batch
+        self.use_pallas = use_pallas
+        self.jit = jit
+        self.plans = {t: cached_plan(g, options)
+                      for t, g in self.graphs.items()}
+        self.queues: dict[str, deque] = {t: deque() for t in self.graphs}
+        self._rid = itertools.count()
+        self.completed = 0
+        self.steps = 0
+
+    # ------------------------------------------------------------ intake --
+    def submit(self, task: str, **inputs) -> TaskRequest:
+        """Validated intake: a malformed request is rejected here, where it
+        can only hurt its own caller — inside ``step`` it would take a whole
+        popped batch down with it."""
+        assert task in self.graphs, f"unknown task {task!r}"
+        plan = self.plans[task]
+        missing = set(plan.input_names) - inputs.keys()
+        extra = inputs.keys() - set(plan.input_names)
+        assert not missing and not extra, \
+            f"task {task!r}: missing inputs {sorted(missing)}, " \
+            f"unexpected inputs {sorted(extra)}"
+        shapes = plan.meta["input_shapes"]
+        for name, value in inputs.items():
+            got = tuple(np.shape(value))
+            want = tuple(shapes[name])
+            assert got == want, \
+                f"task {task!r}, input {name!r}: expected per-sample " \
+                f"shape {want}, got {got}"
+        req = TaskRequest(next(self._rid), task, inputs)
+        self.queues[task].append(req)
+        return req
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    @staticmethod
+    def _bucket(n: int, cap: int) -> int:
+        b = 1
+        while b < n and b < cap:
+            b *= 2
+        return min(b, cap)
+
+    # -------------------------------------------------------------- step --
+    def step(self) -> int:
+        """Drain one batch; returns requests served.
+
+        Scheduling is oldest-head-first: the task whose front request has
+        waited longest is served, taking everything queued behind it up to
+        ``max_batch``.  Same-task requests still coalesce into one batched
+        dispatch, but no task can be starved by sustained load on another
+        (a deepest-queue-first policy would defer a minority task forever)."""
+        ready = [t for t, q in self.queues.items() if q]
+        if not ready:
+            return 0
+        task = min(ready, key=lambda t: self.queues[t][0].rid)
+        queue = self.queues[task]
+        take = min(len(queue), self.max_batch)
+        bucket = self._bucket(take, self.max_batch)
+        reqs = [queue.popleft() for _ in range(take)]
+        padded = reqs + [reqs[-1]] * (bucket - take)
+        run = cached_runner(self.graphs[task], self.options, batch=bucket,
+                            use_pallas=self.use_pallas, jit=self.jit)
+        outs = run(**stack_inputs([r.inputs for r in padded]))
+        for i, req in enumerate(reqs):
+            req.result = tuple(np.asarray(o[i]) for o in outs)
+            req.done = True
+        self.completed += len(reqs)
+        self.steps += 1
+        return len(reqs)
+
+    def run(self, max_steps: int = 10_000) -> int:
+        """Drive until every queue drains; returns requests served."""
+        served = 0
+        for _ in range(max_steps):
+            n = self.step()
+            served += n
+            if n == 0 and not self.pending():
+                break
+        return served

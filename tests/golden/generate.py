@@ -1,0 +1,40 @@
+"""Regenerate the golden parity outputs under ``tests/golden/``.
+
+Run from the repo root against a known-good executor:
+
+    PYTHONPATH=src python tests/golden/generate.py
+
+The resulting ``<task>.npz`` files pin the numeric behaviour of the
+compile->plan->runtime pipeline for the six GNN-CV tasks (reduced configs);
+``tests/test_runtime.py`` asserts the registry-based runtime still matches
+them bit-for-bit.  The originals were produced by the pre-registry seed
+executor, so they also guard the op-registry refactor against drift.
+"""
+import pathlib
+
+import numpy as np
+
+from repro.core import CompileOptions, build_runner, compile_graph
+from repro.core.executor import random_inputs
+from repro.gnncv.tasks import build_task
+
+# Tasks and configs mirror tests/test_runtime.py, which builds them through
+# SMALL_CONFIGS — changing those configs requires regenerating the goldens.
+GOLDEN_TASKS = ["b1", "b2", "b3-r50", "b4", "b5", "b6"]
+SEED = 7
+
+
+def main():
+    here = pathlib.Path(__file__).parent
+    for task in GOLDEN_TASKS:
+        plan = compile_graph(build_task(task, small=True),
+                             CompileOptions(target="fpga"))
+        ins = random_inputs(plan, seed=SEED)
+        outs = build_runner(plan)(**ins)
+        payload = {f"out{i}": np.asarray(o) for i, o in enumerate(outs)}
+        np.savez(here / f"{task}.npz", **payload)
+        print(task, [v.shape for v in payload.values()])
+
+
+if __name__ == "__main__":
+    main()

@@ -203,6 +203,9 @@ def test_sharded_train_step_matches_single_device():
 def test_dryrun_cell_on_host_mesh():
     """The actual dryrun entrypoint must lower+compile a real cell (small
     arch) with 512 fake devices — the deliverable (e) smoke."""
+    import shutil
+    # dryrun skips cells whose output file already exists — start clean
+    shutil.rmtree("/tmp/dryrun_pytest", ignore_errors=True)
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     res = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch",

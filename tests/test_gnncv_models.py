@@ -9,17 +9,9 @@ from repro.core.executor import random_inputs
 from repro.gnncv.cnn_zoo import CNN_ZOO
 from repro.gnncv.gnn_zoo import GNN_ZOO
 from repro.gnncv.graphs import GraphSpec
+from repro.gnncv.tasks import SMALL_CONFIGS as SMALL_TASKS
 from repro.gnncv.tasks import TASKS
 
-SMALL_TASKS = {
-    "b1": dict(input_hw=16, embed_ch=16, gnn_dim=32, gnn_blocks=2),
-    "b2": dict(input_hw=32, width_mult=0.125, n_labels=16, label_feat=32),
-    "b3-r50": dict(input_hw=32, width_mult=0.125, reduce_ch=64),
-    "b3-r101": dict(input_hw=32, width_mult=0.0625, reduce_ch=32),
-    "b4": dict(frames=16, channels=(16, 32), strides=(1, 2)),
-    "b5": dict(input_hw=16, feat=8),
-    "b6": dict(n_points=64, knn=5, dims=(8, 16), feat_out=32),
-}
 MINI_GRAPH = GraphSpec("mini", 128, 512, 32, 7)
 
 

@@ -1,0 +1,135 @@
+"""Micro-batching GNN-CV serving: correctness of batched draining across a
+heterogeneous request stream, bucket quantization of the runner cache, and
+the plan/runner cache itself."""
+import numpy as np
+import pytest
+
+from repro.core import CompileOptions, build_runner
+from repro.core.runtime.cache import (cache_stats, cached_plan,
+                                      cached_runner, clear_caches)
+from repro.gnncv.tasks import build_task, request_inputs
+from repro.serve import GNNCVServeEngine
+
+OPTS = CompileOptions(target="fpga")
+
+
+@pytest.fixture()
+def graphs():
+    clear_caches()
+    return {t: build_task(t, small=True) for t in ("b1", "b4", "b6")}
+
+
+def test_mixed_stream_results_match_direct_runs(graphs):
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=4)
+    reqs = []
+    for s in range(10):
+        task = ("b1", "b4", "b6")[s % 3]
+        reqs.append(eng.submit(
+            task, **request_inputs(eng.plans[task], seed=s)))
+    assert eng.run() == 10
+    assert eng.pending() == 0
+    for req in reqs:
+        assert req.done and req.result is not None
+        ref = build_runner(cached_plan(graphs[req.task], OPTS))(**req.inputs)
+        for got, want in zip(req.result, ref):
+            np.testing.assert_allclose(got, np.asarray(want),
+                                       rtol=1e-4, atol=1e-5)
+
+
+def test_batching_amortizes_steps(graphs):
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=8)
+    plan = eng.plans["b6"]
+    for s in range(8):
+        eng.submit("b6", **request_inputs(plan, seed=s))
+    assert eng.run() == 8
+    assert eng.steps == 1                      # one batched drain, not 8
+
+
+def test_bucket_quantization_bounds_runner_cache(graphs):
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=8)
+    plan = eng.plans["b6"]
+    for n in (1, 2, 3, 5, 6, 7, 8, 4):         # every batch size 1..8
+        for s in range(n):
+            eng.submit("b6", **request_inputs(plan, seed=s))
+        eng.run()
+    # power-of-two buckets: only runners for 1, 2, 4, 8 exist
+    assert cache_stats()["runners"] <= 4
+
+
+def test_padded_bucket_results_are_per_request(graphs):
+    """3 requests pad to a 4-bucket; outputs must still be per-request."""
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=4)
+    plan = eng.plans["b4"]
+    reqs = [eng.submit("b4", **request_inputs(plan, seed=s))
+            for s in range(3)]
+    assert eng.run() == 3
+    outs = [r.result[0] for r in reqs]
+    assert not np.array_equal(outs[0], outs[1])
+    for req in reqs:
+        ref = build_runner(cached_plan(graphs["b4"], OPTS))(**req.inputs)
+        np.testing.assert_allclose(req.result[0], np.asarray(ref[0]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_unknown_task_rejected(graphs):
+    eng = GNNCVServeEngine(graphs, options=OPTS)
+    with pytest.raises(AssertionError):
+        eng.submit("b99")
+
+
+def test_malformed_request_rejected_at_submit(graphs):
+    """A bad request must fail its own caller at intake, not poison the
+    batch it would have been popped with."""
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=4)
+    plan = eng.plans["b6"]
+    good = [eng.submit("b6", **request_inputs(plan, seed=s))
+            for s in range(2)]
+    with pytest.raises(AssertionError, match="missing inputs"):
+        eng.submit("b6", wrong_name=np.zeros((64, 3), np.float32))
+    with pytest.raises(AssertionError, match="unexpected inputs"):
+        eng.submit("b6", extra=np.zeros(3, np.float32),
+                   **request_inputs(plan, seed=9))
+    with pytest.raises(AssertionError, match="per-sample shape"):
+        eng.submit("b6", points=np.zeros((10, 3), np.float32))
+    assert eng.run() == 2 and all(r.done for r in good)
+
+
+def test_no_starvation_under_sustained_majority_load(graphs):
+    """Oldest-head-first: a lone b1 request is served even while b6
+    requests keep arriving faster than they drain."""
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=2)
+    b6 = eng.plans["b6"]
+    for s in range(4):
+        eng.submit("b6", **request_inputs(b6, seed=s))
+    lone = eng.submit("b1", **request_inputs(eng.plans["b1"], seed=0))
+    for s in range(6):                       # keep the majority queue deep
+        eng.submit("b6", **request_inputs(b6, seed=10 + s))
+        eng.step()
+        if lone.done:
+            break
+    assert lone.done
+
+
+def test_non_power_of_two_max_batch_rejected(graphs):
+    with pytest.raises(AssertionError, match="power of two"):
+        GNNCVServeEngine(graphs, options=OPTS, max_batch=6)
+    with pytest.raises(AssertionError, match="power of two"):
+        GNNCVServeEngine(graphs, options=OPTS, max_batch=0)
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=4)
+    plan = eng.plans["b6"]
+    reqs = [eng.submit("b6", **request_inputs(plan, seed=s))
+            for s in range(6)]
+    assert eng.run() == 6 and all(r.done for r in reqs)
+    assert eng.steps == 2                      # 4 + 2, both pow2 buckets
+
+
+def test_cached_runner_is_cached(graphs):
+    clear_caches()
+    g = graphs["b6"]
+    r1 = cached_runner(g, OPTS, batch=2)
+    r2 = cached_runner(g, OPTS, batch=2)
+    assert r1 is r2
+    assert cached_plan(g, OPTS) is cached_plan(g, OPTS)
+    assert cached_runner(g, OPTS, batch=4) is not r1
+    stats = cache_stats()
+    assert stats["plans"] == 1 and stats["runners"] == 2
