@@ -1,0 +1,76 @@
+"""Compile-path latency: graph construction -> six passes -> first run,
+for b1/b6 through *both* frontends (declarative builder vs. JAX tracer).
+
+    PYTHONPATH=src python -m benchmarks.compile_bench [--small] [--iters N]
+
+Three phases per (task, frontend):
+
+  build_ms    builder: GraphBuilder construction; tracer: jax.make_jaxpr
+              interpretation + canonicalization (the new frontend cost)
+  compile_ms  the six passes (identical plans either way — parity is
+              pinned by tests/test_frontend_parity.py)
+  first_ms    first runner call (jit trace + execute) — the cold-start a
+              serving process pays once per (graph, options, batch)
+
+Regressions in the trace/canonicalize path show up as build_ms drift
+against this trajectory without touching steady-state numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import emit
+from repro.core import CompileOptions, build_runner, compile_graph
+from repro.core.executor import random_inputs
+from repro.gnncv.jax_tasks import build_traced_task
+from repro.gnncv.tasks import build_task
+
+TASKS = ("b1", "b6")
+OPTS = CompileOptions(target="fpga")
+
+
+def _time_ms(fn, iters: int):
+    best = float("inf")
+    result = None
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, (time.perf_counter() - t0) * 1e3)
+    return best, result
+
+
+def bench(task: str, use_tracer: bool, *, small: bool, iters: int):
+    builder = build_traced_task if use_tracer else build_task
+    build_ms, graph = _time_ms(lambda: builder(task, small=small), iters)
+    compile_ms, plan = _time_ms(lambda: compile_graph(graph, OPTS), iters)
+    ins = random_inputs(plan, seed=0)
+    t0 = time.perf_counter()
+    out = build_runner(plan)(**ins)
+    _ = [o.block_until_ready() for o in out]
+    first_ms = (time.perf_counter() - t0) * 1e3
+    return build_ms, compile_ms, first_ms, len(plan.ops)
+
+
+def run(small: bool = True, iters: int = 3):
+    rows = []
+    for task in TASKS:
+        for frontend_name, use_tracer in (("builder", False),
+                                          ("tracer", True)):
+            b, c, f, n_ops = bench(task, use_tracer, small=small,
+                                   iters=iters)
+            rows.append((task, frontend_name, n_ops, f"{b:.1f}",
+                         f"{c:.1f}", f"{f:.1f}", f"{b + c + f:.1f}"))
+    emit(rows, ["task", "frontend", "ops", "build_ms", "compile_ms",
+                "first_run_ms", "total_ms"])
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true", default=True)
+    ap.add_argument("--full", dest="small", action="store_false",
+                    help="paper-scale graphs (slow)")
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+    run(small=args.small, iters=args.iters)

@@ -61,7 +61,7 @@ def bench_engine(graphs, options, stream, max_batch):
     served = eng.run()
     dt = time.perf_counter() - t0
     assert served == len(stream)
-    return dt, eng.steps
+    return dt, eng.stats()
 
 
 def run(requests: int = 96, max_batch: int = 8):
@@ -72,12 +72,17 @@ def run(requests: int = 96, max_batch: int = 8):
     stream = make_stream(plans, requests)
 
     loop_s = bench_one_at_a_time(graphs, options, stream)
-    eng_s, steps = bench_engine(graphs, options, stream, max_batch)
+    eng_s, stats = bench_engine(graphs, options, stream, max_batch)
     emit([["one_at_a_time", f"{loop_s * 1e3:.1f}",
            f"{len(stream) / loop_s:.1f}", len(stream)],
           ["serve_engine", f"{eng_s * 1e3:.1f}",
-           f"{len(stream) / eng_s:.1f}", steps]],
+           f"{len(stream) / eng_s:.1f}", stats["steps"]]],
          ["mode", "wall_ms", "req_per_s", "dispatches"])
+    # cache effectiveness (cumulative since process start): misses are the
+    # warmup compiles (one per task x bucket); every timed dispatch is a hit
+    emit([[stats["runner_hits"], stats["runner_misses"],
+           stats["plan_hits"], stats["plan_misses"]]],
+         ["runner_hits", "runner_misses", "plan_hits", "plan_misses"])
 
     rows = []
     for task, g in all_graphs.items():

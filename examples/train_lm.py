@@ -31,8 +31,7 @@ def main():
 
     cfg = model_100m()
     print(f"model: {cfg.name}  params={cfg.params_count()/1e6:.1f}M")
-    # register on the fly so launch.train can find it
-    import repro.configs as C
+    # register on the fly (sys.modules) so launch.train can find it
     import sys
     import types
     mod = types.ModuleType("repro.configs.llama_100m")

@@ -8,7 +8,6 @@ long_500k. ``long_500k`` is only defined for sub-quadratic archs
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 
 ARCHS = [

@@ -47,6 +47,9 @@ class Graph:
         self.name = name
         self.layers: dict[str, Layer] = {}
         self.outputs: list[str] = []
+        # Provenance + pass annotations ('frontend': 'builder' | 'tracer',
+        # 'fused_layers' after Step 1) — carried, not copied, by passes.
+        self.meta: dict[str, Any] = {}
 
     def add(self, layer: Layer) -> str:
         assert layer.name not in self.layers, f"duplicate layer {layer.name}"

@@ -31,6 +31,7 @@ def _light_copy(g: Graph) -> Graph:
                                   dict(l.params), dict(l.weights),
                                   l.out_shape)
     ng.outputs = list(g.outputs)
+    ng.meta = dict(getattr(g, "meta", None) or {})
     return ng
 
 
@@ -133,5 +134,6 @@ def fuse_layers(g: Graph, *, enable: bool = True,
     fused.outputs = [resolve(o) for o in g.outputs]
     fused_count += sum(1 for l in fused.layers.values()
                        if l.kind == "dm" and l.params.get("fused"))
-    fused.meta = {"fused_layers": fused_count}  # type: ignore[attr-defined]
+    fused.meta = {**(getattr(g, "meta", None) or {}),
+                  "fused_layers": fused_count}
     return fused

@@ -250,7 +250,9 @@ def lower_to_matops(g: Graph) -> ExecutionPlan:
         else:
             raise NotImplementedError(kind)
 
+    gmeta = getattr(g, "meta", None) or {}
     return ExecutionPlan(
         g.name, inputs, ops, list(g.outputs),
-        meta={"fused_layers": getattr(g, "meta", {}).get("fused_layers", 0),
+        meta={"fused_layers": gmeta.get("fused_layers", 0),
+              "frontend": gmeta.get("frontend", "builder"),
               "input_shapes": {i: shapes[i] for i in inputs}})

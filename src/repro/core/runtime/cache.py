@@ -17,6 +17,12 @@ from repro.core.plan import ExecutionPlan
 _PLANS: "weakref.WeakKeyDictionary[Graph, dict]" = weakref.WeakKeyDictionary()
 _RUNNERS: "weakref.WeakKeyDictionary[Graph, dict]" = \
     weakref.WeakKeyDictionary()
+# Hit/miss counters: sizes alone say nothing about cache *effectiveness* in
+# a serving process (a cache of 5 runners serving 99% hits looks identical
+# to one serving 5% hits).  Counters survive ``clear_caches`` resets only
+# via explicit re-zeroing there, so tests can scope them.
+_STATS = {"plan_hits": 0, "plan_misses": 0,
+          "runner_hits": 0, "runner_misses": 0}
 
 
 def cached_plan(graph: Graph,
@@ -24,7 +30,10 @@ def cached_plan(graph: Graph,
     """Compile ``graph`` once per distinct ``options``."""
     per_graph = _PLANS.setdefault(graph, {})
     if options not in per_graph:
+        _STATS["plan_misses"] += 1
         per_graph[options] = compile_graph(graph, options)
+    else:
+        _STATS["plan_hits"] += 1
     return per_graph[options]
 
 
@@ -46,18 +55,26 @@ def cached_runner(graph: Graph,
     key = (options, batch, use_pallas, jit, free_dead)
     per_graph = _RUNNERS.setdefault(graph, {})
     if key not in per_graph:
+        _STATS["runner_misses"] += 1
         per_graph[key] = build_runner(
             cached_plan(graph, options), use_pallas=use_pallas, jit=jit,
             batch=batch, free_dead=free_dead)
+    else:
+        _STATS["runner_hits"] += 1
     return per_graph[key]
 
 
 def cache_stats() -> dict[str, int]:
+    """Sizes *and* effectiveness counters (hits/misses since the last
+    ``clear_caches``)."""
     return {"graphs": len(_PLANS),
             "plans": sum(len(v) for v in _PLANS.values()),
-            "runners": sum(len(v) for v in _RUNNERS.values())}
+            "runners": sum(len(v) for v in _RUNNERS.values()),
+            **_STATS}
 
 
 def clear_caches() -> None:
     _PLANS.clear()
     _RUNNERS.clear()
+    for k in _STATS:
+        _STATS[k] = 0

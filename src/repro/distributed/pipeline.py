@@ -13,8 +13,6 @@ backward pass streams in reverse automatically).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

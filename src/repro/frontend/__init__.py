@@ -1,0 +1,43 @@
+"""Tracing frontend: compile user-defined JAX models into the layer IR.
+
+The paper's second pillar is a compiler that takes a *user-defined model*
+as input (§V-A).  This package is that ingestion path for plain JAX
+callables — the in-container analogue of the paper's PyTorch parser, and
+the second frontend next to the declarative ``GraphBuilder``:
+
+    from repro import frontend
+    from repro.frontend import nn
+
+    def model(x):                      # a user-defined model
+        h = nn.relu(x @ w1 + b1)
+        h = nn.message_passing(adjacency, h, reduce="max")
+        return h @ w2 + b2
+
+    graph = frontend.to_graph(model, {"x": example}, name="mymodel")
+    plan = frontend.compile_model(model, {"x": example})   # -> ExecutionPlan
+
+Stages: ``trace.trace_model`` interprets the model's jaxpr into proto
+layers, ``canonicalize.canonicalize`` rewrites jaxpr idioms (bias adds,
+softmax chains, DM reshuffles) back into the paper's layer vocabulary, and
+the resulting ``Graph`` flows through the six-pass compiler unchanged.
+"""
+from repro.core.compiler import CompileOptions, compile_graph
+from repro.core.ir import Graph
+from repro.core.plan import ExecutionPlan
+from repro.frontend import nn                                  # noqa: F401
+from repro.frontend.canonicalize import canonicalize           # noqa: F401
+from repro.frontend.trace import (TraceGraph, TraceNode,       # noqa: F401
+                                  UnsupportedOpError, trace_model)
+
+
+def to_graph(fn, example_inputs, *, name: str = "traced") -> Graph:
+    """Trace + canonicalize a plain JAX callable into a layer ``Graph``."""
+    return canonicalize(trace_model(fn, example_inputs, name=name))
+
+
+def compile_model(fn, example_inputs,
+                  options: CompileOptions = CompileOptions(), *,
+                  name: str = "traced") -> ExecutionPlan:
+    """One-call path from a user-defined JAX model to an ``ExecutionPlan``
+    (trace -> canonicalize -> six-pass compile)."""
+    return compile_graph(to_graph(fn, example_inputs, name=name), options)

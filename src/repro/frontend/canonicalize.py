@@ -1,0 +1,432 @@
+"""Tracing frontend, stage 2: proto-layer rewrites -> ``Graph`` IR.
+
+``jax.make_jaxpr`` shreds layer-level structure into primitive soup; this
+pass reassembles exactly the idioms the layer vocabulary names, so the
+six-pass compiler sees the same graphs the declarative ``GraphBuilder``
+produces and Step-1 fusion / Step-4 sparsity mapping fire unchanged:
+
+  * ``exp(x - max(x)) / sum(exp(..))`` chains  -> one ``softmax`` layer;
+  * ``max(x, 0)`` / ``tanh`` / ``logistic``    -> ``act`` layers;
+  * ``add(conv|linear, const-vector)``         -> folded bias weights;
+  * ``reduce_sum / n`` and ``reduce_window_sum / k**2`` -> mean reductions;
+  * spatial reductions                         -> ``globalpool`` layers;
+  * ``dot_general`` -> ``linear`` (const rhs), dense ``mp`` (const lhs),
+    ``vip`` (``x @ x.T``), or runtime ``matmul``;
+  * ``reshape``/``transpose`` chains between the CNN ``(C, H, W)`` and GNN
+    ``(N, F)`` layouts -> ``dm`` layers, so Step-1 DM fusion still applies.
+
+Anything left over that has no layer equivalent raises
+``UnsupportedOpError`` naming the offending primitive.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ir import Graph, Layer
+from repro.frontend.trace import TraceGraph, TraceNode, UnsupportedOpError
+
+_VIEW_OPS = frozenset({"bcast", "reshape"})
+_PORTION_DEFAULT = {"conv": "cnn", "pool": "cnn", "mp": "gnn",
+                    "vip": "gnn", "dm": "dm"}
+
+
+def _is_const(atom) -> bool:
+    return not isinstance(atom, str)
+
+
+def _scalar(atom):
+    """The python float of a size-1 constant, else None."""
+    if _is_const(atom) and np.size(atom) == 1:
+        return float(np.asarray(atom).reshape(()))
+    return None
+
+
+class _Rewriter:
+    def __init__(self, tg: TraceGraph):
+        self.tg = tg
+        self.alias: dict[str, str] = {}
+        self.dead: set[str] = set()
+
+    # ---- plumbing ---------------------------------------------------------
+    def resolve(self, ref):
+        while isinstance(ref, str) and ref in self.alias:
+            ref = self.alias[ref]
+        return ref
+
+    def flush(self) -> None:
+        """Apply aliases to every live node and drop dead nodes."""
+        for name in self.dead:
+            self.tg.nodes.pop(name, None)
+        self.dead.clear()
+        for node in self.tg.nodes.values():
+            node.inputs = [self.resolve(i) for i in node.inputs]
+        self.tg.output_names = [self.resolve(o)
+                                for o in self.tg.output_names]
+        self.alias.clear()
+
+    def consumers(self) -> dict[str, list[str]]:
+        cons: dict[str, list[str]] = {n: [] for n in self.tg.nodes}
+        for node in self.tg.nodes.values():
+            for ref in node.refs():
+                cons[ref].append(node.name)
+        for o in self.tg.output_names:
+            cons[o].append("<output>")
+        return cons
+
+    def node(self, ref) -> TraceNode | None:
+        return self.tg.nodes.get(ref) if isinstance(ref, str) else None
+
+    def _peel_views(self, ref, cons):
+        """Follow single-consumer bcast/reshape nodes upward; returns the
+        root ref and the list of peeled view-node names."""
+        chain = []
+        node = self.node(ref)
+        while node is not None and node.op in _VIEW_OPS \
+                and len(cons[node.name]) == 1:
+            chain.append(node.name)
+            ref = node.inputs[0]
+            node = self.node(ref)
+        return ref, chain
+
+    # ---- passes -----------------------------------------------------------
+    def drop_reduce_guards(self) -> None:
+        """jnp.max/min insert ``max(-inf, r)`` / ``min(inf, r)`` guards
+        around reductions — identities for our purposes."""
+        for node in list(self.tg.nodes.values()):
+            if node.op != "ew" or node.params["fn"] not in ("max", "min"):
+                continue
+            want = -np.inf if node.params["fn"] == "max" else np.inf
+            consts = [a for a in node.inputs if _scalar(a) == want]
+            refs = node.refs()
+            if consts and len(refs) == 1:
+                self.alias[node.name] = refs[0]
+                self.dead.add(node.name)
+        self.flush()
+
+    def match_softmax(self) -> None:
+        cons = self.consumers()
+        for div in list(self.tg.nodes.values()):
+            if div.op != "ew" or div.params["fn"] != "div":
+                continue
+            num, den = div.inputs
+            exp = self.node(num)
+            if exp is None or exp.op != "ew1" \
+                    or exp.params["fn"] != "exp":
+                continue
+            root, chain = self._peel_views(den, cons)
+            s = self.node(root)
+            if s is None or s.op != "reduce" or s.params["op"] != "sum" \
+                    or s.inputs[0] != num or len(s.params["axes"]) != 1 \
+                    or len(cons[s.name]) != 1:
+                continue
+            if sorted(cons[exp.name]) != sorted([div.name, s.name]):
+                continue
+            axis = s.params["axes"][0]
+            head, extra_dead = exp.inputs[0], []
+            sub = self.node(head)
+            if sub is not None and sub.op == "ew" \
+                    and sub.params["fn"] == "sub" \
+                    and cons[sub.name] == [exp.name] \
+                    and isinstance(sub.inputs[1], str):
+                mroot, mchain = self._peel_views(sub.inputs[1], cons)
+                m = self.node(mroot)
+                if m is not None and m.op == "reduce" \
+                        and m.params["op"] == "max" \
+                        and tuple(m.params["axes"]) == (axis,) \
+                        and m.inputs[0] == sub.inputs[0] \
+                        and len(cons[m.name]) == 1:
+                    head = sub.inputs[0]
+                    extra_dead = [sub.name, m.name, *mchain]
+            div.op, div.inputs = "softmax", [head]
+            div.params = {"axis": axis}
+            self.dead.update([exp.name, s.name, *chain, *extra_dead])
+        self.flush()
+
+    def match_means(self) -> None:
+        """``reduce_sum / n`` -> mean reduction; ``reduce_window_sum /
+        k**2`` -> average pool."""
+        cons = self.consumers()
+        for div in list(self.tg.nodes.values()):
+            if div.op != "ew" or div.params["fn"] != "div":
+                continue
+            ref, scale = div.inputs
+            n = _scalar(scale)
+            src = self.node(ref)
+            if n is None or src is None or len(cons[src.name]) != 1:
+                continue
+            if src.op == "reduce" and src.params["op"] == "sum":
+                count = int(np.prod([src.params["in_shape"][a]
+                                     for a in src.params["axes"]]))
+                if count == n:
+                    div.op = "reduce"
+                    div.inputs = [src.inputs[0]]
+                    div.params = {"op": "avg", "axes": src.params["axes"],
+                                  "in_shape": src.params["in_shape"]}
+                    self.dead.add(src.name)
+            elif src.op == "pool_sum" and src.params["window"] ** 2 == n:
+                div.op = "pool"
+                div.inputs = [src.inputs[0]]
+                div.params = {**src.params, "pool": "avg"}
+                self.dead.add(src.name)
+        self.flush()
+
+    def match_acts(self) -> None:
+        for node in list(self.tg.nodes.values()):
+            if node.op == "ew1" and node.params["fn"] in ("tanh", "sigmoid"):
+                node.op, node.params = "act", {"fn": node.params["fn"]}
+                continue
+            if node.op != "ew" or node.params["fn"] != "max":
+                continue
+            refs = node.refs()
+            consts = [a for a in node.inputs if _is_const(a)]
+            if len(refs) == 1 and len(consts) == 1 \
+                    and not np.any(np.asarray(consts[0])):
+                node.op, node.inputs = "act", refs
+                node.params = {"fn": "relu"}
+        self.flush()
+
+    def match_dots(self) -> None:
+        cons = self.consumers()
+        for node in list(self.tg.nodes.values()):
+            if node.op != "dot":
+                continue
+            lhs, rhs = node.inputs
+            lc, rc = node.params["lc"], node.params["rc"]
+            if _is_const(rhs):
+                w = np.asarray(rhs)
+                if w.ndim != 2 or lc != len(self.node(lhs).shape) - 1:
+                    raise UnsupportedOpError(
+                        f"dot_general with weight shape {w.shape} "
+                        f"contracting dims ({lc}, {rc}) does not map to a "
+                        f"linear layer")
+                node.op, node.inputs, node.params = "linear", [lhs], {}
+                node.weights = {"w": w if rc == 0 else w.T}
+            elif _is_const(lhs):
+                a = np.asarray(lhs)
+                if a.ndim != 2 or (lc, rc) != (1, 0) \
+                        or len(self.node(rhs).shape) != 2:
+                    raise UnsupportedOpError(
+                        f"dot_general with constant lhs shape {a.shape} "
+                        f"does not map to dense message passing")
+                node.op, node.inputs = "mp", [rhs]
+                node.params = {"mode": "dense", "reduce": "sum"}
+                node.weights = {"adj": a}
+            else:
+                t = self.node(rhs)
+                if t is not None and t.op == "transpose" \
+                        and t.params["perm"] == (1, 0) \
+                        and t.inputs[0] == lhs and (lc, rc) == (1, 0) \
+                        and cons[t.name] == [node.name]:
+                    node.op, node.inputs = "vip", [lhs]
+                    node.params = {"mode": "dense"}
+                    self.dead.add(t.name)
+                elif lc == len(self.node(lhs).shape) - 1 and rc == 0:
+                    node.op, node.params = "matmul", {}
+                else:
+                    raise UnsupportedOpError(
+                        f"dot_general contracting dims ({lc}, {rc}) with "
+                        f"two traced operands does not map to a matmul "
+                        f"layer")
+        self.flush()
+
+    def fold_biases(self) -> None:
+        cons = self.consumers()
+        for node in list(self.tg.nodes.values()):
+            if node.op != "ew" or node.params["fn"] != "add":
+                continue
+            refs = node.refs()
+            consts = [a for a in node.inputs if _is_const(a)]
+            if len(refs) != 1 or len(consts) != 1:
+                continue
+            prod = self.node(refs[0])
+            if prod is None or prod.op not in ("conv", "linear") \
+                    or "b" in prod.weights or cons[prod.name] != [node.name]:
+                continue
+            chan_axis = -3 if prod.op == "conv" else -1
+            chan = prod.shape[chan_axis]
+            cs = np.asarray(consts[0]).shape
+            padded = (1,) * (len(prod.shape) - len(cs)) + cs
+            if len(padded) != len(prod.shape) or padded[chan_axis] != chan \
+                    or any(d != 1 for i, d in enumerate(padded)
+                           if i != len(padded) + chan_axis):
+                continue
+            prod.weights["b"] = np.asarray(consts[0]).reshape(chan)
+            self.alias[node.name] = prod.name
+            self.dead.add(node.name)
+        self.flush()
+
+    def match_dm(self) -> None:
+        cons = self.consumers()
+        for node in list(self.tg.nodes.values()):
+            if node.name in self.dead:
+                continue
+            if node.op == "reshape":
+                src = self.node(node.inputs[0])
+                if src is None or len(src.shape) != 3:
+                    continue
+                c, h, w = src.shape
+                if node.params["shape"] != (c, h * w):
+                    continue
+                users = [self.tg.nodes[u] for u in cons[node.name]
+                         if u != "<output>"]
+                if len(users) == 1 and users[0].op == "transpose" \
+                        and users[0].params["perm"] == (1, 0):
+                    t = users[0]
+                    t.op, t.inputs = "dm", [node.inputs[0]]
+                    t.params = {"mode": "patch_to_node", "patch": 1}
+                    self.dead.add(node.name)
+                else:
+                    node.op = "dm"
+                    node.params = {"mode": "channel_to_node", "patch": 1}
+            elif node.op == "transpose" and node.params["perm"] == (1, 0):
+                src = self.node(node.inputs[0])
+                if src is None or len(src.shape) != 2:
+                    continue
+                n_nodes, f = src.shape
+                users = [u for u in cons[node.name] if u != "<output>"]
+                if len(users) != 1:
+                    continue
+                user = self.tg.nodes[users[0]]
+                if user.op == "reshape" and len(user.params["shape"]) == 3 \
+                        and user.params["shape"][0] == f \
+                        and int(np.prod(user.params["shape"][1:])) \
+                        == n_nodes:
+                    user.op, user.inputs = "dm", [node.inputs[0]]
+                    user.params = {"mode": "node_to_channel", "patch": 1,
+                                   "hw": tuple(user.params["shape"][1:])}
+                    self.dead.add(node.name)
+        self.flush()
+
+    def match_globalpool(self) -> None:
+        spatial = {4: (2, 3), 3: (1, 2), 2: (0,)}
+        for node in list(self.tg.nodes.values()):
+            if node.op == "pool_max":
+                node.op = "pool"
+                node.params = {**node.params, "pool": "max"}
+                continue
+            if node.op != "reduce" or node.params["op"] not in ("max",
+                                                                "avg"):
+                continue
+            rank = len(node.params["in_shape"])
+            if tuple(node.params["axes"]) == spatial.get(rank):
+                node.op = "globalpool"
+                node.params = {"pool": node.params["op"], "in_rank": rank}
+        self.flush()
+
+    def drop_identity_bcasts(self) -> None:
+        for node in list(self.tg.nodes.values()):
+            if node.op != "bcast":
+                continue
+            src = self.node(node.inputs[0])
+            if src is not None and src.shape == node.params["shape"]:
+                self.alias[node.name] = node.inputs[0]
+                self.dead.add(node.name)
+        self.flush()
+
+
+# ---------------------------------------------------------------------------
+# emission
+
+_EMIT_UNSUPPORTED = {
+    "ew": lambda n: f"elementwise '{n.params['fn']}'",
+    "ew1": lambda n: f"elementwise '{n.params['fn']}'",
+    "reduce": lambda n: f"'reduce_{n.params['op']}' over axes "
+                        f"{n.params['axes']}",
+    "pool_sum": lambda n: "'reduce_window_sum' (not followed by a "
+                          "window-area division)",
+    "bcast": lambda n: "'broadcast_in_dim'",
+    "transpose": lambda n: "'transpose'",
+}
+
+
+def _emit(tg: TraceGraph) -> Graph:
+    g = Graph(tg.name)
+    g.meta = {"frontend": "tracer"}
+
+    def add(node: TraceNode, kind: str, params: dict,
+            inputs=None, out_shape=None) -> None:
+        params.setdefault("portion", _PORTION_DEFAULT.get(kind, "other"))
+        g.layers[node.name] = Layer(
+            node.name, kind, tuple(inputs if inputs is not None
+                                   else node.refs()),
+            params, dict(node.weights), out_shape)
+
+    for node in tg.nodes.values():
+        for ref in node.refs():
+            if ref not in g.layers:
+                raise UnsupportedOpError(
+                    f"node {node.name!r} consumes unplaced value {ref!r}")
+        if node.op == "input":
+            add(node, "input", {"shape": node.shape,
+                                "dtype": np.dtype(node.dtype).name},
+                out_shape=node.shape)
+        elif node.op == "conv":
+            add(node, "conv", {"stride": node.params["stride"],
+                               "padding": node.params["padding"]})
+        elif node.op == "linear":
+            add(node, "linear", {})
+        elif node.op == "mp":
+            mode = node.params["mode"]
+            if mode == "coo":
+                p = {"n": node.params["n"],
+                     "reduce": node.params["reduce"]}
+                if node.params.get("runtime_edge"):
+                    p["runtime_edge"] = True
+                add(node, "mp", p)
+            elif mode == "dense_runtime":
+                add(node, "mp", {"runtime_adj": True, "reduce": "sum"})
+            else:
+                add(node, "mp", {"reduce": node.params["reduce"]})
+        elif node.op == "vip":
+            add(node, "vip", {})
+        elif node.op == "norm":
+            add(node, "norm", {"norm": "batch",
+                               "eps": node.params["eps"]})
+        elif node.op == "act":
+            add(node, "act", {"fn": node.params["fn"]})
+        elif node.op == "softmax":
+            add(node, "softmax", {"axis": node.params["axis"]})
+        elif node.op == "pool":
+            add(node, "pool", {"window": node.params["window"],
+                               "stride": node.params["stride"],
+                               "pool": node.params["pool"]})
+        elif node.op == "globalpool":
+            add(node, "globalpool", {"pool": node.params["pool"]})
+        elif node.op == "dm":
+            p = {"mode": node.params["mode"], "patch": node.params["patch"]}
+            if "hw" in node.params:
+                p["hw"] = node.params["hw"]
+            add(node, "dm", p)
+        elif node.op == "reshape":
+            add(node, "reshape", {"shape": node.params["shape"]})
+        elif node.op == "concat":
+            add(node, "concat", {"axis": node.params["axis"]})
+        elif node.op == "ew" and node.params["fn"] == "add" \
+                and len(node.refs()) == 2:
+            add(node, "add", {})
+        elif node.op == "matmul":
+            add(node, "matmul", {})
+        else:
+            detail = _EMIT_UNSUPPORTED.get(
+                node.op, lambda n: f"'{n.op}'")(node)
+            raise UnsupportedOpError(
+                f"traced pattern {detail} (node {node.name!r}, shape "
+                f"{node.shape}) has no layer-IR equivalent after "
+                f"canonicalization")
+    g.mark_output(*tg.output_names)
+    return g
+
+
+def canonicalize(tg: TraceGraph) -> Graph:
+    """Rewrite a ``TraceGraph`` into a compilable layer ``Graph``."""
+    rw = _Rewriter(tg)
+    rw.drop_reduce_guards()
+    rw.match_softmax()
+    rw.match_means()
+    rw.match_acts()
+    rw.match_dots()
+    rw.fold_biases()
+    rw.match_dm()
+    rw.match_globalpool()
+    rw.drop_identity_bcasts()
+    return _emit(tg)

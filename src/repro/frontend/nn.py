@@ -1,0 +1,150 @@
+"""User-facing op library for the tracing frontend (paper §V-A).
+
+GNN aggregation written in raw ``jnp`` dissolves into scatter/gather soup
+under ``jax.make_jaxpr`` — a ``segment_sum`` becomes ``scatter-add`` over
+index arithmetic, and the tracer could never recover the paper's MP/VIP
+layer abstractions from it.  These helpers are therefore registered as
+*custom JAX primitives*: inside a user model they behave exactly like the
+equivalent jnp code (impl + jit lowering below mirror the op-registry
+runtime's numerics), but in the jaxpr they survive as single
+``gcv_mp`` / ``gcv_vip`` / ``gcv_batch_norm`` equations the tracer maps
+1:1 onto ``mp`` / ``vip`` / ``norm`` layers.
+
+This is the in-container analogue of how a PyTorch frontend recognizes
+``MessagePassing`` / ``BatchNorm2d`` *modules* rather than re-deriving them
+from aten ops.  Everything else in a user model (conv, matmul, pooling,
+activations, reshapes) should be plain ``jax``/``jnp`` — the tracer
+understands those natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+try:                                       # jax >= 0.4.34
+    from jax.extend.core import Primitive
+except ImportError:                         # pragma: no cover - older jax
+    from jax.core import Primitive
+from jax.interpreters import mlir
+
+mp_p = Primitive("gcv_mp")
+vip_p = Primitive("gcv_vip")
+batch_norm_p = Primitive("gcv_batch_norm")
+
+
+# ------------------------------------------------------------------ mp ----
+def message_passing(adj, x, *, reduce: str = "sum"):
+    """GNN aggregation ``rho({e_uv * h_u})`` over a graph.
+
+    ``adj`` is either a dense ``(N, N)`` adjacency — a numpy constant for
+    model-structure graphs, or a traced array for learned affinities (b1) —
+    or a COO 4-tuple ``(rows, cols, vals, num_nodes)`` for dataset-scale
+    connectivity.  ``x``: node features ``(N, F)`` (dense also supports the
+    ST-GCN ``(C, T, V)`` layout).  ``reduce``: ``'sum'`` or ``'max'``.
+    """
+    assert reduce in ("sum", "max"), reduce
+    if isinstance(adj, tuple):
+        rows, cols, vals, n = adj
+        return mp_p.bind(x, jnp.asarray(rows), jnp.asarray(cols),
+                         jnp.asarray(vals), mode="coo", n=int(n),
+                         reduce=reduce)
+    return mp_p.bind(x, jnp.asarray(adj), mode="dense", n=None,
+                     reduce=reduce)
+
+
+def _mp_impl(x, *adj, mode, n, reduce):
+    if mode == "coo":
+        rows, cols, vals = adj
+        msg = vals[:, None] * x[cols]
+        if reduce == "max":
+            agg = jax.ops.segment_max(msg, rows, n)
+            return jnp.where(jnp.isneginf(agg), x, agg)
+        return jax.ops.segment_sum(msg, rows, n)
+    a = adj[0]
+    if reduce == "max":
+        gathered = a[..., None] * x[None]          # (N, N, F)
+        valid = (a != 0)[..., None]
+        agg = jnp.where(valid, gathered, -jnp.inf).max(axis=1)
+        return jnp.where(jnp.isneginf(agg), x, agg)
+    if x.ndim == 3:                                # (C, T, V) x A^T
+        c, t, v = x.shape
+        return (x.reshape(c * t, v) @ a.T).reshape(c, t, v)
+    return a @ x
+
+
+# ----------------------------------------------------------------- vip ----
+def vip(x, *, mask=None, edges=None):
+    """Vector-inner-product layer ``e_uv = <h_u, h_v>``.
+
+    Dense (default): full ``(N, N)`` score matrix.  ``mask``: dense 0/1
+    sampling matrix (SDDMM).  ``edges``: COO ``(rows, cols)`` — per-edge
+    scores of shape ``(nnz,)``.
+    """
+    if edges is not None:
+        rows, cols = edges
+        return vip_p.bind(x, jnp.asarray(rows), jnp.asarray(cols),
+                          mode="edges")
+    if mask is not None:
+        return vip_p.bind(x, jnp.asarray(mask), mode="mask")
+    return vip_p.bind(x, mode="dense")
+
+
+def _vip_impl(x, *operands, mode):
+    if mode == "edges":
+        rows, cols = operands
+        return (x[rows] * x[cols]).sum(-1)
+    if mode == "mask":
+        return (x @ x.T) * operands[0]
+    return x @ x.T
+
+
+# ---------------------------------------------------------------- norm ----
+def batch_norm(x, scale, bias, mean, var, *, eps: float = 1e-5):
+    """Inference batch norm with recorded statistics — survives tracing as
+    a ``norm`` layer so Step-1 fusion can fold it into the producing
+    conv/linear exactly as it does for builder graphs."""
+    return batch_norm_p.bind(x, jnp.asarray(scale), jnp.asarray(bias),
+                             jnp.asarray(mean), jnp.asarray(var), eps=eps)
+
+
+def _batch_norm_impl(x, scale, bias, mean, var, *, eps):
+    shape = {2: (1, -1), 3: (-1, 1, 1), 4: (1, -1, 1, 1)}[x.ndim]
+    bc = lambda v: v.reshape(shape)                          # noqa: E731
+    return ((x - bc(mean)) * bc(scale) * jax.lax.rsqrt(bc(var) + eps)
+            + bc(bias))
+
+
+# ---------------------------------------------------- activations etc. ----
+def relu(x):
+    """``max(x, 0)`` as a bare ``max`` equation (``jax.nn.relu`` works too —
+    the tracer inlines its custom_jvp wrapper)."""
+    return jnp.maximum(x, 0.0)
+
+
+def _register(prim, impl, out_aval):
+    prim.def_impl(impl)
+    prim.def_abstract_eval(out_aval)
+    mlir.register_lowering(prim, mlir.lower_fun(impl, multiple_results=False))
+
+
+def _mp_aval(x, *adj, mode, n, reduce):
+    return x
+
+
+def _vip_aval(x, *operands, mode):
+    # aval.update instead of constructing ShapedArray directly — its import
+    # path moved across the jax 0.4 -> 0.6 series.
+    if mode == "edges":
+        return x.update(shape=(operands[0].shape[0],))
+    return x.update(shape=(x.shape[0], x.shape[0]))
+
+
+def _bn_aval(x, scale, bias, mean, var, *, eps):
+    return x
+
+
+_register(mp_p, _mp_impl, _mp_aval)
+_register(vip_p, _vip_impl, _vip_aval)
+_register(batch_norm_p, _batch_norm_impl, _bn_aval)
+
+FRONTEND_PRIMITIVES = {p.name: p for p in (mp_p, vip_p, batch_norm_p)}

@@ -1,0 +1,472 @@
+"""Tracing frontend, stage 1: jaxpr -> proto-layer trace graph (paper §V-A).
+
+``trace_model`` is the in-container analogue of the paper's PyTorch input
+parser: it takes a *plain JAX callable* (a user-defined model) plus example
+inputs, obtains its jaxpr via ``jax.make_jaxpr``, and interprets every
+equation into a ``TraceNode`` — a proto-layer carrying the jaxpr-level
+facts (primitive, operands, resolved constants, shapes) that
+``canonicalize`` then rewrites into the ``Graph`` layer IR.
+
+Interpretation rules:
+
+  * call-like equations (``pjit``, ``custom_jvp_call``, ``custom_vjp_call``,
+    ``closed_call``, ``remat``) are inlined recursively — ``jax.nn.relu``
+    and friends dissolve into their underlying ``max``/``exp`` equations;
+  * equations whose operands are all compile-time constants are folded
+    eagerly, so weight arithmetic done at model-build time (bias reshapes,
+    scale products) collapses back into plain weight arrays;
+  * the ``gcv_mp`` / ``gcv_vip`` / ``gcv_batch_norm`` primitives from
+    ``frontend.nn`` map 1:1 onto ``mp`` / ``vip`` / ``norm`` proto-layers —
+    with a *traced* adjacency operand recognized as the runtime-valued
+    affinity case (b1) and a constant one as model structure;
+  * any other primitive raises ``UnsupportedOpError`` naming it — no
+    silent mis-lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+
+try:                                        # jax >= 0.4.34
+    from jax.extend.core import ClosedJaxpr, Literal
+except ImportError:                         # pragma: no cover - older jax
+    from jax.core import ClosedJaxpr, Literal
+
+from repro.frontend.nn import FRONTEND_PRIMITIVES  # noqa: F401  (registers)
+
+
+class UnsupportedOpError(NotImplementedError):
+    """A jaxpr equation (or post-trace pattern) the frontend cannot map
+    onto the layer vocabulary.  The message always names the offending
+    jaxpr primitive so users know which part of their model to rewrite
+    (typically: express it through ``repro.frontend.nn`` helpers)."""
+
+
+@dataclasses.dataclass
+class TraceNode:
+    """One proto-layer: a jaxpr equation lifted to the frontend's working
+    vocabulary.  ``inputs`` holds node names (str) for traced operands and
+    ``np.ndarray`` for constant operands; layer-weight constants live in
+    ``weights``."""
+    name: str
+    op: str
+    inputs: list
+    params: dict
+    weights: dict
+    shape: tuple
+    dtype: Any
+
+    def refs(self) -> list[str]:
+        return [i for i in self.inputs if isinstance(i, str)]
+
+
+@dataclasses.dataclass
+class TraceGraph:
+    name: str
+    nodes: dict[str, TraceNode]          # insertion order is topological
+    input_names: list[str]
+    output_names: list[str]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+
+def _is_const(atom) -> bool:
+    return not isinstance(atom, str)
+
+
+def _same_padding(sizes, windows, strides):
+    pads = []
+    for h, k, s in zip(sizes, windows, strides):
+        out = -(-h // s)
+        total = max((out - 1) * s + k - h, 0)
+        pads.append((total // 2, total - total // 2))
+    return tuple(pads)
+
+
+def _norm_pads(pads):
+    return tuple((int(lo), int(hi)) for lo, hi in pads)
+
+
+class _Interpreter:
+    def __init__(self, graph_name: str):
+        self.tg = TraceGraph(graph_name, {}, [], [])
+        self._n = 0
+
+    # ---- node/env plumbing ----
+    def fresh(self, prefix: str) -> str:
+        self._n += 1
+        return f"{prefix}.{self._n}"
+
+    def node(self, prefix: str, op: str, inputs, params, weights,
+             outvar) -> str:
+        name = self.fresh(prefix)
+        aval = outvar.aval
+        self.tg.nodes[name] = TraceNode(name, op, list(inputs), params,
+                                        weights, tuple(aval.shape),
+                                        aval.dtype)
+        return name
+
+    def read(self, env, var):
+        if isinstance(var, Literal):
+            return np.asarray(var.val)
+        return env[var]
+
+    # ---- the interpreter loop ----
+    def interpret(self, jaxpr, consts, in_atoms, env):
+        for cv, c in zip(jaxpr.constvars, consts):
+            env[cv] = np.asarray(c)
+        for iv, a in zip(jaxpr.invars, in_atoms):
+            env[iv] = a
+        for eqn in jaxpr.eqns:
+            self.eqn(eqn, env)
+        return [self.read(env, v) for v in jaxpr.outvars]
+
+    # Call-like primitives whose body jaxpr runs exactly once per bind —
+    # safe to inline.  Anything else carrying a sub-jaxpr (scan, while,
+    # cond, ...) has looping/branching semantics and must NOT be inlined
+    # as a single iteration; those fall through to UnsupportedOpError.
+    _INLINE_PRIMS = frozenset({
+        "pjit", "jit", "closed_call", "core_call", "xla_call",
+        "custom_jvp_call", "custom_jvp_call_jaxpr",
+        "custom_vjp_call", "custom_vjp_call_jaxpr",
+        "remat", "remat2", "checkpoint",
+    })
+
+    def eqn(self, eqn, env):
+        prim = eqn.primitive.name
+        # 1. inline call-like equations
+        closed = None
+        if prim in self._INLINE_PRIMS:
+            closed = next((eqn.params[k] for k in
+                           ("jaxpr", "call_jaxpr", "fun_jaxpr")
+                           if isinstance(eqn.params.get(k), ClosedJaxpr)),
+                          None)
+        if closed is not None:
+            atoms = [self.read(env, v) for v in eqn.invars]
+            if len(closed.jaxpr.invars) != len(atoms):
+                raise UnsupportedOpError(
+                    f"cannot inline call primitive {prim!r}: "
+                    f"operand arity mismatch")
+            outs = self.interpret(closed.jaxpr, closed.consts, atoms, {})
+            for ov, o in zip(eqn.outvars, outs):
+                env[ov] = o
+            return
+        atoms = [self.read(env, v) for v in eqn.invars]
+        # 2. constant folding: all-constant equations evaluate eagerly
+        if all(_is_const(a) for a in atoms):
+            outs = eqn.primitive.bind(
+                *(jax.numpy.asarray(a) for a in atoms), **eqn.params)
+            if not eqn.primitive.multiple_results:
+                outs = [outs]
+            for ov, o in zip(eqn.outvars, outs):
+                env[ov] = np.asarray(o)
+            return
+        # 3. per-primitive mapping
+        handler = getattr(self, "p_" + prim.replace("-", "_"), None)
+        if handler is None:
+            raise UnsupportedOpError(
+                f"jaxpr primitive {prim!r} is not supported by the tracing "
+                f"frontend (operand shapes "
+                f"{[getattr(v.aval, 'shape', ()) for v in eqn.invars]}); "
+                f"express this op via repro.frontend.nn or the declarative "
+                f"GraphBuilder")
+        handler(eqn, atoms, env)
+
+    # ---- identities -------------------------------------------------------
+    def _identity(self, eqn, atoms, env):
+        env[eqn.outvars[0]] = atoms[0]
+
+    p_stop_gradient = _identity
+    p_copy = _identity
+
+    def p_convert_element_type(self, eqn, atoms, env):
+        if eqn.params["new_dtype"] != eqn.invars[0].aval.dtype:
+            raise UnsupportedOpError(
+                f"jaxpr primitive 'convert_element_type' to "
+                f"{eqn.params['new_dtype']} is not supported (traced models "
+                f"must stay in one dtype)")
+        env[eqn.outvars[0]] = atoms[0]
+
+    # ---- frontend primitives ---------------------------------------------
+    def p_gcv_mp(self, eqn, atoms, env):
+        x, adj = atoms[0], atoms[1:]
+        p = eqn.params
+        if not isinstance(x, str):
+            raise UnsupportedOpError(
+                "gcv_mp over constant node features is not supported")
+        if p["mode"] == "coo":
+            rows, cols, vals = adj
+            if _is_const(rows) and _is_const(cols):
+                weights = {"coo_rows": np.asarray(rows, np.int32),
+                           "coo_cols": np.asarray(cols, np.int32)}
+                params = {"mode": "coo", "n": p["n"], "reduce": p["reduce"]}
+                inputs = [x]
+                if _is_const(vals):
+                    weights["coo_vals"] = np.asarray(vals, np.float32)
+                else:                        # GAT-style runtime edge values
+                    params["runtime_edge"] = True
+                    inputs.append(vals)
+                env[eqn.outvars[0]] = self.node(
+                    "mp", "mp", inputs, params, weights, eqn.outvars[0])
+                return
+            raise UnsupportedOpError(
+                "gcv_mp with traced COO connectivity is not supported "
+                "(edge *values* may be traced; rows/cols must be static)")
+        a = adj[0]
+        if _is_const(a):
+            env[eqn.outvars[0]] = self.node(
+                "mp", "mp", [x], {"mode": "dense", "reduce": p["reduce"]},
+                {"adj": np.asarray(a)}, eqn.outvars[0])
+            return
+        if p["reduce"] != "sum":
+            raise UnsupportedOpError(
+                "gcv_mp with a runtime adjacency supports reduce='sum' only "
+                "(the paper's DDMM mapping)")
+        env[eqn.outvars[0]] = self.node(
+            "mp", "mp", [x, a], {"mode": "dense_runtime"}, {},
+            eqn.outvars[0])
+
+    def p_gcv_vip(self, eqn, atoms, env):
+        x, rest = atoms[0], atoms[1:]
+        mode = eqn.params["mode"]
+        if not isinstance(x, str):
+            raise UnsupportedOpError("gcv_vip over constant features")
+        weights = {}
+        if mode == "mask":
+            if not _is_const(rest[0]):
+                raise UnsupportedOpError("gcv_vip mask must be static")
+            weights["mask"] = np.asarray(rest[0])
+        elif mode == "edges":
+            if not (_is_const(rest[0]) and _is_const(rest[1])):
+                raise UnsupportedOpError("gcv_vip edges must be static")
+            weights["coo_rows"] = np.asarray(rest[0], np.int32)
+            weights["coo_cols"] = np.asarray(rest[1], np.int32)
+        env[eqn.outvars[0]] = self.node("vip", "vip", [x], {"mode": mode},
+                                        weights, eqn.outvars[0])
+
+    def p_gcv_batch_norm(self, eqn, atoms, env):
+        x, stats = atoms[0], atoms[1:]
+        if not isinstance(x, str):
+            raise UnsupportedOpError("gcv_batch_norm over constant input")
+        if not all(_is_const(s) for s in stats):
+            raise UnsupportedOpError(
+                "gcv_batch_norm statistics must be compile-time constants "
+                "(inference-mode norm)")
+        scale, bias, mean, var = (np.asarray(s) for s in stats)
+        env[eqn.outvars[0]] = self.node(
+            "norm", "norm", [x], {"eps": float(eqn.params["eps"])},
+            {"scale": scale, "bias": bias, "mean": mean, "var": var},
+            eqn.outvars[0])
+
+    # ---- compute ----------------------------------------------------------
+    def p_conv_general_dilated(self, eqn, atoms, env):
+        x, w = atoms
+        p = eqn.params
+        if not _is_const(w):
+            raise UnsupportedOpError(
+                "conv_general_dilated with a traced kernel is not supported "
+                "(kernels must be compile-time weights)")
+        if isinstance(x, np.ndarray):
+            raise UnsupportedOpError("conv over constant input")
+        if (p["feature_group_count"] != 1 or p["batch_group_count"] != 1
+                or tuple(p["lhs_dilation"]) != (1, 1)
+                or tuple(p["rhs_dilation"]) != (1, 1)):
+            raise UnsupportedOpError(
+                "conv_general_dilated with grouping or dilation is not "
+                "supported")
+        dn = p["dimension_numbers"]
+        if tuple(dn.lhs_spec) != (0, 1, 2, 3) or \
+                tuple(dn.out_spec) != (0, 1, 2, 3):
+            raise UnsupportedOpError(
+                "conv_general_dilated requires NCHW activations")
+        # kernel -> HWIO (the builder's (k1, k2, c_in, c_out) convention)
+        o, i, kh, kw = dn.rhs_spec
+        w = np.asarray(w).transpose(kh, kw, i, o)
+        k1, k2 = w.shape[:2]
+        stride = tuple(int(s) for s in p["window_strides"])
+        sizes = tuple(eqn.invars[0].aval.shape[-2:])
+        pads = _norm_pads(p["padding"])
+        if pads == _same_padding(sizes, (k1, k2), stride):
+            padding = "SAME"
+        elif pads == ((0, 0), (0, 0)):
+            padding = "VALID"
+        else:
+            raise UnsupportedOpError(
+                f"conv_general_dilated with explicit padding {pads} maps to "
+                f"neither SAME nor VALID")
+        env[eqn.outvars[0]] = self.node(
+            "conv", "conv", [x], {"stride": stride, "padding": padding},
+            {"w": w}, eqn.outvars[0])
+
+    def p_dot_general(self, eqn, atoms, env):
+        (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+        if lb or rb or len(lc) != 1 or len(rc) != 1:
+            raise UnsupportedOpError(
+                "dot_general with batch dims or multi-dim contraction is "
+                "not supported")
+        env[eqn.outvars[0]] = self.node(
+            "dot", "dot", list(atoms),
+            {"lc": int(lc[0]), "rc": int(rc[0])}, {}, eqn.outvars[0])
+
+    # ---- pooling / reductions --------------------------------------------
+    def _reduce_window(self, eqn, atoms, env, pool_op):
+        p = eqn.params
+        win = tuple(int(w) for w in p["window_dimensions"])
+        strides = tuple(int(s) for s in p["window_strides"])
+        if any(d != 1 for d in p["base_dilation"]) or \
+                any(d != 1 for d in p["window_dilation"]):
+            raise UnsupportedOpError("dilated reduce_window")
+        lead, (k1, k2) = win[:-2], win[-2:]
+        slead, (s1, s2) = strides[:-2], strides[-2:]
+        if any(d != 1 for d in lead + slead) or k1 != k2 or s1 != s2:
+            raise UnsupportedOpError(
+                f"reduce_window with window {win} / strides {strides} does "
+                f"not match a square spatial pool")
+        sizes = tuple(eqn.invars[0].aval.shape[-2:])
+        pads = _norm_pads(p["padding"])
+        if pads[:-2] != ((0, 0),) * len(lead):
+            raise UnsupportedOpError("reduce_window pads non-spatial dims")
+        if pads[-2:] != _same_padding(sizes, (k1, k2), (s1, s2)):
+            raise UnsupportedOpError(
+                f"reduce_window padding {pads[-2:]} is not SAME")
+        env[eqn.outvars[0]] = self.node(
+            "pool", pool_op, [atoms[0]], {"window": k1, "stride": s1}, {},
+            eqn.outvars[0])
+
+    def p_reduce_window_max(self, eqn, atoms, env):
+        self._reduce_window(eqn, atoms, env, "pool_max")
+
+    def p_reduce_window_sum(self, eqn, atoms, env):
+        self._reduce_window(eqn, atoms, env, "pool_sum")
+
+    def _reduce(self, eqn, atoms, env, op):
+        axes = tuple(int(a) for a in eqn.params["axes"])
+        env[eqn.outvars[0]] = self.node(
+            "reduce", "reduce", [atoms[0]],
+            {"op": op, "axes": axes,
+             "in_shape": tuple(eqn.invars[0].aval.shape)}, {},
+            eqn.outvars[0])
+
+    def p_reduce_max(self, eqn, atoms, env):
+        self._reduce(eqn, atoms, env, "max")
+
+    def p_reduce_sum(self, eqn, atoms, env):
+        self._reduce(eqn, atoms, env, "sum")
+
+    # ---- elementwise ------------------------------------------------------
+    def _binop(self, fn):
+        def handler(eqn, atoms, env):
+            env[eqn.outvars[0]] = self.node(
+                "ew", "ew", list(atoms), {"fn": fn}, {}, eqn.outvars[0])
+        return handler
+
+    def p_add(self, eqn, atoms, env):
+        self._binop("add")(eqn, atoms, env)
+
+    def p_sub(self, eqn, atoms, env):
+        self._binop("sub")(eqn, atoms, env)
+
+    def p_mul(self, eqn, atoms, env):
+        self._binop("mul")(eqn, atoms, env)
+
+    def p_div(self, eqn, atoms, env):
+        self._binop("div")(eqn, atoms, env)
+
+    def p_max(self, eqn, atoms, env):
+        self._binop("max")(eqn, atoms, env)
+
+    def p_min(self, eqn, atoms, env):
+        self._binop("min")(eqn, atoms, env)
+
+    def _unop(self, fn):
+        def handler(eqn, atoms, env):
+            env[eqn.outvars[0]] = self.node(
+                "ew1", "ew1", [atoms[0]], {"fn": fn}, {}, eqn.outvars[0])
+        return handler
+
+    def p_exp(self, eqn, atoms, env):
+        self._unop("exp")(eqn, atoms, env)
+
+    def p_tanh(self, eqn, atoms, env):
+        self._unop("tanh")(eqn, atoms, env)
+
+    def p_logistic(self, eqn, atoms, env):
+        self._unop("sigmoid")(eqn, atoms, env)
+
+    # ---- layout -----------------------------------------------------------
+    def p_reshape(self, eqn, atoms, env):
+        if eqn.params.get("dimensions") is not None:
+            raise UnsupportedOpError("reshape with dimension permutation")
+        env[eqn.outvars[0]] = self.node(
+            "reshape", "reshape", [atoms[0]],
+            {"shape": tuple(int(d) for d in eqn.params["new_sizes"])}, {},
+            eqn.outvars[0])
+
+    def p_squeeze(self, eqn, atoms, env):
+        env[eqn.outvars[0]] = self.node(
+            "reshape", "reshape", [atoms[0]],
+            {"shape": tuple(eqn.outvars[0].aval.shape)}, {},
+            eqn.outvars[0])
+
+    def p_transpose(self, eqn, atoms, env):
+        env[eqn.outvars[0]] = self.node(
+            "transpose", "transpose", [atoms[0]],
+            {"perm": tuple(int(p) for p in eqn.params["permutation"])}, {},
+            eqn.outvars[0])
+
+    def p_broadcast_in_dim(self, eqn, atoms, env):
+        env[eqn.outvars[0]] = self.node(
+            "bcast", "bcast", [atoms[0]],
+            {"shape": tuple(int(d) for d in eqn.params["shape"]),
+             "dims": tuple(int(d) for d in
+                           eqn.params["broadcast_dimensions"])}, {},
+            eqn.outvars[0])
+
+    def p_concatenate(self, eqn, atoms, env):
+        if any(_is_const(a) for a in atoms):
+            raise UnsupportedOpError(
+                "concatenate with constant operands is not supported")
+        env[eqn.outvars[0]] = self.node(
+            "concat", "concat", list(atoms),
+            {"axis": int(eqn.params["dimension"])}, {}, eqn.outvars[0])
+
+
+def trace_model(fn, example_inputs: Mapping[str, Any], *,
+                name: str = "traced") -> TraceGraph:
+    """Trace a plain JAX callable into a ``TraceGraph`` of proto-layers.
+
+    ``fn`` is called as ``fn(**example_inputs)``; each entry of
+    ``example_inputs`` (an array or ``jax.ShapeDtypeStruct``) becomes one
+    named graph input.  Model weights must be *closed over* as numpy/jax
+    constants — they surface as jaxpr consts and are resolved into layer
+    weights.  Returns the proto graph; ``frontend.canonicalize`` turns it
+    into a compilable ``Graph``.
+    """
+    names = list(example_inputs)
+    specs = [jax.ShapeDtypeStruct(np.shape(v), np.asarray(v).dtype)
+             if not isinstance(v, jax.ShapeDtypeStruct) else v
+             for v in example_inputs.values()]
+
+    def positional(*args):
+        return fn(**dict(zip(names, args)))
+
+    closed = jax.make_jaxpr(positional)(*specs)
+    interp = _Interpreter(name)
+    in_atoms = []
+    for n, spec in zip(names, specs):
+        interp.tg.nodes[n] = TraceNode(n, "input", [], {}, {},
+                                       tuple(spec.shape), spec.dtype)
+        interp.tg.input_names.append(n)
+        in_atoms.append(n)
+    outs = interp.interpret(closed.jaxpr, closed.consts, in_atoms, {})
+    for o in outs:
+        if not isinstance(o, str):
+            raise UnsupportedOpError(
+                "model output is a compile-time constant — nothing to "
+                "compile")
+        interp.tg.output_names.append(o)
+    return interp.tg

@@ -1,0 +1,149 @@
+"""Paper tasks re-expressed as *plain JAX functions* for the tracing
+frontend (the paper's "user-defined model" input, §V-A).
+
+Each builder here returns ``(fn, example_inputs)`` where ``fn`` is an
+ordinary JAX callable — convs via ``lax.conv_general_dilated``, linears via
+``@``, pooling via ``lax.reduce_window`` — with GNN aggregation expressed
+through the ``repro.frontend.nn`` op library.  Weight initialization
+replays the exact RNG draw sequence of the declarative builders in
+``gnncv.tasks``, so the traced graphs carry bit-identical weights and the
+golden-parity harness (``tests/test_frontend_parity.py``) can assert that
+``trace -> canonicalize -> compile -> run`` reproduces the builder path
+bit-for-bit.
+
+b1 (few-shot, CNN+GNN with runtime affinity) and b6 (point cloud, GNN-only
+with COO max-aggregation) are re-expressed here; they cover every frontend
+code path the remaining tasks use (conv/pool/norm folding, vip + softmax +
+runtime-adjacency MP, COO MP, global pooling, concat).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.frontend import nn
+from repro.gnncv.graphs import knn_coo
+from repro.gnncv.tasks import SMALL_CONFIGS
+
+
+def _conv_w(rng, cin, cout, k):
+    """Mirrors ``cnn_zoo._conv``'s weight draw."""
+    return (rng.standard_normal((k, k, cin, cout)) *
+            np.sqrt(2.0 / (k * k * cin))).astype(np.float32)
+
+
+def _lin_w(rng, fin, fout):
+    """Mirrors ``tasks._lin``'s weight draw."""
+    return (rng.standard_normal((fin, fout)) *
+            np.sqrt(1.0 / fin)).astype(np.float32)
+
+
+def _fc_w(rng, fin, fout):
+    """Mirrors ``cnn_zoo._fc``'s weight draw."""
+    return (rng.standard_normal((fin, fout)) *
+            np.sqrt(2.0 / fin)).astype(np.float32)
+
+
+def _conv2d(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NCHW", "HWIO", "NCHW"))
+
+
+def _max_pool(x, window, stride):
+    ones = (1,) * (x.ndim - 2)
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, ones + (window, window),
+        ones + (stride, stride), "SAME")
+
+
+# -------------------------------------------------------- b1: few-shot ----
+def b1_fewshot_jax(*, n_way: int = 5, n_shot: int = 5, input_hw: int = 28,
+                   embed_ch: int = 64, gnn_dim: int = 400,
+                   gnn_blocks: int = 3, seed: int = 0):
+    """Plain-JAX twin of ``tasks.b1_fewshot`` — conv-4 embedding, then GNN
+    blocks whose dense affinity is a *traced* value (VIP + softmax feeding
+    ``message_passing`` with a runtime adjacency)."""
+    rng = np.random.default_rng(seed)
+    n_nodes = n_way * n_shot + 1
+    convs, cin = [], 1
+    for _ in range(4):
+        convs.append(_conv_w(rng, cin, embed_ch, 3))
+        cin = embed_ch
+    ones = np.ones(embed_ch, np.float32)
+    zeros = np.zeros(embed_ch, np.float32)
+    w_embed = _lin_w(rng, embed_ch, gnn_dim)
+    w_blocks = [_lin_w(rng, 2 * gnn_dim, gnn_dim) for _ in range(gnn_blocks)]
+    w_out = _lin_w(rng, gnn_dim, n_way)
+
+    def embed(h, w):
+        h = _conv2d(h, w) + zeros[None, :, None, None]
+        h = nn.batch_norm(h, ones, zeros, zeros, ones)
+        return jax.nn.relu(h)
+
+    def model(images):
+        h = embed(images, convs[0])
+        h = _max_pool(h, 2, 2)
+        h = embed(h, convs[1])
+        h = _max_pool(h, 2, 2)
+        h = embed(h, convs[2])
+        h = embed(h, convs[3])
+        h = h.mean((2, 3))                        # (N, embed_ch)
+        h = jax.nn.relu(h @ w_embed + np.zeros(gnn_dim, np.float32))
+        for w in w_blocks:
+            aff = nn.vip(h)                       # dense runtime (N, N)
+            aff = jax.nn.softmax(aff, axis=-1)
+            agg = nn.message_passing(aff, h)
+            cat = jnp.concatenate([h, agg], axis=1)
+            h = jax.nn.relu(cat @ w + np.zeros(gnn_dim, np.float32))
+        return h @ w_out + np.zeros(n_way, np.float32)
+
+    example = {"images": jax.ShapeDtypeStruct(
+        (n_nodes, 1, input_hw, input_hw), np.float32)}
+    return model, example
+
+
+# ------------------------------------------------------ b6: point cloud ---
+def b6_pointcloud_jax(*, n_points: int = 1024, knn: int = 20,
+                      classes: int = 40, dims=(64, 64, 128, 256),
+                      feat_out: int = 1024, seed: int = 0):
+    """Plain-JAX twin of ``tasks.b6_pointcloud`` — per-point MLPs with COO
+    max-aggregation message passing, global max pool, classifier head."""
+    rng = np.random.default_rng(seed)
+    coo = knn_coo(n_points, knn, seed=seed)
+    lins, fin = [], 3
+    for d in dims:
+        lins.append((_lin_w(rng, fin, d), np.zeros(d, np.float32)))
+        fin = d
+    w_feat = _lin_w(rng, fin, feat_out)
+    b_feat = np.zeros(feat_out, np.float32)
+    w_cls = _fc_w(rng, feat_out, classes)
+    b_cls = np.zeros(classes, np.float32)
+
+    def model(points):
+        h = points
+        for w, b in lins:
+            h = jax.nn.relu(h @ w + b)
+            h = nn.message_passing(coo, h, reduce="max")
+        h = jax.nn.relu(h @ w_feat + b_feat)
+        h = h.max(axis=0)                         # (feat_out,)
+        return h @ w_cls + b_cls
+
+    example = {"points": jax.ShapeDtypeStruct((n_points, 3), np.float32)}
+    return model, example
+
+
+TRACED_TASKS = {
+    "b1": b1_fewshot_jax,
+    "b6": b6_pointcloud_jax,
+}
+
+
+def build_traced_task(task: str, *, small: bool = False, **overrides):
+    """Trace one of the re-expressed tasks into a layer ``Graph`` — the
+    frontend counterpart of ``tasks.build_task``."""
+    from repro.frontend import to_graph
+    kwargs = dict(SMALL_CONFIGS[task]) if small else {}
+    kwargs.update(overrides)
+    fn, example = TRACED_TASKS[task](**kwargs)
+    return to_graph(fn, example, name=f"{task}_traced")

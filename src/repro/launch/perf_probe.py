@@ -8,7 +8,6 @@ byte/flop contributors — the dry-run profiler for §Perf iterations.
 Usage: python -m repro.launch.perf_probe --arch llama3.2-1b --shape train_4k
 """
 import argparse
-import re
 from collections import defaultdict, deque
 
 from repro.launch import hlo_analysis as ha
@@ -88,7 +87,6 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from repro.launch.dryrun import lower_cell  # noqa: E402 (XLA_FLAGS set)
-    import repro.launch.dryrun as dr
 
     # monkeypatch to capture the HLO text
     captured = {}

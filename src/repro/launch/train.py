@@ -18,12 +18,10 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import statistics
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.data import TokenPipeline

@@ -91,6 +91,16 @@ class GNNCVServeEngine:
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values())
 
+    def stats(self) -> dict:
+        """Serving counters plus the plan/runner-cache effectiveness
+        numbers (hits/misses) — after warmup a healthy engine shows
+        ``runner_hits`` growing and ``runner_misses`` frozen at one per
+        (task, bucket)."""
+        from repro.core.runtime.cache import cache_stats
+        return {"completed": self.completed, "steps": self.steps,
+                "pending": self.pending(), "tasks": len(self.graphs),
+                **cache_stats()}
+
     @staticmethod
     def _bucket(n: int, cap: int) -> int:
         b = 1

@@ -18,7 +18,6 @@ import json
 import os
 import shutil
 import signal
-import time
 
 import jax
 import jax.numpy as jnp

@@ -10,9 +10,7 @@ import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import configs

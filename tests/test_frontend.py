@@ -1,0 +1,228 @@
+"""Tracing-frontend behaviour tests: the op-vocabulary matrix (every
+``LAYER_KINDS`` entry either round-trips through trace->canonicalize or
+raises a clear ``UnsupportedOpError`` naming the jaxpr primitive), pattern
+canonicalization, and end-to-end trace->compile->run correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import frontend
+from repro.core import CompileOptions, build_runner, compile_graph
+from repro.core.ir import LAYER_KINDS
+from repro.frontend import UnsupportedOpError, nn
+
+RNG = np.random.default_rng(0)
+W_FF = RNG.standard_normal((8, 4)).astype(np.float32) * 0.1
+B_FF = RNG.standard_normal(4).astype(np.float32) * 0.1
+W_CONV = RNG.standard_normal((3, 3, 3, 4)).astype(np.float32) * 0.1
+ADJ = (RNG.random((6, 6)) < 0.5).astype(np.float32)
+COO = (np.array([0, 1, 2, 3], np.int32), np.array([1, 2, 3, 0], np.int32),
+       np.ones(4, np.float32), 6)
+
+_x2 = {"x": jax.ShapeDtypeStruct((6, 8), np.float32)}
+_x3 = {"x": jax.ShapeDtypeStruct((3, 4, 4), np.float32)}
+_x4 = {"x": jax.ShapeDtypeStruct((2, 3, 4, 4), np.float32)}
+_xy = {"x": jax.ShapeDtypeStruct((6, 8), np.float32),
+       "y": jax.ShapeDtypeStruct((8, 6), np.float32)}
+_xx = {"x": jax.ShapeDtypeStruct((6, 8), np.float32),
+       "y": jax.ShapeDtypeStruct((6, 8), np.float32)}
+
+
+def _conv(x):
+    return jax.lax.conv_general_dilated(
+        x, W_CONV, (1, 1), "SAME",
+        dimension_numbers=("NCHW", "HWIO", "NCHW"))
+
+
+# Every GraphBuilder layer kind -> (model fn, example inputs, the kinds the
+# traced graph must contain).  'flatten' deliberately maps to 'reshape':
+# the builder's flatten lowers to a reshape MatOp anyway, so the tracer
+# emits the canonical form directly.
+KIND_PROGRAMS = {
+    "input": (lambda x: x @ W_FF, _x2, {"input"}),
+    "linear": (lambda x: x @ W_FF + B_FF, _x2, {"linear"}),
+    "conv": (_conv, _x4, {"conv"}),
+    "mp": (lambda x: nn.message_passing(COO, x, reduce="max"), _x2, {"mp"}),
+    "vip": (lambda x: nn.vip(x), _x2, {"vip"}),
+    "dm": (lambda x: x.reshape(3, -1).T, _x3, {"dm"}),
+    "pool": (lambda x: jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "SAME"),
+        _x4, {"pool"}),
+    "norm": (lambda x: nn.batch_norm(
+        x, np.ones(8, np.float32), np.zeros(8, np.float32),
+        np.zeros(8, np.float32), np.ones(8, np.float32)), _x2, {"norm"}),
+    "act": (lambda x: jax.nn.relu(x), _x2, {"act"}),
+    "add": (lambda x, y: x + y, _xx, {"add"}),
+    "matmul": (lambda x, y: x @ y, _xy, {"matmul"}),
+    "concat": (lambda x, y: jnp.concatenate([x, y], axis=1), _xx,
+               {"concat"}),
+    "reshape": (lambda x: x.reshape(4, 12), _x2, {"reshape"}),
+    "softmax": (lambda x: jax.nn.softmax(x, axis=-1), _x2, {"softmax"}),
+    "globalpool": (lambda x: x.mean((1, 2)), _x3, {"globalpool"}),
+    "flatten": (lambda x: x.reshape(-1), _x2, {"reshape"}),
+}
+
+
+def test_matrix_covers_every_layer_kind():
+    assert set(KIND_PROGRAMS) == set(LAYER_KINDS)
+
+
+@pytest.mark.parametrize("kind", sorted(KIND_PROGRAMS))
+def test_layer_kind_round_trips(kind):
+    fn, example, expected = KIND_PROGRAMS[kind]
+    g = frontend.to_graph(fn, example, name=f"rt_{kind}")
+    kinds = {layer.kind for layer in g.toposorted()}
+    assert expected <= kinds, (kind, kinds)
+
+
+@pytest.mark.parametrize("kind", sorted(KIND_PROGRAMS))
+def test_layer_kind_programs_compile_and_run(kind):
+    """Each matrix entry must also survive the six passes and execute."""
+    fn, example, _ = KIND_PROGRAMS[kind]
+    plan = frontend.compile_model(fn, example,
+                                  CompileOptions(target="fpga"))
+    ins = {k: RNG.standard_normal(v.shape).astype(np.float32)
+           for k, v in example.items()}
+    out = build_runner(plan)(**ins)[0]
+    want = fn(**{k: jnp.asarray(v) for k, v in ins.items()})
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+
+
+# ----------------------------------------------------- unsupported ops ----
+@pytest.mark.parametrize("fn,prim", [
+    (lambda x: jnp.sort(x, axis=-1), "sort"),
+    (lambda x: x[jnp.array([1, 0])], "gather"),
+    (lambda x: jnp.cumsum(x, axis=0), "cumsum"),
+])
+def test_unsupported_primitive_is_named(fn, prim):
+    with pytest.raises(UnsupportedOpError, match=prim):
+        frontend.to_graph(fn, _x2)
+
+
+def test_scan_rejected_not_single_iterated():
+    """Loop-carrying sub-jaxprs (scan/while/cond) must raise, not be
+    inlined as one iteration — silent mis-lowering would be wrong
+    numerics, not an error."""
+    def fn(x):
+        out, _ = jax.lax.scan(lambda c, _: (c @ W_FF @ W_FF.T, None),
+                              x, None, length=3)
+        return out
+    with pytest.raises(UnsupportedOpError, match="scan"):
+        frontend.to_graph(fn, _x2)
+
+
+def test_runtime_adjacency_max_reduce_rejected():
+    def fn(x, a):
+        return nn.message_passing(a, x, reduce="max")
+    with pytest.raises(UnsupportedOpError, match="reduce='sum'"):
+        frontend.to_graph(fn, {"x": np.ones((6, 8), np.float32),
+                               "a": np.ones((6, 6), np.float32)})
+
+
+def test_leftover_elementwise_is_rejected_not_mislowered():
+    with pytest.raises(UnsupportedOpError, match="'mul'"):
+        frontend.to_graph(lambda x, y: x * y, _xx)
+
+
+# -------------------------------------------------- canonicalizations ----
+def test_bias_add_folds_into_linear():
+    g = frontend.to_graph(lambda x: x @ W_FF + B_FF, _x2)
+    (lin,) = [l for l in g.toposorted() if l.kind == "linear"]
+    np.testing.assert_array_equal(lin.weights["b"], B_FF)
+    assert not any(l.kind == "add" for l in g.toposorted())
+
+
+def test_handwritten_softmax_is_recognized():
+    def fn(x):
+        e = jnp.exp(x)
+        return e / e.sum(axis=1, keepdims=True)
+    g = frontend.to_graph(fn, _x2)
+    kinds = [l.kind for l in g.toposorted()]
+    assert kinds == ["input", "softmax"]
+
+
+def test_dense_adjacency_matmul_becomes_mp():
+    g = frontend.to_graph(lambda x: ADJ @ x, {"x": np.ones((6, 8),
+                                                           np.float32)})
+    (mp,) = [l for l in g.toposorted() if l.kind == "mp"]
+    np.testing.assert_array_equal(mp.weights["adj"], ADJ)
+
+
+def test_x_xt_becomes_vip():
+    g = frontend.to_graph(lambda x: x @ x.T, _x2)
+    assert [l.kind for l in g.toposorted()] == ["input", "vip"]
+
+
+def test_dm_chains_classified_for_fusion():
+    """patch_to_node / node_to_channel chains must become dm layers so
+    Step-1 DM fusion can fold them into the consuming compute layer."""
+    w = RNG.standard_normal((3, 5)).astype(np.float32)
+
+    def fn(x):                                 # (3, 4, 4) CNN layout
+        nodes = x.reshape(3, -1).T             # -> (16, 3) GNN layout
+        h = nodes @ w                          # (16, 5)
+        back = h.T.reshape(5, 4, 4)            # -> CNN layout
+        return back
+    g = frontend.to_graph(fn, _x3)
+    modes = [l.params["mode"] for l in g.toposorted() if l.kind == "dm"]
+    assert modes == ["patch_to_node", "node_to_channel"]
+    plan = compile_graph(g, CompileOptions(target="fpga"))
+    assert any(op.kind == "identity" for op in plan.ops)   # DM fused
+
+
+def test_traced_graph_records_frontend_provenance():
+    g = frontend.to_graph(lambda x: x @ W_FF, _x2)
+    assert g.meta["frontend"] == "tracer"
+    plan = compile_graph(g, CompileOptions(target="fpga"))
+    assert plan.meta["frontend"] == "tracer"
+
+
+# ------------------------------------------------------- end to end ------
+def test_traced_cnn_gnn_model_matches_direct_jax():
+    """The frontend_quickstart model: traced+compiled output must agree
+    with running the plain JAX function directly."""
+    rng = np.random.default_rng(3)
+    w1 = rng.standard_normal((3, 3, 1, 4)).astype(np.float32) * 0.2
+    b1 = rng.standard_normal(4).astype(np.float32) * 0.2
+    w2 = rng.standard_normal((4, 8)).astype(np.float32) * 0.2
+    w3 = rng.standard_normal((16, 5)).astype(np.float32) * 0.2
+
+    def model(images):
+        h = jax.lax.conv_general_dilated(
+            images, w1, (1, 1), "SAME",
+            dimension_numbers=("NCHW", "HWIO", "NCHW"))
+        h = jax.nn.relu(h + b1[None, :, None, None])
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                  (1, 1, 2, 2), (1, 1, 2, 2), "SAME")
+        h = h.mean((2, 3))
+        h = jax.nn.relu(h @ w2)
+        aff = jax.nn.softmax(nn.vip(h), axis=-1)
+        agg = nn.message_passing(aff, h)
+        return jnp.concatenate([h, agg], axis=1) @ w3
+
+    x = rng.standard_normal((6, 1, 8, 8)).astype(np.float32)
+    g = frontend.to_graph(model, {"images": x}, name="quickstart")
+    for opts in (CompileOptions(target="fpga"),
+                 CompileOptions(target="fpga", fuse=False),
+                 CompileOptions(target="tpu", sparsity_aware=False)):
+        plan = compile_graph(g, opts)
+        out = np.asarray(build_runner(plan)(images=x)[0])
+        np.testing.assert_allclose(out, np.asarray(model(jnp.asarray(x))),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_frontend_nn_ops_run_under_jit():
+    """The custom primitives must also execute inside jax.jit (mlir
+    lowering registered), so user models stay ordinary JAX code."""
+    x = jnp.asarray(RNG.standard_normal((6, 8)).astype(np.float32))
+
+    def fn(x):
+        h = nn.message_passing(COO, x, reduce="max")
+        h = nn.batch_norm(h, np.ones(8, np.float32),
+                          np.zeros(8, np.float32),
+                          np.zeros(8, np.float32), np.ones(8, np.float32))
+        return nn.vip(h)
+    np.testing.assert_allclose(np.asarray(jax.jit(fn)(x)),
+                               np.asarray(fn(x)), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,101 @@
+"""Golden-parity harness for the tracing frontend (ISSUE 2 acceptance).
+
+b1 and b6 re-expressed as plain JAX functions (``gnncv.jax_tasks``) must
+compile through the *unchanged* six-pass pipeline into plans that are
+structurally and numerically indistinguishable from the declarative
+builder's: same layer-kind sequence, same fused MatOp/primitive sequence
+(Step-1 fusion and Step-4 sparsity mapping preserved), and bit-for-bit
+identical runner outputs — including against the pinned goldens under
+``tests/golden/``."""
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import CompileOptions, build_runner, compile_graph
+from repro.core.executor import random_inputs, stack_inputs
+from repro.gnncv.jax_tasks import build_traced_task
+from repro.gnncv.tasks import build_task
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+GOLDEN_SEED = 7
+OPTS = CompileOptions(target="fpga")
+TASKS = ["b1", "b6"]
+
+
+def _pair(task):
+    return (compile_graph(build_task(task, small=True), OPTS),
+            compile_graph(build_traced_task(task, small=True), OPTS))
+
+
+@pytest.mark.parametrize("task", TASKS)
+def test_traced_graph_matches_builder_structure(task):
+    gb = build_task(task, small=True)
+    gt = build_traced_task(task, small=True)
+    assert [l.kind for l in gt.toposorted()] == \
+        [l.kind for l in gb.toposorted()]
+    assert gt.meta["frontend"] == "tracer"
+
+
+@pytest.mark.parametrize("task", TASKS)
+def test_traced_plan_keeps_fused_matops(task):
+    """Canonicalization must preserve Step-1/Step-4 behaviour, not just
+    numerics: the traced plan's op-kind + primitive sequence equals the
+    builder plan's, conv/mm ops keep their fused activations, and the
+    GNN aggregations stay mapped to conv/mp-style MatOps."""
+    pb, pt = _pair(task)
+    assert [(o.kind, o.primitive) for o in pt.ops] == \
+        [(o.kind, o.primitive) for o in pb.ops]
+    assert [o.attrs.get("fused_act") for o in pt.ops] == \
+        [o.attrs.get("fused_act") for o in pb.ops]
+    if task == "b1":
+        convs = [o for o in pt.ops if o.kind == "conv"]
+        assert convs and all(o.attrs["fused_act"] == "relu" for o in convs)
+        assert any(o.kind == "mm" and
+                   o.attrs["weight_side"] == "left_runtime"
+                   for o in pt.ops)            # runtime-affinity MP -> DDMM
+        assert not any(o.kind == "ew" and "norm" in str(o.attrs.get("fn"))
+                       for o in pt.ops)        # batchnorm folded away
+    else:
+        mps = [o for o in pt.ops if o.kind == "mm"
+               and o.attrs.get("weight_side") == "left_coo"]
+        assert mps and all(o.primitive == "SpDMM" for o in mps)
+    assert pt.meta["fused_layers"] == pb.meta["fused_layers"]
+
+
+@pytest.mark.parametrize("task", TASKS)
+def test_traced_outputs_bit_identical_to_builder(task):
+    pb, pt = _pair(task)
+    assert pt.input_names == pb.input_names
+    assert pt.meta["input_shapes"] == pb.meta["input_shapes"]
+    ins = random_inputs(pb, seed=GOLDEN_SEED)
+    outs_b = build_runner(pb)(**ins)
+    outs_t = build_runner(pt)(**ins)
+    assert len(outs_b) == len(outs_t)
+    for ob, ot in zip(outs_b, outs_t):
+        np.testing.assert_array_equal(np.asarray(ob), np.asarray(ot))
+
+
+@pytest.mark.parametrize("task", TASKS)
+def test_traced_outputs_match_pinned_goldens(task):
+    """Transitively pins the traced path to the pre-refactor seed executor
+    numerics (same goldens as tests/test_runtime.py)."""
+    plan = compile_graph(build_traced_task(task, small=True), OPTS)
+    outs = build_runner(plan)(**random_inputs(plan, seed=GOLDEN_SEED))
+    gold = np.load(GOLDEN_DIR / f"{task}.npz")
+    assert len(outs) == len(gold.files)
+    for i, out in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(out), gold[f"out{i}"])
+
+
+def test_traced_plan_serves_batched():
+    """A traced plan is a first-class citizen of the batched runtime: the
+    batch=3 runner reproduces batch=1 runs bit-for-bit (the same contract
+    tests/test_runtime.py pins for builder plans)."""
+    plan = compile_graph(build_traced_task("b6", small=True), OPTS)
+    samples = [random_inputs(plan, seed=s) for s in range(3)]
+    one = build_runner(plan, batch=1)
+    single = [np.asarray(one(**stack_inputs([s]))[0][0]) for s in samples]
+    batched = build_runner(plan, batch=3)(**stack_inputs(samples))[0]
+    for i, ref in enumerate(single):
+        np.testing.assert_array_equal(np.asarray(batched[i]), ref)

@@ -3,7 +3,6 @@
 Sweeps shapes (aligned + ragged) and dtypes per the brief; tolerances account
 for fp32-accumulation ordering differences only.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

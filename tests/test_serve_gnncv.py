@@ -133,3 +133,42 @@ def test_cached_runner_is_cached(graphs):
     assert cached_runner(g, OPTS, batch=4) is not r1
     stats = cache_stats()
     assert stats["plans"] == 1 and stats["runners"] == 2
+
+
+def test_cache_hit_miss_counters(graphs):
+    """Cache *effectiveness* is observable: misses count one compile/trace
+    each, hits count the repeats (previously only sizes were reported)."""
+    clear_caches()
+    g = graphs["b6"]
+    cached_runner(g, OPTS, batch=2)
+    s = cache_stats()
+    # one runner miss; its plan compiled once (engine fixture plans aside)
+    assert s["runner_misses"] == 1 and s["runner_hits"] == 0
+    assert s["plan_misses"] == 1
+    for _ in range(3):
+        cached_runner(g, OPTS, batch=2)
+    s = cache_stats()
+    assert s["runner_hits"] == 3 and s["runner_misses"] == 1
+    clear_caches()
+    assert cache_stats()["runner_hits"] == 0
+
+
+def test_engine_stats_surface_cache_effectiveness(graphs):
+    """After warmup, repeat traffic must show runner hits growing while
+    misses stay frozen at one per (task, bucket)."""
+    clear_caches()
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=4)
+    plan = eng.plans["b6"]
+    for s in range(4):
+        eng.submit("b6", **request_inputs(plan, seed=s))
+    eng.run()
+    warm = eng.stats()
+    assert warm["completed"] == 4 and warm["runner_misses"] >= 1
+    for s in range(4):
+        eng.submit("b6", **request_inputs(plan, seed=10 + s))
+    eng.run()
+    hot = eng.stats()
+    assert hot["completed"] == 8
+    assert hot["runner_misses"] == warm["runner_misses"]   # no recompiles
+    assert hot["runner_hits"] > warm["runner_hits"]
+    assert hot["pending"] == 0 and hot["tasks"] == 3
