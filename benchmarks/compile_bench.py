@@ -1,7 +1,14 @@
 """Compile-path latency: graph construction -> six passes -> first run,
-for b1/b6 through *both* frontends (declarative builder vs. JAX tracer).
+for all six paper tasks through *both* frontends (declarative builder vs.
+JAX tracer).
 
     PYTHONPATH=src python -m benchmarks.compile_bench [--small] [--iters N]
+                                                      [--quick]
+
+``--quick`` is the CI smoke mode: one iteration, skip the first-run jit
+phase (by far the slowest), keep the full six-task frontend sweep — a
+regression anywhere in trace/canonicalize (new unsupported primitive,
+broken pattern match) still fails fast.
 
 Three phases per (task, frontend):
 
@@ -26,7 +33,7 @@ from repro.core.executor import random_inputs
 from repro.gnncv.jax_tasks import build_traced_task
 from repro.gnncv.tasks import build_task
 
-TASKS = ("b1", "b6")
+TASKS = ("b1", "b2", "b3-r50", "b4", "b5", "b6")
 OPTS = CompileOptions(target="fpga")
 
 
@@ -40,10 +47,13 @@ def _time_ms(fn, iters: int):
     return best, result
 
 
-def bench(task: str, use_tracer: bool, *, small: bool, iters: int):
+def bench(task: str, use_tracer: bool, *, small: bool, iters: int,
+          first_run: bool = True):
     builder = build_traced_task if use_tracer else build_task
     build_ms, graph = _time_ms(lambda: builder(task, small=small), iters)
     compile_ms, plan = _time_ms(lambda: compile_graph(graph, OPTS), iters)
+    if not first_run:
+        return build_ms, compile_ms, float("nan"), len(plan.ops)
     ins = random_inputs(plan, seed=0)
     t0 = time.perf_counter()
     out = build_runner(plan)(**ins)
@@ -52,13 +62,13 @@ def bench(task: str, use_tracer: bool, *, small: bool, iters: int):
     return build_ms, compile_ms, first_ms, len(plan.ops)
 
 
-def run(small: bool = True, iters: int = 3):
+def run(small: bool = True, iters: int = 3, first_run: bool = True):
     rows = []
     for task in TASKS:
         for frontend_name, use_tracer in (("builder", False),
                                           ("tracer", True)):
             b, c, f, n_ops = bench(task, use_tracer, small=small,
-                                   iters=iters)
+                                   iters=iters, first_run=first_run)
             rows.append((task, frontend_name, n_ops, f"{b:.1f}",
                          f"{c:.1f}", f"{f:.1f}", f"{b + c + f:.1f}"))
     emit(rows, ["task", "frontend", "ops", "build_ms", "compile_ms",
@@ -72,5 +82,10 @@ if __name__ == "__main__":
     ap.add_argument("--full", dest="small", action="store_false",
                     help="paper-scale graphs (slow)")
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 1 iteration, skip the first-run phase")
     args = ap.parse_args()
-    run(small=args.small, iters=args.iters)
+    if args.quick:
+        run(small=True, iters=1, first_run=False)
+    else:
+        run(small=args.small, iters=args.iters)

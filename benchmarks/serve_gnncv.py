@@ -1,6 +1,9 @@
 """Throughput of the micro-batching GNN-CV serving engine vs one-at-a-time
-execution over a mixed b1/b4/b6 request stream, plus the liveness-planner's
-peak-working-set reduction per task.
+execution over a mixed request stream of *builder* models (b1/b4/b6) and
+*traced* user-defined JAX models (b2/b4 via ``frontend.compile_model``'s
+path) — traced plans are first-class serving citizens, sharing the same
+plan/runner cache whose hit/miss counters the run reports.  Also prints
+the liveness-planner's peak-working-set reduction per task.
 
     PYTHONPATH=src python -m benchmarks.serve_gnncv [--requests N]
                                                     [--max-batch B]
@@ -20,12 +23,15 @@ import numpy as np
 
 from repro.core import CompileOptions
 from repro.core.runtime.cache import cached_plan, cached_runner
+from repro.gnncv.jax_tasks import build_traced_task
 from repro.gnncv.tasks import SMALL_CONFIGS, build_task, request_inputs
 from repro.serve import GNNCVServeEngine
 
 from benchmarks.common import emit
 
-MIX = ("b1", "b4", "b6")
+BUILDER_MIX = ("b1", "b4", "b6")
+TRACED_MIX = ("b2", "b4")                   # served as "<task>@traced"
+MIX = BUILDER_MIX + tuple(f"{t}@traced" for t in TRACED_MIX)
 
 
 def make_stream(plans, n):
@@ -67,7 +73,11 @@ def bench_engine(graphs, options, stream, max_batch):
 def run(requests: int = 96, max_batch: int = 8):
     options = CompileOptions(target="fpga")
     all_graphs = {t: build_task(t, small=True) for t in sorted(SMALL_CONFIGS)}
-    graphs = {t: all_graphs[t] for t in MIX}
+    graphs = {t: all_graphs[t] for t in BUILDER_MIX}
+    # traced user-defined JAX models registered *next to* builder models —
+    # the engine (and the plan/runner cache) cannot tell them apart
+    graphs.update({f"{t}@traced": build_traced_task(t, small=True)
+                   for t in TRACED_MIX})
     plans = {t: cached_plan(g, options) for t, g in graphs.items()}
     stream = make_stream(plans, requests)
 
@@ -79,19 +89,22 @@ def run(requests: int = 96, max_batch: int = 8):
            f"{len(stream) / eng_s:.1f}", stats["steps"]]],
          ["mode", "wall_ms", "req_per_s", "dispatches"])
     # cache effectiveness (cumulative since process start): misses are the
-    # warmup compiles (one per task x bucket); every timed dispatch is a hit
+    # warmup compiles (one per task x bucket, builder and traced alike);
+    # every timed dispatch is a hit
     emit([[stats["runner_hits"], stats["runner_misses"],
            stats["plan_hits"], stats["plan_misses"]]],
          ["runner_hits", "runner_misses", "plan_hits", "plan_misses"])
 
     rows = []
-    for task, g in all_graphs.items():
+    for task, g in {**all_graphs,
+                    **{t: graphs[t] for t in MIX if "@" in t}}.items():
         plan = cached_plan(g, options)
         freed = plan.peak_live_bytes(free_dead=True)
         kept = plan.peak_live_bytes(free_dead=False)
-        rows.append([task, freed, kept, f"{kept / freed:.2f}x"])
-    emit(rows, ["task", "peak_live_bytes_freed", "peak_live_bytes_kept",
-                "reduction"])
+        rows.append([task, plan.meta["frontend"], freed, kept,
+                     f"{kept / freed:.2f}x"])
+    emit(rows, ["task", "frontend", "peak_live_bytes_freed",
+                "peak_live_bytes_kept", "reduction"])
 
 
 def main():

@@ -13,9 +13,15 @@ import jax.numpy as jnp
 from repro.core.plan import MatOp
 from repro.core.runtime.registry import register_op
 
+# Single source of truth for the leaky_relu slope: the tracing frontend's
+# pattern matcher (frontend/canonicalize.py) only accepts traced models
+# whose slope equals this value, because Step-1 act fusion carries just the
+# activation *name* into the epilogue.
+LEAKY_SLOPE = 0.2
+
 ACTIVATIONS = {"relu": jax.nn.relu, "gelu": jax.nn.gelu, "silu": jax.nn.silu,
                "tanh": jnp.tanh, "sigmoid": jax.nn.sigmoid,
-               "leaky_relu": lambda x: jax.nn.leaky_relu(x, 0.2)}
+               "leaky_relu": lambda x: jax.nn.leaky_relu(x, LEAKY_SLOPE)}
 
 
 def apply_epilogue(out, op: MatOp, env):

@@ -26,6 +26,7 @@ from repro.core.ir import Graph
 from repro.core.plan import ExecutionPlan
 from repro.frontend import nn                                  # noqa: F401
 from repro.frontend.canonicalize import canonicalize           # noqa: F401
+from repro.frontend.lint import lint                           # noqa: F401
 from repro.frontend.trace import (TraceGraph, TraceNode,       # noqa: F401
                                   UnsupportedOpError, trace_model)
 

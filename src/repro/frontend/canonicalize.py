@@ -6,12 +6,20 @@ six-pass compiler sees the same graphs the declarative ``GraphBuilder``
 produces and Step-1 fusion / Step-4 sparsity mapping fire unchanged:
 
   * ``exp(x - max(x)) / sum(exp(..))`` chains  -> one ``softmax`` layer;
+  * ``select(mask, -inf, x) .. softmax .. select(mask, 0, s)`` (the
+    ``jnp.where`` masking idiom)               -> one *masked* softmax;
   * ``max(x, 0)`` / ``tanh`` / ``logistic``    -> ``act`` layers;
+  * ``select(x >= 0, a*x, x)``                 -> ``leaky_relu`` act layers;
   * ``add(conv|linear, const-vector)``         -> folded bias weights;
   * ``reduce_sum / n`` and ``reduce_window_sum / k**2`` -> mean reductions;
   * spatial reductions                         -> ``globalpool`` layers;
   * ``dot_general`` -> ``linear`` (const rhs), dense ``mp`` (const lhs),
     ``vip`` (``x @ x.T``), or runtime ``matmul``;
+  * ``reshape(C·T,V) @ adjᵀ -> reshape(C,T,V)`` (static adjacency on the
+    *right* operand — ST-GCN's layout)         -> a dense ``mp`` layer on
+    the 3-D feature tensor, matching the builder's ``(C·T,V) @ Aᵀ`` MatOp;
+  * ``x[None] -> conv -> squeeze`` rank-4 wrappers around per-sample 3-D
+    feature maps                               -> convs on ``(C, H, W)``;
   * ``reshape``/``transpose`` chains between the CNN ``(C, H, W)`` and GNN
     ``(N, F)`` layouts -> ``dm`` layers, so Step-1 DM fusion still applies.
 
@@ -23,6 +31,10 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.ir import Graph, Layer
+# The runtime's fixed leaky_relu slope — the only slope a leaky_relu
+# pattern can canonicalize to without changing numerics under Step-1 act
+# fusion (the fused epilogue carries just the activation *name*).
+from repro.core.runtime.elementwise import LEAKY_SLOPE as _LEAKY_SLOPE
 from repro.frontend.trace import TraceGraph, TraceNode, UnsupportedOpError
 
 _VIEW_OPS = frozenset({"bcast", "reshape"})
@@ -76,6 +88,15 @@ class _Rewriter:
     def node(self, ref) -> TraceNode | None:
         return self.tg.nodes.get(ref) if isinstance(ref, str) else None
 
+    def absorb(self, into: TraceNode, *names: str) -> None:
+        """Fold the jaxpr provenance of pattern partners (about to die)
+        into the surviving node, so ``frontend.lint`` can show every
+        equation a canonical layer was recovered from."""
+        for n in names:
+            partner = self.tg.nodes.get(n)
+            if partner is not None and partner is not into:
+                into.src.extend(partner.src)
+
     def _peel_views(self, ref, cons):
         """Follow single-consumer bcast/reshape nodes upward; returns the
         root ref and the list of peeled view-node names."""
@@ -99,6 +120,9 @@ class _Rewriter:
             consts = [a for a in node.inputs if _scalar(a) == want]
             refs = node.refs()
             if consts and len(refs) == 1:
+                target = self.node(refs[0])
+                if target is not None:
+                    self.absorb(target, node.name)
                 self.alias[node.name] = refs[0]
                 self.dead.add(node.name)
         self.flush()
@@ -139,6 +163,7 @@ class _Rewriter:
                     extra_dead = [sub.name, m.name, *mchain]
             div.op, div.inputs = "softmax", [head]
             div.params = {"axis": axis}
+            self.absorb(div, exp.name, s.name, *chain, *extra_dead)
             self.dead.update([exp.name, s.name, *chain, *extra_dead])
         self.flush()
 
@@ -162,11 +187,13 @@ class _Rewriter:
                     div.inputs = [src.inputs[0]]
                     div.params = {"op": "avg", "axes": src.params["axes"],
                                   "in_shape": src.params["in_shape"]}
+                    self.absorb(div, src.name)
                     self.dead.add(src.name)
             elif src.op == "pool_sum" and src.params["window"] ** 2 == n:
                 div.op = "pool"
                 div.inputs = [src.inputs[0]]
                 div.params = {**src.params, "pool": "avg"}
+                self.absorb(div, src.name)
                 self.dead.add(src.name)
         self.flush()
 
@@ -183,6 +210,156 @@ class _Rewriter:
                     and not np.any(np.asarray(consts[0])):
                 node.op, node.inputs = "act", refs
                 node.params = {"fn": "relu"}
+        self.flush()
+
+    def match_leaky_relu(self) -> None:
+        """``select(x >= 0, slope * x, x)`` — the body of
+        ``jax.nn.leaky_relu`` after its custom_jvp wrapper is inlined —
+        becomes a ``leaky_relu`` act layer (b2's ML-GCN stack)."""
+        cons = self.consumers()
+        for sel in list(self.tg.nodes.values()):
+            if sel.op != "select" or len(sel.inputs) != 3:
+                continue
+            pred, on_neg, on_pos = sel.inputs
+            cmp = self.node(pred)
+            if cmp is None or cmp.op != "cmp" \
+                    or cmp.params["fn"] not in ("ge", "gt") \
+                    or not isinstance(cmp.inputs[0], str) \
+                    or _scalar(cmp.inputs[1]) != 0.0:
+                continue
+            x = cmp.inputs[0]
+            if on_pos != x:
+                continue
+            mul = self.node(on_neg)
+            if mul is None or mul.op != "ew" or mul.params["fn"] != "mul" \
+                    or mul.refs() != [x]:
+                continue
+            slopes = [_scalar(a) for a in mul.inputs if _is_const(a)]
+            if len(slopes) != 1 or slopes[0] is None:
+                continue
+            if len(cons[cmp.name]) != 1 or len(cons[mul.name]) != 1:
+                continue
+            if abs(slopes[0] - _LEAKY_SLOPE) > 1e-6:
+                raise UnsupportedOpError(
+                    f"leaky_relu pattern ('select_n') with slope "
+                    f"{slopes[0]:g} has no layer equivalent — the runtime's "
+                    f"'leaky_relu' activation is fixed at {_LEAKY_SLOPE}")
+            sel.op, sel.inputs, sel.params = "act", [x], {"fn": "leaky_relu"}
+            self.absorb(sel, cmp.name, mul.name)
+            self.dead.update([cmp.name, mul.name])
+        self.flush()
+
+    def match_masked_softmax(self) -> None:
+        """The ``jnp.where`` masking idiom around a (already-matched)
+        softmax — ``where(mask, x, -inf)`` in, ``where(mask, s, 0)`` out,
+        with one static boolean mask — becomes a single masked-softmax
+        layer (GAT-style attention over a fixed neighborhood)."""
+        cons = self.consumers()
+        for sm in list(self.tg.nodes.values()):
+            if sm.op != "softmax" or "axis" not in sm.params:
+                continue
+            sel_in = self.node(sm.inputs[0])
+            if sel_in is None or sel_in.op != "select" \
+                    or len(sel_in.inputs) != 3:
+                continue
+            mask, neg, x = sel_in.inputs
+            if not (_is_const(mask) and _is_const(neg)
+                    and isinstance(x, str)):
+                continue
+            mask_arr = np.asarray(mask)
+            if mask_arr.dtype != np.bool_ \
+                    or not np.all(np.isneginf(np.asarray(neg))):
+                continue
+            users = cons[sm.name]
+            if len(users) != 1 or users[0] == "<output>" \
+                    or len(cons[sel_in.name]) != 1:
+                continue
+            sel_out = self.tg.nodes[users[0]]
+            if sel_out.op != "select" or len(sel_out.inputs) != 3:
+                continue
+            omask, zeros, src = sel_out.inputs
+            if src != sm.name or not (_is_const(omask) and _is_const(zeros)):
+                continue
+            if not np.array_equal(np.asarray(omask), mask_arr) \
+                    or np.any(np.asarray(zeros)):
+                continue
+            sel_out.op, sel_out.inputs = "softmax", [x]
+            sel_out.params = {"axis": sm.params["axis"]}
+            sel_out.weights = {"mask": mask_arr.astype(np.float32)}
+            self.absorb(sel_out, sel_in.name, sm.name)
+            self.dead.update([sel_in.name, sm.name])
+        self.flush()
+
+    def match_adj_right_mp(self) -> None:
+        """Static adjacency on the *right* operand: the raw-jnp spelling of
+        ST-GCN message passing, ``(x.reshape(C·T, V) @ A.T).reshape(C, T,
+        V)``, becomes a dense ``mp`` layer over the 3-D feature tensor —
+        the exact ``(C·T,V) @ Aᵀ`` MatOp the builder's ``mp(adj=...)``
+        lowers to (the left-operand case, ``adj @ x``, is handled by
+        ``match_dots``)."""
+        cons = self.consumers()
+        for dot in list(self.tg.nodes.values()):
+            if dot.op != "dot":
+                continue
+            lhs, rhs = dot.inputs
+            if not _is_const(rhs):
+                continue
+            m = np.asarray(rhs)
+            if m.ndim != 2 or m.shape[0] != m.shape[1]:
+                continue
+            if (dot.params["lc"], dot.params["rc"]) != (1, 0):
+                continue
+            r1 = self.node(lhs)
+            if r1 is None or r1.op != "reshape" or len(cons[r1.name]) != 1:
+                continue
+            src = self.node(r1.inputs[0])
+            if src is None or len(src.shape) != 3:
+                continue
+            c, t, v = src.shape
+            if v != m.shape[0] or r1.params["shape"] != (c * t, v):
+                continue
+            users = cons[dot.name]
+            if len(users) != 1 or users[0] == "<output>":
+                continue
+            r2 = self.tg.nodes[users[0]]
+            if r2.op != "reshape" or r2.params["shape"] != (c, t, v):
+                continue
+            r2.op, r2.inputs = "mp", [r1.inputs[0]]
+            r2.params = {"mode": "dense", "reduce": "sum"}
+            # executed product is x2 @ M, i.e. (C·T,V) @ adjᵀ with adj = Mᵀ
+            r2.weights = {"adj": np.ascontiguousarray(m.T)}
+            self.absorb(r2, r1.name, dot.name)
+            self.dead.update([r1.name, dot.name])
+        self.flush()
+
+    def fold_conv_batch1(self) -> None:
+        """Per-sample models wrap 3-D ``(C, H, W)`` feature maps to rank 4
+        for ``lax.conv`` (``x[None] -> conv -> squeeze``); fold the wrapper
+        away so the conv layer consumes the 3-D layout directly — exactly
+        the builder's per-sample conv (b2-b5's CNN portions)."""
+        cons = self.consumers()
+        for conv in list(self.tg.nodes.values()):
+            if conv.op != "conv" or len(conv.shape) != 4 \
+                    or conv.shape[0] != 1:
+                continue
+            src = self.node(conv.inputs[0])
+            if src is None or src.op not in _VIEW_OPS \
+                    or len(cons[src.name]) != 1:
+                continue
+            inner = self.node(src.inputs[0])
+            if inner is None or tuple(src.shape) != (1, *inner.shape):
+                continue
+            users = cons[conv.name]
+            if len(users) != 1 or users[0] == "<output>":
+                continue
+            sq = self.tg.nodes[users[0]]
+            if sq.op != "reshape" or sq.params["shape"] != conv.shape[1:]:
+                continue
+            conv.inputs[0] = src.inputs[0]
+            conv.shape = conv.shape[1:]
+            self.absorb(conv, src.name, sq.name)
+            self.alias[sq.name] = conv.name
+            self.dead.update([src.name, sq.name])
         self.flush()
 
     def match_dots(self) -> None:
@@ -219,6 +396,7 @@ class _Rewriter:
                         and cons[t.name] == [node.name]:
                     node.op, node.inputs = "vip", [lhs]
                     node.params = {"mode": "dense"}
+                    self.absorb(node, t.name)
                     self.dead.add(t.name)
                 elif lc == len(self.node(lhs).shape) - 1 and rc == 0:
                     node.op, node.params = "matmul", {}
@@ -251,6 +429,7 @@ class _Rewriter:
                            if i != len(padded) + chan_axis):
                 continue
             prod.weights["b"] = np.asarray(consts[0]).reshape(chan)
+            self.absorb(prod, node.name)
             self.alias[node.name] = prod.name
             self.dead.add(node.name)
         self.flush()
@@ -274,6 +453,7 @@ class _Rewriter:
                     t = users[0]
                     t.op, t.inputs = "dm", [node.inputs[0]]
                     t.params = {"mode": "patch_to_node", "patch": 1}
+                    self.absorb(t, node.name)
                     self.dead.add(node.name)
                 else:
                     node.op = "dm"
@@ -294,6 +474,7 @@ class _Rewriter:
                     user.op, user.inputs = "dm", [node.inputs[0]]
                     user.params = {"mode": "node_to_channel", "patch": 1,
                                    "hw": tuple(user.params["shape"][1:])}
+                    self.absorb(user, node.name)
                     self.dead.add(node.name)
         self.flush()
 
@@ -319,6 +500,7 @@ class _Rewriter:
                 continue
             src = self.node(node.inputs[0])
             if src is not None and src.shape == node.params["shape"]:
+                self.absorb(src, node.name)
                 self.alias[node.name] = node.inputs[0]
                 self.dead.add(node.name)
         self.flush()
@@ -336,12 +518,20 @@ _EMIT_UNSUPPORTED = {
                           "window-area division)",
     "bcast": lambda n: "'broadcast_in_dim'",
     "transpose": lambda n: "'transpose'",
+    "cmp": lambda n: f"comparison '{n.params['fn']}' (only the leaky_relu "
+                     f"and masked-softmax select patterns are recognized)",
+    "select": lambda n: "'select_n' (a where/select that is neither the "
+                        "leaky_relu nor the masked-softmax pattern)",
 }
 
 
 def _emit(tg: TraceGraph) -> Graph:
     g = Graph(tg.name)
-    g.meta = {"frontend": "tracer"}
+    # 'equations': layer name -> the jaxpr equations it was recovered from
+    # (pattern partners folded in by the rewriter) — frontend.lint's input.
+    g.meta = {"frontend": "tracer",
+              "equations": {n.name: tuple(n.src)
+                            for n in tg.nodes.values()}}
 
     def add(node: TraceNode, kind: str, params: dict,
             inputs=None, out_shape=None) -> None:
@@ -385,7 +575,11 @@ def _emit(tg: TraceGraph) -> Graph:
         elif node.op == "act":
             add(node, "act", {"fn": node.params["fn"]})
         elif node.op == "softmax":
-            add(node, "softmax", {"axis": node.params["axis"]})
+            if "segments" in node.weights:
+                add(node, "softmax",
+                    {"num_segments": node.params["num_segments"]})
+            else:
+                add(node, "softmax", {"axis": node.params["axis"]})
         elif node.op == "pool":
             add(node, "pool", {"window": node.params["window"],
                                "stride": node.params["stride"],
@@ -421,9 +615,13 @@ def canonicalize(tg: TraceGraph) -> Graph:
     """Rewrite a ``TraceGraph`` into a compilable layer ``Graph``."""
     rw = _Rewriter(tg)
     rw.drop_reduce_guards()
+    rw.fold_conv_batch1()
     rw.match_softmax()
+    rw.match_masked_softmax()     # needs the matched softmax node
     rw.match_means()
+    rw.match_leaky_relu()
     rw.match_acts()
+    rw.match_adj_right_mp()       # must win over match_dots' linear case
     rw.match_dots()
     rw.fold_biases()
     rw.match_dm()

@@ -1,0 +1,44 @@
+"""Trace-provenance linter: which jaxpr equations produced each layer.
+
+``jax.make_jaxpr`` shreds a model into primitive soup and the canonicalizer
+reassembles it; when a model mis-traces (a pattern almost-matches and a
+layer comes out as the wrong kind, or an ``UnsupportedOpError`` points at a
+primitive the user never wrote), the first question is *which equations did
+this layer come from?*  Every ``TraceNode`` records the jaxpr equations it
+was lifted from, pattern rewrites fold their partners' provenance into the
+surviving node, and ``_emit`` carries the result in
+``graph.meta["equations"]`` — ``lint`` renders it per layer.
+"""
+from __future__ import annotations
+
+from repro.core.ir import Graph
+
+
+def lint(graph: Graph) -> str:
+    """Human-readable provenance report for a traced ``Graph``.
+
+    One line per layer: name, kind, and the jaxpr equations (primitive name
+    + result shape) the layer was recovered from.  Layers assembled from
+    several equations (a folded bias add, a softmax chain, a DM
+    reshape/transpose pair) list every member, so a mis-trace shows exactly
+    which equations landed in the wrong layer.  For declarative
+    ``GraphBuilder`` graphs there is no jaxpr to report and ``lint`` says
+    so instead of guessing.
+    """
+    meta = getattr(graph, "meta", None) or {}
+    if meta.get("frontend") != "tracer":
+        return (f"graph {graph.name!r}: built via the declarative "
+                f"GraphBuilder (frontend={meta.get('frontend', 'builder')!r})"
+                f" — no jaxpr provenance to report")
+    equations = meta.get("equations", {})
+    lines = [f"graph {graph.name!r}: {len(graph.layers)} layers recovered "
+             f"from jaxpr equations"]
+    for layer in graph.toposorted():
+        if layer.kind == "input":
+            detail = "model input"
+        else:
+            srcs = equations.get(layer.name, ())
+            detail = ", ".join(srcs) if srcs else \
+                "(no recorded equations — synthesized by canonicalization)"
+        lines.append(f"  {layer.name:<20} {layer.kind:<10} <- {detail}")
+    return "\n".join(lines)

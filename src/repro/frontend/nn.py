@@ -30,6 +30,7 @@ from jax.interpreters import mlir
 mp_p = Primitive("gcv_mp")
 vip_p = Primitive("gcv_vip")
 batch_norm_p = Primitive("gcv_batch_norm")
+segment_softmax_p = Primitive("gcv_segment_softmax")
 
 
 # ------------------------------------------------------------------ mp ----
@@ -114,6 +115,27 @@ def _batch_norm_impl(x, scale, bias, mean, var, *, eps):
             + bc(bias))
 
 
+# ----------------------------------------------------- segment softmax ----
+def segment_softmax(x, segment_ids, num_segments: int):
+    """Per-neighborhood softmax over segment-grouped scores (GAT attention:
+    normalize each destination node's incoming edge scores).  ``x``: per-edge
+    values ``(nnz,)`` (e.g. from ``vip(x, edges=...)``); ``segment_ids``:
+    static destination index per edge.  Like ``jax.ops.segment_*`` code this
+    would dissolve into scatter soup under tracing, so it is a custom
+    primitive that survives as one ``softmax`` layer with segment weights.
+    """
+    return segment_softmax_p.bind(x, jnp.asarray(segment_ids, jnp.int32),
+                                  n=int(num_segments))
+
+
+def _segment_softmax_impl(x, seg, *, n):
+    # mirrors the op-registry runtime's 'segment_softmax' numerics exactly
+    m = jax.ops.segment_max(x, seg, n)
+    e = jnp.exp(x - m[seg])
+    s = jax.ops.segment_sum(e, seg, n)
+    return e / jnp.where(s[seg] == 0, 1.0, s[seg])
+
+
 # ---------------------------------------------------- activations etc. ----
 def relu(x):
     """``max(x, 0)`` as a bare ``max`` equation (``jax.nn.relu`` works too —
@@ -143,8 +165,14 @@ def _bn_aval(x, scale, bias, mean, var, *, eps):
     return x
 
 
+def _segment_softmax_aval(x, seg, *, n):
+    return x
+
+
 _register(mp_p, _mp_impl, _mp_aval)
 _register(vip_p, _vip_impl, _vip_aval)
 _register(batch_norm_p, _batch_norm_impl, _bn_aval)
+_register(segment_softmax_p, _segment_softmax_impl, _segment_softmax_aval)
 
-FRONTEND_PRIMITIVES = {p.name: p for p in (mp_p, vip_p, batch_norm_p)}
+FRONTEND_PRIMITIVES = {p.name: p for p in
+                       (mp_p, vip_p, batch_norm_p, segment_softmax_p)}

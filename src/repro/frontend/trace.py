@@ -50,7 +50,9 @@ class TraceNode:
     """One proto-layer: a jaxpr equation lifted to the frontend's working
     vocabulary.  ``inputs`` holds node names (str) for traced operands and
     ``np.ndarray`` for constant operands; layer-weight constants live in
-    ``weights``."""
+    ``weights``.  ``src`` accumulates the jaxpr equations this node was
+    recovered from — canonicalization folds pattern partners' provenance
+    into the surviving node, and ``frontend.lint`` reports it."""
     name: str
     op: str
     inputs: list
@@ -58,6 +60,7 @@ class TraceNode:
     weights: dict
     shape: tuple
     dtype: Any
+    src: list = dataclasses.field(default_factory=list)
 
     def refs(self) -> list[str]:
         return [i for i in self.inputs if isinstance(i, str)]
@@ -95,6 +98,7 @@ class _Interpreter:
     def __init__(self, graph_name: str):
         self.tg = TraceGraph(graph_name, {}, [], [])
         self._n = 0
+        self._cur_eqn = None               # equation being interpreted
 
     # ---- node/env plumbing ----
     def fresh(self, prefix: str) -> str:
@@ -105,9 +109,12 @@ class _Interpreter:
              outvar) -> str:
         name = self.fresh(prefix)
         aval = outvar.aval
+        src = ([f"{self._cur_eqn.primitive.name}:"
+                f"{tuple(int(d) for d in aval.shape)}"]
+               if self._cur_eqn is not None else [])
         self.tg.nodes[name] = TraceNode(name, op, list(inputs), params,
                                         weights, tuple(aval.shape),
-                                        aval.dtype)
+                                        aval.dtype, src)
         return name
 
     def read(self, env, var):
@@ -174,7 +181,11 @@ class _Interpreter:
                 f"{[getattr(v.aval, 'shape', ()) for v in eqn.invars]}); "
                 f"express this op via repro.frontend.nn or the declarative "
                 f"GraphBuilder")
-        handler(eqn, atoms, env)
+        self._cur_eqn = eqn
+        try:
+            handler(eqn, atoms, env)
+        finally:
+            self._cur_eqn = None
 
     # ---- identities -------------------------------------------------------
     def _identity(self, eqn, atoms, env):
@@ -261,6 +272,20 @@ class _Interpreter:
             "norm", "norm", [x], {"eps": float(eqn.params["eps"])},
             {"scale": scale, "bias": bias, "mean": mean, "var": var},
             eqn.outvars[0])
+
+    def p_gcv_segment_softmax(self, eqn, atoms, env):
+        x, seg = atoms
+        if not isinstance(x, str):
+            raise UnsupportedOpError(
+                "gcv_segment_softmax over constant scores")
+        if not _is_const(seg):
+            raise UnsupportedOpError(
+                "gcv_segment_softmax segment ids must be static (the GAT "
+                "neighborhood structure is compile-time graph connectivity)")
+        env[eqn.outvars[0]] = self.node(
+            "softmax", "softmax",
+            [x], {"segments": True, "num_segments": int(eqn.params["n"])},
+            {"segments": np.asarray(seg, np.int32)}, eqn.outvars[0])
 
     # ---- compute ----------------------------------------------------------
     def p_conv_general_dilated(self, eqn, atoms, env):
@@ -390,6 +415,26 @@ class _Interpreter:
 
     def p_exp(self, eqn, atoms, env):
         self._unop("exp")(eqn, atoms, env)
+
+    # Comparisons + select surface only as *pattern members*: canonicalize
+    # reassembles select(ge(x, 0), a*x, x) into a leaky_relu act layer and
+    # select(mask, -inf, x) .. softmax .. select(mask, 0, s) into a masked
+    # softmax; any leftover cmp/select raises at emission.
+    def _cmp(self, fn):
+        def handler(eqn, atoms, env):
+            env[eqn.outvars[0]] = self.node(
+                "cmp", "cmp", list(atoms), {"fn": fn}, {}, eqn.outvars[0])
+        return handler
+
+    def p_ge(self, eqn, atoms, env):
+        self._cmp("ge")(eqn, atoms, env)
+
+    def p_gt(self, eqn, atoms, env):
+        self._cmp("gt")(eqn, atoms, env)
+
+    def p_select_n(self, eqn, atoms, env):
+        env[eqn.outvars[0]] = self.node(
+            "select", "select", list(atoms), {}, {}, eqn.outvars[0])
 
     def p_tanh(self, eqn, atoms, env):
         self._unop("tanh")(eqn, atoms, env)

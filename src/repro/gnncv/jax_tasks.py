@@ -11,10 +11,10 @@ golden-parity harness (``tests/test_frontend_parity.py``) can assert that
 ``trace -> canonicalize -> compile -> run`` reproduces the builder path
 bit-for-bit.
 
-b1 (few-shot, CNN+GNN with runtime affinity) and b6 (point cloud, GNN-only
-with COO max-aggregation) are re-expressed here; they cover every frontend
-code path the remaining tasks use (conv/pool/norm folding, vip + softmax +
-runtime-adjacency MP, COO MP, global pooling, concat).
+All six paper workloads (plus the traced-only b7 ViG) are re-expressed
+here — the ``GraphBuilder`` programs in ``gnncv.tasks`` are no longer a
+*requirement* for any workload, only the declarative alternative the parity
+matrix checks against.
 """
 from __future__ import annotations
 
@@ -23,7 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.frontend import nn
-from repro.gnncv.graphs import knn_coo
+from repro.gnncv.cnn_zoo import _RESNET_BLOCKS
+from repro.gnncv.graphs import (grid_coo, knn_coo, label_graph,
+                                skeleton_adjacency)
 from repro.gnncv.tasks import SMALL_CONFIGS
 
 
@@ -50,11 +52,78 @@ def _conv2d(x, w):
         x, w, (1, 1), "SAME", dimension_numbers=("NCHW", "HWIO", "NCHW"))
 
 
+def _conv2d_single(x, w, stride=(1, 1), padding="SAME"):
+    """Per-sample conv on a 3-D ``(C, H, W)`` feature map — the rank-4
+    wrap/unwrap is folded away by ``canonicalize.fold_conv_batch1`` so the
+    conv layer consumes the 3-D layout exactly like builder convs."""
+    y = jax.lax.conv_general_dilated(
+        x[None], w, stride, padding,
+        dimension_numbers=("NCHW", "HWIO", "NCHW"))
+    return jnp.squeeze(y, 0)
+
+
 def _max_pool(x, window, stride):
     ones = (1,) * (x.ndim - 2)
     return jax.lax.reduce_window(
         x, -jnp.inf, jax.lax.max, ones + (window, window),
         ones + (stride, stride), "SAME")
+
+
+def _jconv(rng, cin, cout, k, *, stride=1, bn=True, act="relu"):
+    """Closure twin of ``cnn_zoo._conv`` — identical RNG draw (one
+    ``standard_normal`` for the kernel; bias and norm statistics are
+    deterministic), applied to per-sample ``(C, H, W)`` maps."""
+    w = _conv_w(rng, cin, cout, k)
+    zeros = np.zeros(cout, np.float32)
+    ones = np.ones(cout, np.float32)
+    st = (stride, stride) if isinstance(stride, int) else tuple(stride)
+
+    def apply(h):
+        h = _conv2d_single(h, w, st) + zeros[:, None, None]
+        if bn:
+            h = nn.batch_norm(h, ones, zeros, zeros, ones)
+        if act:
+            h = jax.nn.relu(h)
+        return h
+    return apply
+
+
+def _resnet_backbone_jax(*, depth: int = 50, width_mult=1.0, seed: int = 0,
+                         out_stride: int = 32):
+    """Closure twin of ``cnn_zoo.add_resnet_backbone`` — the same blocks,
+    strides and *draw order* (shortcut conv before the residual stack, per
+    block), so b2/b3 traced weights are bit-identical to the builder's.
+    Returns ``(apply_fn, channels, spatial_downscale)``."""
+    rng = np.random.default_rng(seed)
+    wm = lambda c: max(8, int(c * width_mult))  # noqa: E731
+    stem = _jconv(rng, 3, wm(64), 7, stride=2)
+    cin, down, blocks = wm(64), 4, []
+    for stage, nblocks in enumerate(_RESNET_BLOCKS[depth]):
+        cmid = wm(64 * 2 ** stage)
+        cout = cmid * 4
+        for blk in range(nblocks):
+            stride = 2 if (blk == 0 and stage > 0) else 1
+            if stage == 3 and out_stride == 16:
+                stride = 1
+            if stride == 2:
+                down *= 2
+            sc = (_jconv(rng, cin, cout, 1, stride=stride, act=None)
+                  if blk == 0 else None)
+            c1 = _jconv(rng, cin, cmid, 1)
+            c2 = _jconv(rng, cmid, cmid, 3, stride=stride)
+            c3 = _jconv(rng, cmid, cout, 1, act=None)
+            blocks.append((sc, c1, c2, c3))
+            cin = cout
+
+    def apply(h):
+        h = stem(h)
+        h = _max_pool(h, 3, 2)
+        for sc, c1, c2, c3 in blocks:
+            shortcut = sc(h) if sc is not None else h
+            y = c3(c2(c1(h)))
+            h = jax.nn.relu(y + shortcut)
+        return h
+    return apply, cin, down
 
 
 # -------------------------------------------------------- b1: few-shot ----
@@ -103,6 +172,158 @@ def b1_fewshot_jax(*, n_way: int = 5, n_shot: int = 5, input_hw: int = 28,
     return model, example
 
 
+# ---------------------------------------------------------- b2: ML-GCN ----
+def b2_mlgcn_jax(*, input_hw: int = 224, n_labels: int = 80,
+                 label_feat: int = 300, width_mult=1.0, seed: int = 0):
+    """Plain-JAX twin of ``tasks.b2_mlgcn`` — ResNet-50 image branch plus a
+    GCN over the dense label graph with ``leaky_relu`` between the graph
+    convolutions (the idiom that forced ML-GCN through the builder until
+    the leaky_relu select-pattern canonicalization)."""
+    rng = np.random.default_rng(seed)
+    adj = label_graph(n_labels, seed=seed)
+    backbone, c, _ = _resnet_backbone_jax(depth=50, width_mult=width_mult,
+                                          seed=seed)
+    gdim = max(16, int(1024 * width_mult))
+    w1, b1 = _lin_w(rng, label_feat, gdim), np.zeros(gdim, np.float32)
+    w2, b2 = _lin_w(rng, gdim, c), np.zeros(c, np.float32)
+
+    def model(image, label_embeddings):
+        feat = backbone(image)
+        imgf = feat.mean((1, 2))                  # (c,)
+        imgv = imgf.reshape(c, 1)
+        h = nn.message_passing(adj, label_embeddings)
+        h = jax.nn.leaky_relu(h @ w1 + b1, 0.2)
+        h = nn.message_passing(adj, h)
+        h = h @ w2 + b2
+        return h @ imgv                           # (n_labels, 1) scores
+
+    example = {
+        "image": jax.ShapeDtypeStruct((3, input_hw, input_hw), np.float32),
+        "label_embeddings": jax.ShapeDtypeStruct((n_labels, label_feat),
+                                                 np.float32)}
+    return model, example
+
+
+# --------------------------------------------------------- b3: DualGCN ----
+def b3_dualgcn_jax(*, depth: int = 50, input_hw: int = 224,
+                   classes: int = 19, reduce_ch: int = 512, width_mult=1.0,
+                   seed: int = 0):
+    """Plain-JAX twin of ``tasks.b3_dualgcn`` — ResNet backbone (output
+    stride 16), then the two GNN reasoning branches written as raw jnp
+    layout shuffles: ``reshape(...).T`` (patch-to-node), ``reshape``
+    (channel-to-node) and ``.T.reshape(...)`` (node-to-channel) all
+    canonicalize into DM layers, so Step-1 DM fusion fires exactly as on
+    the builder graph."""
+    rng = np.random.default_rng(seed)
+    backbone, c, down = _resnet_backbone_jax(
+        depth=depth, width_mult=width_mult, seed=seed, out_stride=16)
+    rc = max(16, int(reduce_ch * width_mult))
+    reduce_conv = _jconv(rng, c, rc, 1)
+    hw = -(-input_hw // down)
+    w_sp = _lin_w(rng, rc, rc)
+    w_ch = _lin_w(rng, hw * hw, hw * hw)
+    out_conv = _jconv(rng, rc, classes, 1, bn=False, act=None)
+
+    def model(image):
+        feat = backbone(image)
+        feat = reduce_conv(feat)                  # (rc, hw, hw)
+
+        sp = feat.reshape(rc, -1).T               # patch-to-node (n_patch, rc)
+        aff = jax.nn.softmax(nn.vip(sp), axis=-1)
+        sp = nn.message_passing(aff, sp)
+        sp = jax.nn.relu(sp @ w_sp)
+        sp = sp.T.reshape(rc, hw, hw)             # node-to-channel
+
+        ch = feat.reshape(rc, -1)                 # channel-to-node
+        caff = jax.nn.softmax(nn.vip(ch), axis=-1)
+        ch = nn.message_passing(caff, ch)
+        ch = jax.nn.relu(ch @ w_ch)
+        ch = ch.reshape(rc, hw, hw)
+
+        merged = sp + ch
+        merged = merged + feat
+        return out_conv(merged)
+
+    example = {"image": jax.ShapeDtypeStruct((3, input_hw, input_hw),
+                                             np.float32)}
+    return model, example
+
+
+# ---------------------------------------------------------- b4: ST-GCN ----
+def b4_stgcn_jax(*, frames: int = 150, joints: int = 25, in_ch: int = 3,
+                 classes: int = 60, temporal_k: int = 9,
+                 channels=(64, 64, 64, 128, 128, 128, 256, 256, 256),
+                 strides=(1, 1, 1, 2, 1, 1, 2, 1, 1), seed: int = 0):
+    """Plain-JAX twin of ``tasks.b4_stgcn`` — spatial graph conv written as
+    the *raw* right-side-adjacency matmul ``(x.reshape(C·T, V) @
+    A.T).reshape(C, T, V)`` (no ``nn`` helper needed: the
+    ``match_adj_right_mp`` canonicalization recovers the dense MP layer),
+    interleaved with rank-4-wrapped temporal convs on the 3-D ``(C, T, V)``
+    feature tensor."""
+    rng = np.random.default_rng(seed)
+    adj = skeleton_adjacency(joints)
+    cin, blocks = in_ch, []
+    for cout, st in zip(channels, strides):
+        w = (rng.standard_normal((1, 1, cin, cout)) *
+             np.sqrt(2.0 / cin)).astype(np.float32)
+        wt = (rng.standard_normal((temporal_k, 1, cout, cout)) *
+              np.sqrt(2.0 / (temporal_k * cout))).astype(np.float32)
+        blocks.append((w, wt, st, cin, cout))
+        cin = cout
+    w_cls = _fc_w(rng, cin, classes)
+    b_cls = np.zeros(classes, np.float32)
+
+    def model(skeleton):
+        h = skeleton                              # (C, T, V)
+        for w, wt, st, ci, co in blocks:
+            zeros = np.zeros(co, np.float32)
+            ones = np.ones(co, np.float32)
+            y = _conv2d_single(h, w) + zeros[:, None, None]   # 1x1 theta
+            c, t, v = y.shape
+            y = (y.reshape(c * t, v) @ adj.T).reshape(c, t, v)  # spatial MP
+            y = _conv2d_single(y, wt, (st, 1)) + zeros[:, None, None]
+            y = nn.batch_norm(y, ones, zeros, zeros, ones)
+            if ci == co and st == 1:
+                y = y + h
+            h = jax.nn.relu(y)
+        h = h.mean((1, 2))                        # (C,)
+        return h @ w_cls + b_cls
+
+    example = {"skeleton": jax.ShapeDtypeStruct((in_ch, frames, joints),
+                                                np.float32)}
+    return model, example
+
+
+# --------------------------------------------------------- b5: SAR-GNN ----
+def b5_sar_jax(*, input_hw: int = 128, feat: int = 48, gnn_layers: int = 2,
+               classes: int = 10, seed: int = 0):
+    """Plain-JAX twin of ``tasks.b5_sar`` — small CNN front-end, every
+    pixel becomes a vertex (``reshape(...).T`` patch-to-node DM), GNN over
+    the 8-neighbor grid graph in COO form."""
+    rng = np.random.default_rng(seed)
+    coo = grid_coo(input_hw, input_hw)
+    conv1 = _jconv(rng, 1, feat, 3)
+    conv2 = _jconv(rng, feat, feat, 3)
+    lins = [_lin_w(rng, feat, feat) for _ in range(gnn_layers)]
+    w_cls = _fc_w(rng, feat, classes)
+    b_cls = np.zeros(classes, np.float32)
+
+    def model(sar_chip):
+        h = conv1(sar_chip)
+        h = conv2(h)
+        h = h.reshape(feat, -1).T                 # (hw*hw, feat) vertices
+        for w in lins:
+            h = h @ w
+            h = nn.message_passing(coo, h)
+            h = jax.nn.relu(h)
+        h = h.mean(0)                             # (feat,)
+        return h @ w_cls + b_cls
+
+    example = {"sar_chip": jax.ShapeDtypeStruct((1, input_hw, input_hw),
+                                                np.float32)}
+    return model, example
+
+
 # ------------------------------------------------------ b6: point cloud ---
 def b6_pointcloud_jax(*, n_points: int = 1024, knn: int = 20,
                       classes: int = 40, dims=(64, 64, 128, 256),
@@ -133,9 +354,66 @@ def b6_pointcloud_jax(*, n_points: int = 1024, knn: int = 20,
     return model, example
 
 
+# ------------------------------------------------- b7: ViG (traced-only) --
+def b7_vig_jax(*, input_hw: int = 224, patch: int = 16, dim: int = 192,
+               blocks: int = 12, classes: int = 1000, seed: int = 0):
+    """ViG-style vision GNN (Han et al., "Vision GNN: An Image is Worth
+    Graph of Nodes"), defined *only* as a traced JAX model — there is no
+    ``GraphBuilder`` program for it, proving new workloads ride the tracing
+    frontend with zero compiler changes (ROADMAP item).
+
+    Patch embedding (strided conv), then grapher blocks (linear ->
+    max-aggregation MP over the 8-neighbor patch graph -> linear, residual)
+    alternating with FFN blocks (2-layer MLP, residual), global average
+    pool, classifier head."""
+    assert input_hw % patch == 0, (input_hw, patch)
+    rng = np.random.default_rng(seed)
+    hp = input_hw // patch
+    coo = grid_coo(hp, hp)
+    w_embed = _conv_w(rng, 3, dim, patch)
+    b_embed = np.zeros(dim, np.float32)
+    blks = [(_lin_w(rng, dim, dim), _lin_w(rng, dim, dim),
+             _lin_w(rng, dim, 2 * dim), _lin_w(rng, 2 * dim, dim))
+            for _ in range(blocks)]
+    w_cls = _fc_w(rng, dim, classes)
+    b_cls = np.zeros(classes, np.float32)
+
+    def model(image):
+        h = _conv2d_single(image, w_embed, (patch, patch), "VALID")
+        h = h + b_embed[:, None, None]
+        h = h.reshape(dim, -1).T                  # (n_patch, dim) nodes
+        for w_in, w_out, w_up, w_down in blks:
+            y = h @ w_in                          # grapher
+            y = nn.message_passing(coo, y, reduce="max")
+            y = jax.nn.relu(y @ w_out)
+            h = h + y
+            z = jax.nn.relu(h @ w_up)             # FFN
+            h = h + z @ w_down
+        h = h.mean(0)                             # (dim,)
+        return h @ w_cls + b_cls
+
+    example = {"image": jax.ShapeDtypeStruct((3, input_hw, input_hw),
+                                             np.float32)}
+    return model, example
+
+
 TRACED_TASKS = {
     "b1": b1_fewshot_jax,
+    "b2": b2_mlgcn_jax,
+    "b3-r50": lambda **kw: b3_dualgcn_jax(depth=50, **kw),
+    "b3-r101": lambda **kw: b3_dualgcn_jax(depth=101, **kw),
+    "b4": b4_stgcn_jax,
+    "b5": b5_sar_jax,
     "b6": b6_pointcloud_jax,
+    "b7": b7_vig_jax,
+}
+
+# Reduced configs for tasks that exist only through this frontend;
+# b1-b6 reuse the builder's SMALL_CONFIGS so parity tests compare like
+# for like.
+TRACED_SMALL_CONFIGS = {
+    **SMALL_CONFIGS,
+    "b7": dict(input_hw=32, patch=8, dim=16, blocks=2, classes=10),
 }
 
 
@@ -143,7 +421,7 @@ def build_traced_task(task: str, *, small: bool = False, **overrides):
     """Trace one of the re-expressed tasks into a layer ``Graph`` — the
     frontend counterpart of ``tasks.build_task``."""
     from repro.frontend import to_graph
-    kwargs = dict(SMALL_CONFIGS[task]) if small else {}
+    kwargs = dict(TRACED_SMALL_CONFIGS[task]) if small else {}
     kwargs.update(overrides)
     fn, example = TRACED_TASKS[task](**kwargs)
     return to_graph(fn, example, name=f"{task}_traced")

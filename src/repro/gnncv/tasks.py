@@ -74,13 +74,16 @@ def b2_mlgcn(*, input_hw: int = 224, n_labels: int = 80,
     rng = np.random.default_rng(seed)
     adj = label_graph(n_labels, seed=seed)
     b = GraphBuilder("b2_mlgcn")
+    # both inputs declared up front — the layer-sequence convention the
+    # tracing frontend produces (jaxpr invars precede all equations), so
+    # the golden-parity matrix can compare kind sequences verbatim
     img = b.input((3, input_hw, input_hw), name="image")
+    lab = b.input((n_labels, label_feat), name="label_embeddings")
     feat, c, _ = add_resnet_backbone(b, img, depth=50,
                                      width_mult=width_mult, seed=seed)
     imgf = b.globalpool(feat, kind="avg")          # (c,)
     imgv = b.reshape(imgf, (c, 1))
     b.portion = "gnn"
-    lab = b.input((n_labels, label_feat), name="label_embeddings")
     h = b.mp(lab, adj=adj, name="lgc1_mp")
     h = _lin(b, h, rng, label_feat, max(16, int(1024 * width_mult)),
              act="leaky_relu")

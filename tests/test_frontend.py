@@ -64,6 +64,55 @@ KIND_PROGRAMS = {
 }
 
 
+# The PR-3 idioms, same round-trip contract as KIND_PROGRAMS: each newly
+# supported jaxpr pattern must canonicalize into the named layer kinds AND
+# compile + run to the direct-jax result.
+MASK = np.array(np.arange(48).reshape(6, 8) % 3 != 0)
+SEG_ROWS = np.array([0, 0, 1, 1, 2, 3], np.int32)
+SEG_COLS = np.array([1, 2, 0, 3, 3, 2], np.int32)
+ADJ_SQ = RNG.random((4, 4)).astype(np.float32)
+
+
+def _masked_softmax(x):
+    z = jnp.where(MASK, x, -jnp.inf)
+    s = jax.nn.softmax(z, axis=-1)
+    return jnp.where(MASK, s, 0.0)
+
+
+def _gat_attention(x):
+    """VIP edge scores -> per-neighborhood softmax -> runtime-edge MP."""
+    e = nn.vip(x, edges=(SEG_ROWS, SEG_COLS))
+    a = nn.segment_softmax(e, SEG_ROWS, 6)
+    return nn.message_passing((SEG_ROWS, SEG_COLS, a, 6), x)
+
+
+def _stgcn_mp(x):
+    c, t, v = x.shape
+    return (x.reshape(c * t, v) @ ADJ_SQ.T).reshape(c, t, v)
+
+
+def _conv_single(x):
+    y = jax.lax.conv_general_dilated(
+        x[None], W_CONV, (1, 1), "SAME",
+        dimension_numbers=("NCHW", "HWIO", "NCHW"))
+    return jnp.squeeze(y, 0)
+
+
+_x3v = {"x": jax.ShapeDtypeStruct((3, 4, 4), np.float32)}
+IDIOM_PROGRAMS = {
+    "leaky_relu": (lambda x: jax.nn.leaky_relu(x, 0.2), _x2, {"act"}),
+    "masked_softmax": (_masked_softmax, _x2, {"softmax"}),
+    "segment_softmax": (lambda x: nn.segment_softmax(x, SEG_ROWS, 6),
+                        {"x": jax.ShapeDtypeStruct((6,), np.float32)},
+                        {"softmax"}),
+    "gat_attention": (_gat_attention,
+                      {"x": jax.ShapeDtypeStruct((6, 5), np.float32)},
+                      {"vip", "softmax", "mp"}),
+    "adj_right_mp": (_stgcn_mp, _x3v, {"mp"}),
+    "conv_batch1": (_conv_single, _x3, {"conv"}),
+}
+
+
 def test_matrix_covers_every_layer_kind():
     assert set(KIND_PROGRAMS) == set(LAYER_KINDS)
 
@@ -88,6 +137,60 @@ def test_layer_kind_programs_compile_and_run(kind):
     want = fn(**{k: jnp.asarray(v) for k, v in ins.items()})
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("idiom", sorted(IDIOM_PROGRAMS))
+def test_idiom_round_trips(idiom):
+    fn, example, expected = IDIOM_PROGRAMS[idiom]
+    g = frontend.to_graph(fn, example, name=f"idiom_{idiom}")
+    kinds = {layer.kind for layer in g.toposorted()}
+    assert expected <= kinds, (idiom, kinds)
+
+
+@pytest.mark.parametrize("idiom", sorted(IDIOM_PROGRAMS))
+def test_idiom_programs_compile_and_run(idiom):
+    fn, example, _ = IDIOM_PROGRAMS[idiom]
+    plan = frontend.compile_model(fn, example,
+                                  CompileOptions(target="fpga"))
+    ins = {k: RNG.standard_normal(v.shape).astype(np.float32)
+           for k, v in example.items()}
+    out = build_runner(plan)(**ins)[0]
+    want = fn(**{k: jnp.asarray(v) for k, v in ins.items()})
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_leaky_relu_canonicalizes_to_act_layer():
+    g = frontend.to_graph(lambda x: jax.nn.leaky_relu(x, 0.2), _x2)
+    (act,) = [l for l in g.toposorted() if l.kind == "act"]
+    assert act.params["fn"] == "leaky_relu"
+
+
+def test_masked_softmax_carries_mask_weight():
+    g = frontend.to_graph(_masked_softmax, _x2)
+    (sm,) = [l for l in g.toposorted() if l.kind == "softmax"]
+    np.testing.assert_array_equal(sm.weights["mask"],
+                                  MASK.astype(np.float32))
+
+
+def test_adj_right_mp_matches_builder_weight_layout():
+    """x @ A.T over the (C·T, V) reshape must produce the same dense mp
+    layer (weights['adj'] == A) the builder's mp(adj=A) carries, and lower
+    to the right_t MatOp."""
+    g = frontend.to_graph(_stgcn_mp, _x3v)
+    (mp,) = [l for l in g.toposorted() if l.kind == "mp"]
+    np.testing.assert_array_equal(mp.weights["adj"], ADJ_SQ)
+    plan = compile_graph(g, CompileOptions(target="fpga"))
+    assert any(o.attrs.get("weight_side") == "right_t" for o in plan.ops)
+
+
+def test_conv_batch1_wrapper_folds_to_3d_conv():
+    g = frontend.to_graph(_conv_single, _x3)
+    (conv,) = [l for l in g.toposorted() if l.kind == "conv"]
+    plan = compile_graph(g, CompileOptions(target="fpga"))
+    (op,) = [o for o in plan.ops if o.kind == "conv"]
+    assert op.out_shape == (4, 4, 4)            # 3-D, no batch-1 residue
+    assert not any(l.kind == "reshape" for l in g.toposorted())
 
 
 # ----------------------------------------------------- unsupported ops ----
@@ -124,6 +227,42 @@ def test_runtime_adjacency_max_reduce_rejected():
 def test_leftover_elementwise_is_rejected_not_mislowered():
     with pytest.raises(UnsupportedOpError, match="'mul'"):
         frontend.to_graph(lambda x, y: x * y, _xx)
+
+
+def test_leaky_relu_foreign_slope_rejected():
+    """A leaky_relu pattern with any slope other than the runtime's fixed
+    0.2 must raise (Step-1 act fusion keeps only the activation *name*, so
+    silently accepting it would change numerics)."""
+    with pytest.raises(UnsupportedOpError, match="slope 0.3"):
+        frontend.to_graph(lambda x: jax.nn.leaky_relu(x, 0.3), _x2)
+
+
+def test_unmatched_select_is_rejected_by_name():
+    """A where/select that is neither leaky_relu nor a masked softmax must
+    raise naming the offending jaxpr primitive (here the 'ge' comparison
+    against a non-zero threshold), not mis-lower."""
+    with pytest.raises(UnsupportedOpError, match="'ge'"):
+        frontend.to_graph(lambda x: jnp.where(x >= 1.0, x, 0.2 * x), _x2)
+
+
+def test_mismatched_softmax_masks_rejected():
+    """The in-mask and out-mask of the masked-softmax idiom must be the
+    same array; otherwise the pattern must not fire."""
+    other = np.array(~MASK)
+
+    def fn(x):
+        z = jnp.where(MASK, x, -jnp.inf)
+        return jnp.where(other, jax.nn.softmax(z, axis=-1), 0.0)
+    with pytest.raises(UnsupportedOpError, match="select_n"):
+        frontend.to_graph(fn, _x2)
+
+
+def test_segment_softmax_traced_ids_rejected():
+    def fn(x, seg):
+        return nn.segment_softmax(x, seg, 6)
+    with pytest.raises(UnsupportedOpError, match="static"):
+        frontend.to_graph(fn, {"x": np.ones(6, np.float32),
+                               "seg": np.zeros(6, np.int32)})
 
 
 # -------------------------------------------------- canonicalizations ----

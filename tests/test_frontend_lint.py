@@ -1,0 +1,65 @@
+"""``frontend.lint``: per-layer jaxpr-provenance reporting for traced
+graphs (tracer-ergonomics satellite) — pattern rewrites must fold their
+partners' equations into the surviving layer so a mis-trace can be tracked
+back to the equations that produced it."""
+import jax
+import numpy as np
+
+from repro import frontend
+from repro.frontend import nn
+from repro.gnncv.jax_tasks import build_traced_task
+from repro.gnncv.tasks import build_task
+
+RNG = np.random.default_rng(0)
+W = RNG.standard_normal((8, 4)).astype(np.float32) * 0.1
+B = RNG.standard_normal(4).astype(np.float32) * 0.1
+_x2 = {"x": jax.ShapeDtypeStruct((6, 8), np.float32)}
+
+
+def test_every_traced_layer_has_provenance():
+    g = build_traced_task("b4", small=True)
+    eqs = g.meta["equations"]
+    for layer in g.toposorted():
+        assert layer.name in eqs
+        if layer.kind != "input":
+            assert eqs[layer.name], layer.name
+
+
+def test_pattern_partners_fold_into_survivor():
+    """A linear layer recovered from dot_general + bias add must list both
+    equations; a leaky_relu act must list its select/compare/mul members."""
+    g = frontend.to_graph(
+        lambda x: jax.nn.leaky_relu(x @ W + B, 0.2), _x2)
+    eqs = g.meta["equations"]
+    (lin,) = [l for l in g.toposorted() if l.kind == "linear"]
+    prims = [s.split(":")[0] for s in eqs[lin.name]]
+    assert "dot_general" in prims and "add" in prims
+    (act,) = [l for l in g.toposorted() if l.kind == "act"]
+    aprims = [s.split(":")[0] for s in eqs[act.name]]
+    assert "select_n" in aprims and "ge" in aprims and "mul" in aprims
+
+
+def test_conv_wrapper_provenance_names_all_equations():
+    g = build_traced_task("b4", small=True)
+    eqs = g.meta["equations"]
+    conv = next(l for l in g.toposorted() if l.kind == "conv")
+    prims = [s.split(":")[0] for s in eqs[conv.name]]
+    assert "conv_general_dilated" in prims
+    assert "broadcast_in_dim" in prims and "squeeze" in prims
+
+
+def test_lint_report_renders_per_layer():
+    g = frontend.to_graph(lambda x: nn.relu(x @ W + B), _x2,
+                          name="lintme")
+    report = frontend.lint(g)
+    assert "lintme" in report
+    for layer in g.toposorted():
+        assert layer.name in report
+    assert "dot_general" in report and "model input" in report
+
+
+def test_lint_on_builder_graph_says_no_provenance():
+    g = build_task("b6", small=True)
+    report = frontend.lint(g)
+    assert "GraphBuilder" in report and "no jaxpr provenance" in report
+    assert "\n" not in report.strip() or "<-" not in report
