@@ -1,7 +1,12 @@
 """Shared benchmark plumbing: plan-level latency from the FPGA cycle model
-(paper §IV-A formulas — reproduces the paper's tables) and CSV emit."""
+(paper §IV-A formulas — reproduces the paper's tables), CSV emit, and the
+machine-readable ``BENCH_*.json`` perf records CI uploads so the perf
+trajectory is tracked across PRs."""
 from __future__ import annotations
 
+import json
+import pathlib
+import platform
 import time
 
 from repro.core import CompileOptions, compile_graph
@@ -47,3 +52,30 @@ def emit(rows, header):
     for r in rows:
         print(",".join(str(x) for x in r))
     print()
+
+
+def percentile_ms(latencies_s, q) -> float:
+    """q-th percentile of a list of second-valued latencies, in ms."""
+    if not latencies_s:
+        return float("nan")
+    xs = sorted(latencies_s)
+    idx = min(len(xs) - 1, max(0, round(q / 100 * (len(xs) - 1))))
+    return xs[idx] * 1e3
+
+
+def write_bench_json(name: str, payload: dict) -> pathlib.Path:
+    """Write one machine-readable perf record (``BENCH_<name>.json``).
+
+    The file lands in the current working directory (CI runs from the repo
+    root and uploads ``BENCH_*.json`` as artifacts).  Host metadata is
+    attached so numbers from different machines are never compared blind.
+    """
+    path = pathlib.Path(f"BENCH_{name}.json")
+    record = {"bench": name,
+              "host": {"machine": platform.machine(),
+                       "python": platform.python_version(),
+                       "system": platform.system()},
+              **payload}
+    path.write_text(json.dumps(record, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}")
+    return path

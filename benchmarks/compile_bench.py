@@ -1,39 +1,49 @@
-"""Compile-path latency: graph construction -> six passes -> first run,
-for all six paper tasks through *both* frontends (declarative builder vs.
-JAX tracer).
+"""Compile-path latency: graph construction -> six passes -> weight upload
+-> first run, for all seven tasks (b1-b6 through *both* frontends, the
+traced-only b7 ViG through the JAX tracer — its own recorded baseline,
+since the paper publishes no latency target for ViG).
 
     PYTHONPATH=src python -m benchmarks.compile_bench [--small] [--iters N]
                                                       [--quick]
 
 ``--quick`` is the CI smoke mode: one iteration, skip the first-run jit
-phase (by far the slowest), keep the full six-task frontend sweep — a
+phase (by far the slowest), keep the full seven-task frontend sweep — a
 regression anywhere in trace/canonicalize (new unsupported primitive,
 broken pattern match) still fails fast.
 
-Three phases per (task, frontend):
+Four phases per (task, frontend):
 
   build_ms    builder: GraphBuilder construction; tracer: jax.make_jaxpr
               interpretation + canonicalization (the new frontend cost)
   compile_ms  the six passes (identical plans either way — parity is
               pinned by tests/test_frontend_parity.py)
+  upload_ms   device-resident weight planning: one deduplicated device_put
+              sweep over the plan's weights/ELL/COO arrays
+              (core/runtime/residency.py) — paid once per runner, shared
+              by every serving bucket
   first_ms    first runner call (jit trace + execute) — the cold-start a
-              serving process pays once per (graph, options, batch)
+              serving process pays once per (graph, options, batch), or
+              ahead of traffic via ``run.aot_compile()``
 
 Regressions in the trace/canonicalize path show up as build_ms drift
-against this trajectory without touching steady-state numbers.
+against this trajectory without touching steady-state numbers; every run
+also writes the machine-readable ``BENCH_compile.json`` record CI uploads.
 """
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.core import CompileOptions, build_runner, compile_graph
 from repro.core.executor import random_inputs
+from repro.core.runtime.residency import collect_params
 from repro.gnncv.jax_tasks import build_traced_task
 from repro.gnncv.tasks import build_task
 
 TASKS = ("b1", "b2", "b3-r50", "b4", "b5", "b6")
+TRACED_ONLY = ("b7",)                 # ViG exists only through the tracer
 OPTS = CompileOptions(target="fpga")
 
 
@@ -52,27 +62,48 @@ def bench(task: str, use_tracer: bool, *, small: bool, iters: int,
     builder = build_traced_task if use_tracer else build_task
     build_ms, graph = _time_ms(lambda: builder(task, small=small), iters)
     compile_ms, plan = _time_ms(lambda: compile_graph(graph, OPTS), iters)
+
+    def upload():
+        params = collect_params(plan)
+        for a in params.arrays.values():
+            a.block_until_ready()
+        return params
+
+    upload_ms, params = _time_ms(upload, iters)
     if not first_run:
-        return build_ms, compile_ms, float("nan"), len(plan.ops)
+        return (build_ms, compile_ms, upload_ms, float("nan"),
+                len(plan.ops), params.nbytes())
     ins = random_inputs(plan, seed=0)
     t0 = time.perf_counter()
     out = build_runner(plan)(**ins)
     _ = [o.block_until_ready() for o in out]
     first_ms = (time.perf_counter() - t0) * 1e3
-    return build_ms, compile_ms, first_ms, len(plan.ops)
+    return (build_ms, compile_ms, upload_ms, first_ms, len(plan.ops),
+            params.nbytes())
 
 
 def run(small: bool = True, iters: int = 3, first_run: bool = True):
-    rows = []
-    for task in TASKS:
-        for frontend_name, use_tracer in (("builder", False),
-                                          ("tracer", True)):
-            b, c, f, n_ops = bench(task, use_tracer, small=small,
-                                   iters=iters, first_run=first_run)
-            rows.append((task, frontend_name, n_ops, f"{b:.1f}",
-                         f"{c:.1f}", f"{f:.1f}", f"{b + c + f:.1f}"))
+    rows, records = [], []
+    sweep = [(t, use_tracer) for t in TASKS
+             for use_tracer in (False, True)]
+    sweep += [(t, True) for t in TRACED_ONLY]
+    for task, use_tracer in sweep:
+        frontend_name = "tracer" if use_tracer else "builder"
+        b, c, u, f, n_ops, nbytes = bench(task, use_tracer, small=small,
+                                          iters=iters, first_run=first_run)
+        rows.append((task, frontend_name, n_ops, f"{b:.1f}", f"{c:.1f}",
+                     f"{u:.1f}", f"{f:.1f}", f"{b + c + u + f:.1f}"))
+        records.append({"task": task, "frontend": frontend_name,
+                        "ops": n_ops, "build_ms": round(b, 2),
+                        "compile_ms": round(c, 2),
+                        "upload_ms": round(u, 2),
+                        "first_run_ms": None if math.isnan(f)
+                        else round(f, 2),
+                        "resident_param_bytes": nbytes})
     emit(rows, ["task", "frontend", "ops", "build_ms", "compile_ms",
-                "first_run_ms", "total_ms"])
+                "upload_ms", "first_run_ms", "total_ms"])
+    write_bench_json("compile", {"small": small, "iters": iters,
+                                 "first_run": first_run, "tasks": records})
     return rows
 
 

@@ -1,36 +1,51 @@
-"""Throughput of the micro-batching GNN-CV serving engine vs one-at-a-time
-execution over a mixed request stream of *builder* models (b1/b4/b6) and
-*traced* user-defined JAX models (b2/b4 via ``frontend.compile_model``'s
-path) — traced plans are first-class serving citizens, sharing the same
-plan/runner cache whose hit/miss counters the run reports.  Also prints
-the liveness-planner's peak-working-set reduction per task.
+"""Throughput of the GNN-CV serving engine across three serving modes over
+a mixed request stream of *builder* models (b1/b4/b6) and *traced*
+user-defined JAX models (b2/b4/b7 via ``frontend.compile_model``'s path):
+
+  one_at_a_time     the seed serving story: every request dispatches its
+                    own jit'd per-sample runner;
+  engine_baseline   the PR-3 engine: synchronous step (dispatch + block),
+                    legacy per-call weight staging (``residency=False``);
+  engine_pipelined  this PR's hot path: device-resident weights threaded
+                    through jit as arguments, ``warmup()`` AOT-compiling
+                    every (task, bucket) runner before traffic, and
+                    pipelined dispatch/harvest overlapping host batching
+                    with device execution.
+
+Both engine modes are fully warmed before timing, so the delta is pure
+steady-state serving.  The run asserts ``runner_misses`` stays frozen
+during pipelined traffic (no live request ever compiles) and writes the
+machine-readable ``BENCH_serve_gnncv.json`` perf record (p50/p95 request
+sojourn, req/s per mode, per-task residency footprint — including the b7
+ViG baseline the paper has no latency target for).
 
     PYTHONPATH=src python -m benchmarks.serve_gnncv [--requests N]
                                                     [--max-batch B]
+                                                    [--repeats R]
+                                                    [--quick]
 
-One-at-a-time = the seed serving story: every request dispatches its own
-jit'd per-sample runner.  Engine = requests queue per task and drain through
-power-of-two-bucketed batched runners from the plan/runner cache.  Both
-paths are warmed before timing so compile time is excluded (steady-state
-serving is the regime the paper's latency argument addresses).
+Each mode is timed over R passes of the same stream and the best pass is
+reported — steady-state serving throughput, robust to noisy hosts.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CompileOptions
 from repro.core.runtime.cache import cached_plan, cached_runner
+from repro.core.runtime.residency import plan_param_bytes
 from repro.gnncv.jax_tasks import build_traced_task
 from repro.gnncv.tasks import SMALL_CONFIGS, build_task, request_inputs
 from repro.serve import GNNCVServeEngine
 
-from benchmarks.common import emit
+from benchmarks.common import emit, percentile_ms, write_bench_json
 
 BUILDER_MIX = ("b1", "b4", "b6")
-TRACED_MIX = ("b2", "b4")                   # served as "<task>@traced"
+TRACED_MIX = ("b2", "b4", "b7")             # served as "<task>@traced"
 MIX = BUILDER_MIX + tuple(f"{t}@traced" for t in TRACED_MIX)
 
 
@@ -40,79 +55,186 @@ def make_stream(plans, n):
             for i in range(n)]
 
 
-def bench_one_at_a_time(graphs, options, stream):
+class PR3BaselineEngine(GNNCVServeEngine):
+    """Faithful reconstruction of the PR-3 serving hot path, so the delta
+    this PR reports is against what actually shipped: synchronous steps
+    (``pipeline_depth=1``), per-call weight staging (``residency=False``),
+    device-side batch stacking (N per-sample device puts + ``jnp.stack``)
+    and per-request output slices at harvest."""
+
+    def __init__(self, graphs, **kw):
+        super().__init__(graphs, pipeline_depth=1, residency=False, **kw)
+
+    @staticmethod
+    def _stack(samples):
+        keys = samples[0].keys()
+        return {k: jnp.stack([jnp.asarray(s[k]) for s in samples])
+                for k in keys}
+
+    def harvest(self) -> int:
+        if not self._inflight:
+            return 0
+        reqs, outs = self._inflight.popleft()
+        for i, req in enumerate(reqs):
+            req.result = tuple(np.asarray(o[i]) for o in outs)
+            req.done = True
+            req.t_done = time.perf_counter()
+        self.completed += len(reqs)
+        return len(reqs)
+
+
+def bench_one_at_a_time(graphs, options, stream, repeats):
     runners = {t: cached_runner(graphs[t], options) for t in graphs}
     for task, inputs in stream[:len(MIX)]:          # warm compiles
         runners[task](**inputs)
-    t0 = time.perf_counter()
-    for task, inputs in stream:
-        # materialize each response, like a server answering the request
-        _ = [np.asarray(o) for o in runners[task](**inputs)]
-    return time.perf_counter() - t0
+    best, best_lats = float("inf"), []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        lats = []
+        for task, inputs in stream:
+            # materialize each response, like a server answering a request
+            _ = [np.asarray(o) for o in runners[task](**inputs)]
+            lats.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        if dt < best:
+            best, best_lats = dt, lats
+    return best, best_lats
 
 
-def bench_engine(graphs, options, stream, max_batch):
-    eng = GNNCVServeEngine(graphs, options=options, max_batch=max_batch)
-    warm = GNNCVServeEngine(graphs, options=options, max_batch=max_batch)
-    bucket = 1
-    while bucket <= max_batch:                      # warm every bucket
-        for task in MIX:
-            for s in range(bucket):
-                warm.submit(task, **request_inputs(eng.plans[task], seed=s))
-        warm.run()
-        bucket *= 2
-    for task, inputs in stream:
-        eng.submit(task, **inputs)
-    t0 = time.perf_counter()
-    served = eng.run()
-    dt = time.perf_counter() - t0
-    assert served == len(stream)
-    return dt, eng.stats()
+def bench_engine(graphs, options, stream, max_batch, *, pipelined: bool,
+                 repeats: int):
+    """One engine mode, warmed before timing, best of ``repeats`` passes
+    over the stream (steady-state serving on a possibly noisy host).
+    ``pipelined=False`` is the PR-3 baseline: synchronous steps, per-call
+    weight staging."""
+    kw = dict(options=options, max_batch=max_batch)
+    if pipelined:
+        eng = GNNCVServeEngine(graphs, pipeline_depth=2, residency=True,
+                               **kw)
+        warmed = eng.warmup()                       # AOT: trace+compile now
+        assert warmed == {(t, b) for t in graphs for b in eng.buckets()}, \
+            "warmup left (task, bucket) runners uncompiled"
+    else:
+        eng = PR3BaselineEngine(graphs, **kw)
+        warm = PR3BaselineEngine(graphs, **kw)
+        for bucket in eng.buckets():                # warm by traffic
+            for task in MIX:
+                for s in range(bucket):
+                    warm.submit(task,
+                                **request_inputs(eng.plans[task], seed=s))
+            warm.run()
+    pre = eng.stats()
+    best, best_lats, best_dispatches = float("inf"), [], 0
+    for _ in range(repeats):
+        steps_before = eng.steps
+        reqs = [eng.submit(task, **inputs) for task, inputs in stream]
+        t0 = time.perf_counter()
+        served = eng.run()
+        dt = time.perf_counter() - t0
+        assert served == len(stream)
+        if dt < best:
+            best = dt
+            best_lats = [r.t_done - t0 for r in reqs]
+            best_dispatches = eng.steps - steps_before
+    post = eng.stats()
+    if pipelined:
+        assert post["runner_misses"] == pre["runner_misses"], \
+            "a live request paid a runner compile after warmup()"
+    return best, best_lats, best_dispatches, post
 
 
-def run(requests: int = 96, max_batch: int = 8):
+def mode_record(name, wall_s, lats, n, extra=None):
+    return {"mode": name, "wall_ms": round(wall_s * 1e3, 2),
+            "req_per_s": round(n / wall_s, 2),
+            "p50_ms": round(percentile_ms(lats, 50), 3),
+            "p95_ms": round(percentile_ms(lats, 95), 3),
+            **(extra or {})}
+
+
+def run(requests: int = 96, max_batch: int = 8, repeats: int = 5):
     options = CompileOptions(target="fpga")
     all_graphs = {t: build_task(t, small=True) for t in sorted(SMALL_CONFIGS)}
     graphs = {t: all_graphs[t] for t in BUILDER_MIX}
     # traced user-defined JAX models registered *next to* builder models —
-    # the engine (and the plan/runner cache) cannot tell them apart
+    # the engine (and the plan/runner cache) cannot tell them apart.  b7
+    # (ViG) exists only through the tracing frontend.
     graphs.update({f"{t}@traced": build_traced_task(t, small=True)
                    for t in TRACED_MIX})
     plans = {t: cached_plan(g, options) for t, g in graphs.items()}
     stream = make_stream(plans, requests)
 
-    loop_s = bench_one_at_a_time(graphs, options, stream)
-    eng_s, stats = bench_engine(graphs, options, stream, max_batch)
-    emit([["one_at_a_time", f"{loop_s * 1e3:.1f}",
-           f"{len(stream) / loop_s:.1f}", len(stream)],
-          ["serve_engine", f"{eng_s * 1e3:.1f}",
-           f"{len(stream) / eng_s:.1f}", stats["steps"]]],
-         ["mode", "wall_ms", "req_per_s", "dispatches"])
+    loop_s, loop_lats = bench_one_at_a_time(graphs, options, stream,
+                                            repeats)
+    base_s, base_lats, base_disp, base_stats = bench_engine(
+        graphs, options, stream, max_batch, pipelined=False,
+        repeats=repeats)
+    pipe_s, pipe_lats, pipe_disp, pipe_stats = bench_engine(
+        graphs, options, stream, max_batch, pipelined=True,
+        repeats=repeats)
+
+    modes = [
+        mode_record("one_at_a_time", loop_s, loop_lats, requests),
+        mode_record("engine_baseline", base_s, base_lats, requests,
+                    {"dispatches": base_disp}),
+        mode_record("engine_pipelined", pipe_s, pipe_lats, requests,
+                    {"dispatches": pipe_disp,
+                     "warmed": pipe_stats["warmed"]}),
+    ]
+    emit([[m["mode"], m["wall_ms"], m["req_per_s"], m["p50_ms"],
+           m["p95_ms"]] for m in modes],
+         ["mode", "wall_ms", "req_per_s", "p50_ms", "p95_ms"])
     # cache effectiveness (cumulative since process start): misses are the
-    # warmup compiles (one per task x bucket, builder and traced alike);
-    # every timed dispatch is a hit
-    emit([[stats["runner_hits"], stats["runner_misses"],
-           stats["plan_hits"], stats["plan_misses"]]],
+    # warmup compiles (one per task x bucket x mode); every timed dispatch
+    # is a hit
+    emit([[pipe_stats["runner_hits"], pipe_stats["runner_misses"],
+           pipe_stats["plan_hits"], pipe_stats["plan_misses"]]],
          ["runner_hits", "runner_misses", "plan_hits", "plan_misses"])
 
-    rows = []
+    rows, task_records = [], {}
     for task, g in {**all_graphs,
                     **{t: graphs[t] for t in MIX if "@" in t}}.items():
         plan = cached_plan(g, options)
         freed = plan.peak_live_bytes(free_dead=True)
         kept = plan.peak_live_bytes(free_dead=False)
+        resident = plan_param_bytes(plan)
         rows.append([task, plan.meta["frontend"], freed, kept,
-                     f"{kept / freed:.2f}x"])
+                     f"{kept / freed:.2f}x", resident])
+        task_records[task] = {"frontend": plan.meta["frontend"],
+                              "peak_live_bytes_freed": freed,
+                              "peak_live_bytes_kept": kept,
+                              "resident_param_bytes": resident}
     emit(rows, ["task", "frontend", "peak_live_bytes_freed",
-                "peak_live_bytes_kept", "reduction"])
+                "peak_live_bytes_kept", "reduction",
+                "resident_param_bytes"])
+
+    speedup = (requests / pipe_s) / (requests / base_s)
+    print(f"pipelined+residency vs PR-3 baseline: {speedup:.2f}x req/s")
+    write_bench_json("serve_gnncv", {
+        "requests": requests, "max_batch": max_batch,
+        "repeats": repeats, "mix": list(MIX),
+        "modes": modes, "baseline_req_per_s": round(requests / base_s, 2),
+        "pipelined_req_per_s": round(requests / pipe_s, 2),
+        "pipelined_vs_baseline": round(speedup, 3),
+        "runner_misses_frozen_under_traffic": True,
+        "tasks": task_records,
+    })
+    return modes
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=96)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timed passes per mode; best is reported")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small stream, small buckets")
     args = ap.parse_args()
-    run(requests=args.requests, max_batch=args.max_batch)
+    if args.quick:
+        run(requests=24, max_batch=2, repeats=2)
+    else:
+        run(requests=args.requests, max_batch=args.max_batch,
+            repeats=args.repeats)
 
 
 if __name__ == "__main__":

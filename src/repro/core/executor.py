@@ -4,11 +4,15 @@ The software analogue of the GCV-Turbo APU: it walks the ``ExecutionPlan``
 instruction sequence and dispatches every op through
 ``repro.core.runtime.run_op`` (per-kind handlers registered with
 ``@register_op``; Pallas kernels when ``use_pallas=True``, fused pure-jnp
-realizations otherwise).  Weights and compile-time ELL structures stay
-closed over as constants, exactly like parameters resident in the
-accelerator's on-chip buffers.
+realizations otherwise).  Weights and compile-time ELL structures are
+**device-resident plan state** (``runtime/residency.py``): collected and
+uploaded once per runner, deduplicated by array identity, and threaded
+through ``jax.jit`` as an *argument* pytree — the paper's parameters
+resident in on-chip buffers, rather than constants re-embedded into every
+traced bucket program.  ``residency=False`` restores the legacy
+closure-constant behaviour.
 
-Two runtime behaviours the seed executor lacked:
+Runtime behaviours the seed executor lacked:
 
   * **liveness freeing** — Step 6 annotates each op with the env entries it
     kills; the driver drops them as soon as they die (``free_dead=True``).
@@ -23,7 +27,11 @@ Two runtime behaviours the seed executor lacked:
     per-sample program over a new leading axis.  Compile-time weights and
     COO/ELL structures broadcast; only activations gain the batch axis.
     This is the paper's whole-task execution argument applied to serving:
-    one compiled program amortized over N requests.
+    one compiled program amortized over N requests;
+  * **AOT warmup** — ``run.aot_compile()`` traces and compiles the jitted
+    program from the plan's recorded input shapes, so a serving process can
+    pay every trace/compile *before* traffic arrives and no live request
+    ever blocks on compilation (the §VII-D2 fixed-latency argument).
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ import numpy as np
 from repro.core.plan import ExecutionPlan
 from repro.core.runtime import run_op
 from repro.core.runtime.context import batched_execution
+from repro.core.runtime.residency import collect_params
 
 # Back-compat alias: tests and notebooks poke single ops through the old
 # executor entry point; dispatch now lives in the registry.
@@ -44,7 +53,8 @@ _run_op = run_op
 
 def build_runner(plan: ExecutionPlan, *, use_pallas: bool = False,
                  jit: bool | None = None, batch: int | None = None,
-                 free_dead: bool = True) -> Callable[..., tuple]:
+                 free_dead: bool = True, residency: bool = True,
+                 weights_as_args: bool | None = None) -> Callable[..., tuple]:
     """Returns ``run(**inputs) -> tuple(outputs)``.
 
     ``batch=None`` preserves the per-sample contract; ``batch=N`` expects
@@ -56,32 +66,140 @@ def build_runner(plan: ExecutionPlan, *, use_pallas: bool = False,
     float accumulation differently per batch size, so only the per-op path
     is bit-for-bit identical across ``batch`` values.  Serving passes
     ``jit=True`` explicitly — throughput over bit-stability.
+
+    ``residency=True`` (default) collects the plan's weights/ELL/COO arrays
+    into one deduplicated device-resident pytree at build time, so handlers
+    never re-stage host arrays per call; ``residency=False`` restores the
+    legacy per-call ``jnp.asarray`` staging.
+
+    ``weights_as_args`` controls how the resident pytree enters a *jitted*
+    program.  ``None`` resolves to ``batch is not None``:
+
+      * serving/batched runners pass it as a jit **argument** — tracing no
+        longer embeds per-bucket weight constants (trace time and program
+        size stop scaling with parameter bytes) and ``resident.swap`` takes
+        effect without retracing;
+      * per-sample whole-program runners keep weights as trace
+        **constants**: XLA folds and fuses constant weights differently
+        from parameters, and the ``tests/golden/`` numerics are pinned to
+        the constant-weights program.  Eager (``jit=False``) runners always
+        read the resident store live, so the flag only matters under jit.
+
+    The returned ``run`` carries runner-level plan state:
+
+      ``run.resident``      the ``ResidentParams`` (None when residency off)
+      ``run.aot_compile()`` trace+compile ahead of traffic (jit only);
+                            non-None once warm — ``explicit=True`` for the
+                            standalone lowered executable
+      ``run.trace_count()`` how many times the program body was traced
     """
     if jit is None:
         jit = batch is None
+    if weights_as_args is None:
+        weights_as_args = batch is not None
+    # When the jitted program bakes weights in as constants, a device-side
+    # store would hold a second, never-read copy of every parameter — keep
+    # host references instead (the trace embeds values either way) and
+    # refuse hot-swaps, which could only return stale results there.
+    bakes_constants = jit and not weights_as_args
+    resident = collect_params(plan, device=not bakes_constants) \
+        if residency else None
+    if resident is not None and bakes_constants:
+        resident.trace_constants = True
+    traces = {"n": 0}
 
-    def run_single(env: dict):
+    def run_single(env: dict, arrays):
+        params = resident.bind(arrays) if resident is not None else None
         for op in plan.ops:
-            env[op.name] = run_op(op, env, use_pallas)
+            env[op.name] = run_op(op, env, use_pallas, params)
             if free_dead:
                 for name in op.frees:
                     env.pop(name, None)
         return tuple(env[o] for o in plan.outputs)
 
+    def run_impl(arrays, env):
+        traces["n"] += 1
+        if batch is None:
+            return run_single(env, arrays)
+        with batched_execution():
+            return jax.vmap(run_single, in_axes=(0, None))(env, arrays)
+
+    if weights_as_args:
+        staged = jax.jit(run_impl) if jit else run_impl
+    else:
+        # Closure-bind the resident store: under jit the device arrays
+        # become trace constants (the golden-pinned program); eager reads
+        # the store live either way.
+        def run_const(env):
+            arrays = resident.arrays if resident is not None else {}
+            return run_impl(arrays, env)
+
+        staged = jax.jit(run_const) if jit else run_const
+    aot = {"primed": None, "exe": None}
+
+    def input_specs() -> dict:
+        shapes = plan.meta.get("input_shapes", {})
+        spec = {}
+        for name in plan.input_names:
+            shape = shapes.get(name)
+            assert shape is not None, \
+                f"no recorded input shape for {name!r}; cannot AOT-compile"
+            if batch is not None:
+                shape = (batch,) + tuple(shape)
+            spec[name] = jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+        return spec
+
+    def aot_compile(explicit: bool = False):
+        """Pay the jit trace + XLA compile now, from the plan's recorded
+        input shapes — the serving warmup hook.  No-op (returns None) for
+        eager runners.
+
+        The default primes the jitted function's C++ fast-path dispatch
+        cache with one zeros-filled call (one trace + one XLA compile) —
+        that cache is what live traffic dispatches through, and it is the
+        cheapest warmup (the standalone ``Compiled`` wrapper's Python call
+        path is measurably slower per dispatch, and this jax version keeps
+        the AOT and dispatch caches separate).  ``explicit=True``
+        additionally materializes the ``lower().compile()`` executable —
+        the inspectable AOT artifact (cost analysis, serialization) — at
+        the cost of a second XLA compile of the same program."""
+        if not jit:
+            return None
+        arrays = resident.arrays if resident is not None else {}
+        if aot["primed"] is None:
+            spec = input_specs()
+            zeros = {n: jnp.zeros(s.shape, s.dtype)
+                     for n, s in spec.items()}
+            warm = staged(arrays, zeros) if weights_as_args \
+                else staged(zeros)
+            for o in warm:
+                o.block_until_ready()
+            aot["primed"] = staged
+        if explicit and aot["exe"] is None:
+            spec = input_specs()
+            aot["exe"] = (staged.lower(arrays, spec).compile()
+                          if weights_as_args
+                          else staged.lower(spec).compile())
+        return aot["exe"] if explicit else aot["primed"]
+
     def run(**inputs):
         env = {k: jnp.asarray(v) for k, v in inputs.items()}
         missing = [k for k in plan.input_names if k not in env]
         assert not missing, f"missing inputs: {missing}"
-        if batch is None:
-            return run_single(env)
-        for k, v in env.items():
-            assert v.shape[:1] == (batch,), \
-                f"input {k!r}: expected leading batch axis {batch}, " \
-                f"got shape {v.shape}"
-        with batched_execution():
-            return jax.vmap(run_single)(env)
+        if batch is not None:
+            for k, v in env.items():
+                assert v.shape[:1] == (batch,), \
+                    f"input {k!r}: expected leading batch axis {batch}, " \
+                    f"got shape {v.shape}"
+        if weights_as_args:
+            arrays = resident.arrays if resident is not None else {}
+            return staged(arrays, env)
+        return staged(env)
 
-    return jax.jit(run) if jit else run
+    run.resident = resident
+    run.aot_compile = aot_compile
+    run.trace_count = lambda: traces["n"]
+    return run
 
 
 def random_inputs(plan: ExecutionPlan, seed: int = 0,
@@ -107,8 +225,13 @@ def random_inputs(plan: ExecutionPlan, seed: int = 0,
 
 
 def stack_inputs(samples: list[dict]) -> dict:
-    """Stack per-sample input dicts into one batched input dict."""
+    """Stack per-sample input dicts into one batched input dict.
+
+    Stacking happens on the host (``np.stack``) so each input name costs
+    one device transfer for the whole batch — the previous form staged N
+    per-sample device puts and stacked on device, paying N dispatches per
+    input name per batch."""
     assert samples, "empty batch"
     keys = samples[0].keys()
-    return {k: jnp.stack([jnp.asarray(s[k]) for s in samples])
+    return {k: jnp.asarray(np.stack([np.asarray(s[k]) for s in samples]))
             for k in keys}

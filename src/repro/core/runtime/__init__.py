@@ -6,6 +6,8 @@ then proves the runtime vocabulary and the lowering vocabulary
 or a handler for a kind nothing emits — fails at import time.
 
     registry.py     @register_op decorator, OpHandler protocol, run_op
+    residency.py    device-resident weight planning (collect once, dedup
+                    by identity, thread through jit as an argument)
     matmul.py       mm (all weight sides) + sddmm
     conv.py         Fig. 7 shift-add convolution
     elementwise.py  PSVM/PVVA family + the shared fused epilogue

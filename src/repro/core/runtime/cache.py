@@ -40,7 +40,8 @@ def cached_plan(graph: Graph,
 def cached_runner(graph: Graph,
                   options: CompileOptions = CompileOptions(), *,
                   batch: int | None = None, use_pallas: bool = False,
-                  jit: bool | None = None, free_dead: bool = True):
+                  jit: bool | None = None, free_dead: bool = True,
+                  residency: bool = True):
     """Compiled runner for ``graph``, one per (options, batch, ...).
 
     ``jit`` defaults to None so ``build_runner`` resolves it batch-aware
@@ -52,13 +53,13 @@ def cached_runner(graph: Graph,
     per bucket.
     """
     from repro.core.executor import build_runner   # late: avoid import cycle
-    key = (options, batch, use_pallas, jit, free_dead)
+    key = (options, batch, use_pallas, jit, free_dead, residency)
     per_graph = _RUNNERS.setdefault(graph, {})
     if key not in per_graph:
         _STATS["runner_misses"] += 1
         per_graph[key] = build_runner(
             cached_plan(graph, options), use_pallas=use_pallas, jit=jit,
-            batch=batch, free_dead=free_dead)
+            batch=batch, free_dead=free_dead, residency=residency)
     else:
         _STATS["runner_hits"] += 1
     return per_graph[key]

@@ -24,6 +24,7 @@ from repro.core.plan import MatOp
 from repro.core.runtime.context import in_batched_execution
 from repro.core.runtime.elementwise import apply_epilogue
 from repro.core.runtime.registry import register_op
+from repro.core.runtime.residency import weight
 from repro.kernels import ops as kops
 
 
@@ -70,16 +71,17 @@ def _shift_gemm_conv2d(x, w, *, stride, padding):
 
 
 @register_op("conv")
-def run_conv(op: MatOp, env, use_pallas: bool):
+def run_conv(op: MatOp, env, use_pallas: bool, params=None):
     x = env[op.inputs[0]]
+    w = weight(op, "w", params)
     if in_batched_execution() and not use_pallas:
         fn = lambda xi: _shift_gemm_conv2d(  # noqa: E731
-            xi, jnp.asarray(op.weights["w"]), stride=op.attrs["stride"],
+            xi, w, stride=op.attrs["stride"],
             padding=op.attrs["padding"])
         out = fn(x) if x.ndim == 3 else jax.vmap(fn)(x)
     else:
-        out = kops.conv2d(x, jnp.asarray(op.weights["w"]),
+        out = kops.conv2d(x, w,
                           stride=op.attrs["stride"],
                           padding=op.attrs["padding"],
                           use_pallas=use_pallas)
-    return apply_epilogue(out, op, env)
+    return apply_epilogue(out, op, env, params)

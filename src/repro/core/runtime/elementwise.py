@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.core.plan import MatOp
 from repro.core.runtime.registry import register_op
+from repro.core.runtime.residency import opt_weight, weight
 
 # Single source of truth for the leaky_relu slope: the tracing frontend's
 # pattern matcher (frontend/canonicalize.py) only accepts traced models
@@ -24,11 +25,10 @@ ACTIVATIONS = {"relu": jax.nn.relu, "gelu": jax.nn.gelu, "silu": jax.nn.silu,
                "leaky_relu": lambda x: jax.nn.leaky_relu(x, LEAKY_SLOPE)}
 
 
-def apply_epilogue(out, op: MatOp, env):
+def apply_epilogue(out, op: MatOp, env, params=None):
     """Fused bias / activation / residual tail shared by mm + conv."""
-    b = op.weights.get("b")
+    b = opt_weight(op, "b", params)
     if b is not None:
-        b = jnp.asarray(b)
         if out.ndim >= 3:                      # conv OFM (..., C, H, W)
             out = out + b[:, None, None]
         else:
@@ -46,20 +46,20 @@ def apply_epilogue(out, op: MatOp, env):
 
 
 @register_op("ew")
-def run_ew(op: MatOp, env, use_pallas: bool):
+def run_ew(op: MatOp, env, use_pallas: bool, params=None):
     fn = op.attrs["fn"]
     x = env[op.inputs[0]]
     if fn == "add":
         return x + env[op.inputs[1]]
     if fn == "softmax":
         if op.attrs.get("masked"):
-            mask = jnp.asarray(op.weights["mask"]) != 0
+            mask = weight(op, "mask", params) != 0
             x = jnp.where(mask, x, -jnp.inf)
             out = jax.nn.softmax(x, axis=op.attrs.get("axis", -1))
             return jnp.where(mask, out, 0.0)
         return jax.nn.softmax(x, axis=op.attrs.get("axis", -1))
     if fn == "segment_softmax":
-        seg = jnp.asarray(op.weights["segments"])
+        seg = weight(op, "segments", params)
         n = op.attrs["num_segments"]
         m = jax.ops.segment_max(x, seg, n)
         e = jnp.exp(x - m[seg])
@@ -70,8 +70,8 @@ def run_ew(op: MatOp, env, use_pallas: bool):
         shape = (-1, 1, 1) if x.ndim == 3 else (1, -1)
 
         def bc(k, d):
-            v = op.weights.get(k)
-            return jnp.asarray(v).reshape(shape) if v is not None else d
+            v = opt_weight(op, k, params)
+            return v.reshape(shape) if v is not None else d
 
         mean, var = bc("mean", 0.0), bc("var", 1.0)
         scale, bias = bc("scale", 1.0), bc("bias", 0.0)
@@ -81,9 +81,11 @@ def run_ew(op: MatOp, env, use_pallas: bool):
         mu = x.mean(-1, keepdims=True)
         var = x.var(-1, keepdims=True)
         out = (x - mu) * jax.lax.rsqrt(var + eps)
-        if "scale" in op.weights:
-            out = out * jnp.asarray(op.weights["scale"])
-        if "bias" in op.weights:
-            out = out + jnp.asarray(op.weights["bias"])
+        scale = opt_weight(op, "scale", params)
+        if scale is not None:
+            out = out * scale
+        bias = opt_weight(op, "bias", params)
+        if bias is not None:
+            out = out + bias
         return out
     return ACTIVATIONS[fn](x)

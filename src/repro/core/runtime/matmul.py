@@ -15,6 +15,7 @@ from repro.core.plan import MatOp
 from repro.core.runtime.context import in_batched_execution
 from repro.core.runtime.elementwise import apply_epilogue
 from repro.core.runtime.registry import register_op
+from repro.core.runtime.residency import ell_pair, weight
 from repro.kernels import ops as kops
 
 
@@ -33,12 +34,12 @@ def _stable_matmul(x2, y2):
     return x2 @ y2
 
 
-def _coo_aggregate(op: MatOp, env, x):
+def _coo_aggregate(op: MatOp, env, x, params):
     """COO scatter message passing: rho({e_uv * h_u}) over static edges."""
-    rows = jnp.asarray(op.weights["coo_rows"])
-    cols = jnp.asarray(op.weights["coo_cols"])
+    rows = weight(op, "coo_rows", params)
+    cols = weight(op, "coo_cols", params)
     vals = (env[op.inputs[1]] if op.attrs.get("runtime_edge")
-            else jnp.asarray(op.weights["coo_vals"]))
+            else weight(op, "coo_vals", params))
     n = op.attrs["n"]
     msg = vals[:, None] * x[cols]
     if op.attrs.get("reduce", "sum") == "max":
@@ -51,31 +52,31 @@ def _coo_aggregate(op: MatOp, env, x):
 
 
 @register_op("mm")
-def run_mm(op: MatOp, env, use_pallas: bool):
+def run_mm(op: MatOp, env, use_pallas: bool, params=None):
     side = op.attrs["weight_side"]
     x = env[op.inputs[0]]
     if side == "right":
-        w = jnp.asarray(op.weights["w"])
         x2 = x.reshape(-1, x.shape[-1])
         if op.primitive == "SpDMM":
             # w sparse: x @ w = (wᵀ @ x2ᵀ)ᵀ ; ELL stores wᵀ already
-            idx, val = (jnp.asarray(a) for a in op.ell)
+            idx, val = ell_pair(op, params)
             out = kops.sparse_matmul(idx, val, x2.T,
                                      use_pallas=use_pallas).T
         else:
+            w = weight(op, "w", params)
             out = (kops.matmul(x2, w, use_pallas=use_pallas)
                    if use_pallas else _stable_matmul(x2, w))
         out = out.reshape(op.out_shape if op.out_shape else (-1,))
     elif side == "left":
         if op.primitive == "SpDMM":
-            idx, val = (jnp.asarray(a) for a in op.ell)
+            idx, val = ell_pair(op, params)
             out = kops.sparse_matmul(idx, val, x, use_pallas=use_pallas)
         else:
-            adj = jnp.asarray(op.weights["adj"])
+            adj = weight(op, "adj", params)
             out = (kops.matmul(adj, x, use_pallas=use_pallas)
                    if use_pallas else _stable_matmul(adj, x))
     elif side == "left_coo":
-        out = _coo_aggregate(op, env, x)
+        out = _coo_aggregate(op, env, x, params)
     elif side == "left_runtime":
         adj = env[op.inputs[1]]
         out = (kops.matmul(adj, x, use_pallas=use_pallas)
@@ -91,28 +92,28 @@ def run_mm(op: MatOp, env, use_pallas: bool):
         c, t, v = x.shape
         x2 = x.reshape(c * t, v)
         if op.primitive == "SpDMM":            # ELL holds Aᵀ? stored A side
-            idx, val = (jnp.asarray(a) for a in op.ell)
+            idx, val = ell_pair(op, params)
             out = kops.sparse_matmul(idx, val, x2.T,
                                      use_pallas=use_pallas).T
         else:
-            adj = jnp.asarray(op.weights["adj"])
+            adj = weight(op, "adj", params)
             out = (kops.matmul(x2, adj.T, use_pallas=use_pallas)
                    if use_pallas else _stable_matmul(x2, adj.T))
         out = out.reshape(c, t, v)
     else:
         raise ValueError(side)
-    return apply_epilogue(out, op, env)
+    return apply_epilogue(out, op, env, params)
 
 
 @register_op("sddmm")
-def run_sddmm(op: MatOp, env, use_pallas: bool):
+def run_sddmm(op: MatOp, env, use_pallas: bool, params=None):
     x = env[op.inputs[0]]
     if op.attrs.get("exec") == "coo":          # per-edge inner products
-        rows = jnp.asarray(op.weights["coo_rows"])
-        cols = jnp.asarray(op.weights["coo_cols"])
+        rows = weight(op, "coo_rows", params)
+        cols = weight(op, "coo_cols", params)
         return (x[rows] * x[cols]).sum(-1)
     if "mask" in op.weights:
-        mask = jnp.asarray(op.weights["mask"])
+        mask = weight(op, "mask", params)
         return kops.sampled_matmul(x, x.T, mask, use_pallas=use_pallas)
     return kops.matmul(x, x.T, use_pallas=use_pallas) \
         if use_pallas else x @ x.T

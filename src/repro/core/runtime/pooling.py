@@ -8,10 +8,11 @@ import jax.numpy as jnp
 
 from repro.core.plan import MatOp
 from repro.core.runtime.registry import register_op
+from repro.core.runtime.residency import ell_pair
 
 
 @register_op("pool2d")
-def run_pool2d(op: MatOp, env, use_pallas: bool):
+def run_pool2d(op: MatOp, env, use_pallas: bool, params=None):
     x = env[op.inputs[0]]
     wdw, s = op.attrs["window"], op.attrs["stride"]
     ones = (1,) * (x.ndim - 2)
@@ -25,7 +26,7 @@ def run_pool2d(op: MatOp, env, use_pallas: bool):
 
 
 @register_op("globalpool")
-def run_globalpool(op: MatOp, env, use_pallas: bool):
+def run_globalpool(op: MatOp, env, use_pallas: bool, params=None):
     x = env[op.inputs[0]]
     # Rank recorded at lowering time so batched (vmapped) execution, which
     # hides the batch axis from handlers, reduces the same axes.
@@ -35,9 +36,9 @@ def run_globalpool(op: MatOp, env, use_pallas: bool):
 
 
 @register_op("maxagg")
-def run_maxagg(op: MatOp, env, use_pallas: bool):
+def run_maxagg(op: MatOp, env, use_pallas: bool, params=None):
     x = env[op.inputs[0]]
-    idx, val = (jnp.asarray(a) for a in op.ell)
+    idx, val = ell_pair(op, params)
     gathered = x[idx]                                 # (N, L, F)
     valid = (val != 0)[..., None]
     neg = jnp.full_like(gathered, -jnp.inf)

@@ -6,7 +6,7 @@ kernel seam in lock-step.  The registry inverts that: each op kind lives in
 one handler module under ``repro/core/runtime/`` and announces itself with
 
     @register_op("mm")
-    def run_mm(op, env, use_pallas): ...
+    def run_mm(op, env, use_pallas, params=None): ...
 
 Handlers implement the ``OpHandler`` protocol; ``run_op`` is the only entry
 point the executor (and tests poking at single ops) need.  The registry is
@@ -16,17 +16,22 @@ op that lowers but cannot execute is caught at import time, not mid-run.
 """
 from __future__ import annotations
 
-from typing import Callable, Mapping, Protocol
+from typing import Callable, Mapping, Optional, Protocol
 
 from repro.core.plan import MatOp
+from repro.core.runtime.residency import ResidentParams
 
 
 class OpHandler(Protocol):
     """A per-kind executor: consumes ``env`` entries named by ``op.inputs``
     (plus any env names in ``op.attrs`` such as ``fused_residual``) and
-    returns the op's output array."""
+    returns the op's output array.  Compile-time arrays come from the
+    device-resident ``params`` pytree when one is bound (see
+    ``runtime/residency.py``); ``params=None`` falls back to staging
+    ``op.weights`` per call."""
 
-    def __call__(self, op: MatOp, env: Mapping, use_pallas: bool): ...
+    def __call__(self, op: MatOp, env: Mapping, use_pallas: bool,
+                 params: Optional[ResidentParams] = None): ...
 
 
 _HANDLERS: dict[str, OpHandler] = {}
@@ -58,9 +63,10 @@ def registered_kinds() -> frozenset[str]:
     return frozenset(_HANDLERS)
 
 
-def run_op(op: MatOp, env: Mapping, use_pallas: bool = False):
+def run_op(op: MatOp, env: Mapping, use_pallas: bool = False,
+           params: ResidentParams | None = None):
     """Execute one MatOp against ``env`` — the runtime's only dispatch."""
-    return get_handler(op.kind)(op, env, use_pallas)
+    return get_handler(op.kind)(op, env, use_pallas, params)
 
 
 def validate_registry(expected_kinds: frozenset[str]) -> None:

@@ -1,0 +1,184 @@
+"""Device-resident weight planning — the paper's on-chip parameter story.
+
+GCV-Turbo keeps model parameters resident in on-chip buffers so execution
+is pure data movement (§VII-D2).  The software analogue used to violate
+that twice over: every handler re-staged ``op.weights`` / ``op.ell`` via
+``jnp.asarray`` on each dispatch, and under ``jax.jit`` those arrays were
+baked into the traced program as *constants* — duplicated per (task,
+bucket) runner and re-embedded on every retrace.
+
+``collect_params`` walks an ``ExecutionPlan`` once at runner-build time and
+uploads every compile-time ndarray (weights, ELL structures, COO triples)
+to the device exactly once, **deduplicated by array identity** — a shared
+adjacency referenced by five message-passing ops is one device buffer, not
+five trace constants.  The result is a ``ResidentParams`` pytree the
+executor threads through ``jit`` as an *argument*:
+
+  * tracing no longer embeds weight constants, so per-bucket trace/compile
+    time and program size stop scaling with parameter count;
+  * the same device buffers serve every bucket of the same plan;
+  * weights can be hot-swapped (``swap``) without retracing — the jit cache
+    keys on shape/dtype, which a swap preserves.
+
+Handlers never touch ``params.arrays`` directly; they go through
+``weight`` / ``opt_weight`` / ``ell_pair``, which fall back to the legacy
+per-call ``jnp.asarray`` staging when no params are bound (``params is
+None``) — direct ``run_op`` pokes and ``residency=False`` runners keep the
+pre-residency behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import ExecutionPlan, MatOp
+
+# Slot names for the two halves of an op's ELL structure (``op.ell`` is a
+# positional (idx, val) pair, unlike the keyed ``op.weights``).
+ELL_IDX, ELL_VAL = "ell_idx", "ell_val"
+
+
+@dataclasses.dataclass
+class ResidentParams:
+    """A plan's compile-time arrays, resident on device.
+
+    ``arrays``  ref -> device array (deduplicated storage; this dict is the
+                jit argument pytree).
+    ``slots``   (op.name, slot) -> ref (static indexing metadata, never
+                traced).
+
+    ``bind`` produces a view over a *different* arrays dict with the same
+    slot map — inside a traced function the executor binds the incoming
+    tracers so handlers index tracers, not the concrete buffers.
+    """
+
+    arrays: dict[str, jax.Array]
+    slots: dict[tuple[str, str], str]
+    # Set by build_runner when the jitted program bakes these values in as
+    # trace constants (per-sample whole-program jit): the store is then
+    # host-side trace input only — swapping it would silently change
+    # nothing, so ``swap`` refuses.
+    trace_constants: bool = False
+
+    def bind(self, arrays) -> "ResidentParams":
+        return ResidentParams(arrays, self.slots)
+
+    def has(self, op: MatOp, slot: str) -> bool:
+        return (op.name, slot) in self.slots
+
+    def get(self, op: MatOp, slot: str):
+        return self.arrays[self.slots[(op.name, slot)]]
+
+    def nbytes(self) -> int:
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in self.arrays.values())
+
+    def swap(self, op_name: str, slot: str, value) -> None:
+        """Hot-swap one weight without retracing: the replacement must keep
+        shape and dtype (the jit cache key), so compiled programs keep
+        running against the new buffer."""
+        assert not self.trace_constants, \
+            "hot-swap has no effect on a runner whose jitted program " \
+            "baked weights in as trace constants (per-sample " \
+            "whole-program jit); swap on a batched/serving runner, which " \
+            "threads weights through jit as arguments"
+        ref = self.slots[(op_name, slot)]
+        old = self.arrays[ref]
+        new = jax.device_put(jnp.asarray(value, dtype=old.dtype))
+        assert new.shape == old.shape, \
+            f"swap {op_name!r}/{slot!r}: shape {new.shape} != {old.shape}"
+        self.arrays[ref] = new
+
+
+def collect_params(plan: ExecutionPlan, *,
+                   device: bool = True) -> ResidentParams:
+    """One pass over the plan: upload every compile-time ndarray once.
+
+    Dedup is by host-array identity (``id``) — the builder and the passes
+    share ndarrays when layers share structure (e.g. one adjacency feeding
+    several mp layers), and identity is the only equality that costs
+    nothing to check.  Two equal-but-distinct arrays simply upload twice,
+    which is what the pre-residency runtime did for every single call.
+
+    ``device=False`` keeps the store as host ndarray references (no
+    ``device_put``) — for runners whose jitted program will embed the
+    values as trace constants anyway, where uploading would hold a second,
+    never-read device copy of every parameter.
+    """
+    arrays: dict[str, jax.Array] = {}
+    slots: dict[tuple[str, str], str] = {}
+    by_id: dict[int, str] = {}
+
+    def ref_for(host_array) -> str:
+        key = id(host_array)
+        if key not in by_id:
+            ref = f"p{len(arrays)}"
+            by_id[key] = ref
+            arrays[ref] = jax.device_put(jnp.asarray(host_array)) \
+                if device else np.asarray(host_array)
+        return by_id[key]
+
+    for op in plan.ops:
+        # Step 4's ELL conversion supersedes the dense operand it was built
+        # from: the SpDMM / maxagg handlers execute from (idx, val) and
+        # never read the dense 'adj'/'w', so uploading it would waste
+        # device memory on a buffer nothing reads.
+        dead = ({"adj", "w"}
+                if op.ell is not None
+                and (op.primitive == "SpDMM" or op.kind == "maxagg")
+                else set())
+        for name, value in op.weights.items():
+            if value is None or name in dead:
+                continue
+            slots[(op.name, name)] = ref_for(value)
+        if op.ell is not None:
+            slots[(op.name, ELL_IDX)] = ref_for(op.ell[0])
+            slots[(op.name, ELL_VAL)] = ref_for(op.ell[1])
+    return ResidentParams(arrays, slots)
+
+
+# ---------------------------------------------------------- handler seam --
+def weight(op: MatOp, key: str, params: ResidentParams | None):
+    """A required compile-time array: resident when params are bound, else
+    staged per call (the legacy path, kept for direct ``run_op`` use)."""
+    if params is not None:
+        return params.get(op, key)
+    return jnp.asarray(op.weights[key])
+
+
+def opt_weight(op: MatOp, key: str, params: ResidentParams | None):
+    """An optional compile-time array, or None if the op doesn't carry it.
+    Presence is decided by ``op.weights`` (static), the value comes from
+    the resident pytree when bound."""
+    if op.weights.get(key) is None:
+        return None
+    return weight(op, key, params)
+
+
+def ell_pair(op: MatOp, params: ResidentParams | None):
+    """The op's (idx, val) ELL structure."""
+    if params is not None:
+        return params.get(op, ELL_IDX), params.get(op, ELL_VAL)
+    return tuple(jnp.asarray(a) for a in op.ell)
+
+
+def plan_param_bytes(plan: ExecutionPlan) -> int:
+    """Deduplicated parameter footprint of a plan, without uploading —
+    the sizing model for 'weights resident on chip'."""
+    seen: dict[int, int] = {}
+    for op in plan.ops:
+        dead = ({"adj", "w"}
+                if op.ell is not None
+                and (op.primitive == "SpDMM" or op.kind == "maxagg")
+                else set())
+        values = [v for k, v in op.weights.items()
+                  if v is not None and k not in dead]
+        if op.ell is not None:
+            values += [op.ell[0], op.ell[1]]
+        for v in values:
+            arr = np.asarray(v)
+            seen[id(v)] = arr.size * arr.itemsize
+    return int(sum(seen.values()))

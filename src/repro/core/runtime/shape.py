@@ -13,7 +13,7 @@ from repro.core.runtime.registry import register_op
 
 
 @register_op("transpose", "identity")
-def run_dm(op: MatOp, env, use_pallas: bool):
+def run_dm(op: MatOp, env, use_pallas: bool, params=None):
     x = env[op.inputs[0]]
     mode = op.attrs["mode"]
     if mode == "channel_to_node":
@@ -27,11 +27,11 @@ def run_dm(op: MatOp, env, use_pallas: bool):
 
 
 @register_op("reshape")
-def run_reshape(op: MatOp, env, use_pallas: bool):
+def run_reshape(op: MatOp, env, use_pallas: bool, params=None):
     return env[op.inputs[0]].reshape(op.attrs["shape"])
 
 
 @register_op("concat")
-def run_concat(op: MatOp, env, use_pallas: bool):
+def run_concat(op: MatOp, env, use_pallas: bool, params=None):
     return jnp.concatenate([env[i] for i in op.inputs],
                            axis=op.attrs["axis"])

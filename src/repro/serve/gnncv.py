@@ -1,11 +1,11 @@
-"""Micro-batching request engine for the GNN-CV task family (b1-b6).
+"""Micro-batching request engine for the GNN-CV task family (b1-b7).
 
 The LM ``ServeEngine`` batches homogeneous decode steps over slots; GNN-CV
 inference is the opposite shape of problem — each request is one
-whole-program execution of a *heterogeneous* task (b1-b6), so the batching
+whole-program execution of a *heterogeneous* task (b1-b7), so the batching
 axis is requests-per-compiled-plan, not tokens-per-slot:
 
-  * requests queue per task; each engine step serves the task whose front
+  * requests queue per task; each dispatch serves the task whose front
     request has waited longest, draining everything queued behind it
     through that task's batched runner (``build_runner(plan, batch=N)``);
   * batch sizes are quantized to power-of-two buckets (short batches are
@@ -13,15 +13,28 @@ axis is requests-per-compiled-plan, not tokens-per-slot:
     (``core.runtime.cache``) holds at most log2(max_batch)+1 compiled
     runners per task — the paper's fixed-latency argument (§VII-D2)
     carried to serving: after warmup, no step ever recompiles;
+  * ``warmup()`` goes further and AOT-compiles every (task, bucket)
+    runner before traffic arrives (``run.aot_compile()`` — one trace +
+    XLA compile each, priming the jit dispatch fast path), so no live
+    request ever pays a jit trace — ``stats()['runner_misses']`` freezes;
+  * serving is **pipelined**: ``dispatch()`` launches a batch and leaves
+    its outputs as in-flight device arrays (JAX async dispatch), so batch
+    k+1 is assembled and launched while batch k executes; ``harvest()``
+    blocks on the oldest in-flight batch and materializes results.
+    ``pipeline_depth`` bounds in-flight batches (depth 1 = the old
+    synchronous step);
   * the Step-6 liveness annotations bound the per-sample activation
     working set; ``plan.peak_live_bytes() x batch`` is the planner's
     sizing model for a server (under jit, XLA's own buffer reuse — which
-    the annotations mirror — is what realizes it).
+    the annotations mirror — is what realizes it).  Weights are
+    device-resident plan state shared across every bucket of a task
+    (``core.runtime.residency``), not per-bucket trace constants.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import deque
 
 import numpy as np
@@ -39,6 +52,8 @@ class TaskRequest:
     inputs: dict                       # per-sample input arrays, unstacked
     result: tuple | None = None        # tuple of np outputs once done
     done: bool = False
+    t_submit: float = 0.0              # perf_counter at intake
+    t_done: float = 0.0                # perf_counter when harvested
 
 
 class GNNCVServeEngine:
@@ -47,7 +62,8 @@ class GNNCVServeEngine:
     def __init__(self, graphs: dict[str, Graph], *,
                  options: CompileOptions = CompileOptions(),
                  max_batch: int = 8, use_pallas: bool = False,
-                 jit: bool = True):
+                 jit: bool = True, pipeline_depth: int = 2,
+                 residency: bool = True):
         self.graphs = dict(graphs)
         self.options = options
         # power of two keeps _bucket's doubling landing on the cap and the
@@ -55,21 +71,27 @@ class GNNCVServeEngine:
         # values beats silently serving at a different capacity
         assert max_batch >= 1 and max_batch & (max_batch - 1) == 0, \
             f"max_batch must be a power of two, got {max_batch}"
+        assert pipeline_depth >= 1, \
+            f"pipeline_depth must be >= 1, got {pipeline_depth}"
         self.max_batch = max_batch
         self.use_pallas = use_pallas
         self.jit = jit
+        self.pipeline_depth = pipeline_depth
+        self.residency = residency
         self.plans = {t: cached_plan(g, options)
                       for t, g in self.graphs.items()}
         self.queues: dict[str, deque] = {t: deque() for t in self.graphs}
         self._rid = itertools.count()
+        self._inflight: deque[tuple[list[TaskRequest], tuple]] = deque()
+        self._warmed: set[tuple[str, int]] = set()
         self.completed = 0
         self.steps = 0
 
     # ------------------------------------------------------------ intake --
     def submit(self, task: str, **inputs) -> TaskRequest:
         """Validated intake: a malformed request is rejected here, where it
-        can only hurt its own caller — inside ``step`` it would take a whole
-        popped batch down with it."""
+        can only hurt its own caller — inside ``dispatch`` it would take a
+        whole popped batch down with it."""
         assert task in self.graphs, f"unknown task {task!r}"
         plan = self.plans[task]
         missing = set(plan.input_names) - inputs.keys()
@@ -84,21 +106,26 @@ class GNNCVServeEngine:
             assert got == want, \
                 f"task {task!r}, input {name!r}: expected per-sample " \
                 f"shape {want}, got {got}"
-        req = TaskRequest(next(self._rid), task, inputs)
+        req = TaskRequest(next(self._rid), task, inputs,
+                          t_submit=time.perf_counter())
         self.queues[task].append(req)
         return req
 
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values())
 
+    def inflight(self) -> int:
+        return sum(len(reqs) for reqs, _ in self._inflight)
+
     def stats(self) -> dict:
         """Serving counters plus the plan/runner-cache effectiveness
-        numbers (hits/misses) — after warmup a healthy engine shows
+        numbers (hits/misses) — after ``warmup`` a healthy engine shows
         ``runner_hits`` growing and ``runner_misses`` frozen at one per
         (task, bucket)."""
         from repro.core.runtime.cache import cache_stats
         return {"completed": self.completed, "steps": self.steps,
-                "pending": self.pending(), "tasks": len(self.graphs),
+                "pending": self.pending(), "inflight": self.inflight(),
+                "tasks": len(self.graphs), "warmed": len(self._warmed),
                 **cache_stats()}
 
     @staticmethod
@@ -108,15 +135,63 @@ class GNNCVServeEngine:
             b *= 2
         return min(b, cap)
 
-    # -------------------------------------------------------------- step --
-    def step(self) -> int:
-        """Drain one batch; returns requests served.
+    def buckets(self) -> list[int]:
+        """Every batch size the engine can dispatch: powers of two up to
+        ``max_batch``."""
+        out, b = [], 1
+        while b <= self.max_batch:
+            out.append(b)
+            b *= 2
+        return out
+
+    def _runner(self, task: str, bucket: int):
+        return cached_runner(self.graphs[task], self.options, batch=bucket,
+                             use_pallas=self.use_pallas, jit=self.jit,
+                             residency=self.residency)
+
+    @staticmethod
+    def _stack(samples: list[dict]) -> dict:
+        """Batch assembly hook (host-side ``np.stack``, one device
+        transfer per input name); benchmarks override it to reconstruct
+        legacy serving paths."""
+        return stack_inputs(samples)
+
+    # ------------------------------------------------------------ warmup --
+    def warmup(self, tasks=None, buckets=None) -> set[tuple[str, int]]:
+        """AOT-compile every (task, bucket) runner before traffic arrives.
+
+        Each runner is built (populating the plan/runner cache — the only
+        ``runner_misses`` a healthy server ever records) and its jitted
+        program traced + XLA-compiled from the plan's recorded input
+        shapes (``run.aot_compile()``), so no live request pays tracing
+        or compilation.  Returns the set of (task, bucket) pairs now
+        compiled; with ``jit=False`` there is nothing to compile and the
+        set stays empty.
+        """
+        tasks = list(self.graphs) if tasks is None else list(tasks)
+        buckets = self.buckets() if buckets is None else list(buckets)
+        for task in tasks:
+            assert task in self.graphs, f"unknown task {task!r}"
+            for bucket in buckets:
+                run = self._runner(task, bucket)
+                if run.aot_compile() is not None:
+                    self._warmed.add((task, bucket))
+        return set(self._warmed)
+
+    # ---------------------------------------------------------- dispatch --
+    def dispatch(self) -> int:
+        """Launch one batch without blocking on its results; returns the
+        number of requests dispatched (0 when every queue is empty).
 
         Scheduling is oldest-head-first: the task whose front request has
         waited longest is served, taking everything queued behind it up to
         ``max_batch``.  Same-task requests still coalesce into one batched
-        dispatch, but no task can be starved by sustained load on another
-        (a deepest-queue-first policy would defer a minority task forever)."""
+        launch, but no task can be starved by sustained load on another
+        (a deepest-queue-first policy would defer a minority task forever).
+
+        Outputs stay as in-flight device arrays — JAX's async dispatch
+        means the host returns here immediately and can assemble the next
+        batch while the device executes this one."""
         ready = [t for t, q in self.queues.items() if q]
         if not ready:
             return 0
@@ -126,22 +201,55 @@ class GNNCVServeEngine:
         bucket = self._bucket(take, self.max_batch)
         reqs = [queue.popleft() for _ in range(take)]
         padded = reqs + [reqs[-1]] * (bucket - take)
-        run = cached_runner(self.graphs[task], self.options, batch=bucket,
-                            use_pallas=self.use_pallas, jit=self.jit)
-        outs = run(**stack_inputs([r.inputs for r in padded]))
-        for i, req in enumerate(reqs):
-            req.result = tuple(np.asarray(o[i]) for o in outs)
-            req.done = True
-        self.completed += len(reqs)
+        run = self._runner(task, bucket)
+        outs = run(**self._stack([r.inputs for r in padded]))
+        self._inflight.append((reqs, outs))
         self.steps += 1
         return len(reqs)
 
+    def harvest(self) -> int:
+        """Materialize the oldest in-flight batch (blocks until the device
+        finishes it); returns requests completed, 0 if nothing in flight.
+
+        Each batched output transfers to the host *once* and is sliced
+        per-request there (copies, so results don't pin the padded batch
+        buffers) — per-request ``np.asarray(o[i])`` device slices cost
+        O(batch) transfers per output name."""
+        if not self._inflight:
+            return 0
+        reqs, outs = self._inflight.popleft()
+        mats = [np.asarray(o) for o in outs]
+        for i, req in enumerate(reqs):
+            req.result = tuple(np.array(m[i]) for m in mats)
+            req.done = True
+            req.t_done = time.perf_counter()
+        self.completed += len(reqs)
+        return len(reqs)
+
+    # -------------------------------------------------------------- step --
+    def step(self) -> int:
+        """Synchronous serving step (dispatch one batch, harvest everything
+        in flight); returns requests dispatched.  The pipelined path is
+        ``run`` — ``step`` keeps the old blocking contract for callers that
+        need results materialized before the next submit."""
+        n = self.dispatch()
+        while self._inflight:
+            self.harvest()
+        return n
+
     def run(self, max_steps: int = 10_000) -> int:
-        """Drive until every queue drains; returns requests served."""
+        """Drive until every queue drains; returns requests served.
+
+        Pipelined: keeps up to ``pipeline_depth`` batches in flight, so
+        host-side batch assembly (queue pops, padding, host stacking)
+        overlaps device execution of the previous batch."""
         served = 0
         for _ in range(max_steps):
-            n = self.step()
-            served += n
-            if n == 0 and not self.pending():
-                break
+            n = self.dispatch()
+            if n == 0 and not self._inflight:
+                break          # dispatch()==0 means every queue is empty
+            if n == 0 or len(self._inflight) >= self.pipeline_depth:
+                served += self.harvest()
+        while self._inflight:
+            served += self.harvest()
         return served

@@ -1,0 +1,245 @@
+"""Device-resident weight planning: golden parity of residency-mode
+runners against the pre-refactor path (per-sample and batched),
+identity-deduplicated uploads, AOT warmup semantics, and weight hot-swap
+without retracing."""
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CompileOptions, build_runner, compile_graph
+from repro.core.executor import random_inputs, stack_inputs
+from repro.core.ir import GraphBuilder
+from repro.core.plan import ExecutionPlan, MatOp
+from repro.core.runtime.residency import (collect_params, ell_pair,
+                                          opt_weight, plan_param_bytes,
+                                          weight)
+from repro.gnncv.tasks import build_task
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+GOLDEN_TASKS = ["b1", "b2", "b3-r50", "b4", "b5", "b6"]
+GOLDEN_SEED = 7
+OPTS = CompileOptions(target="fpga")
+
+
+def _plan(task):
+    return compile_graph(build_task(task, small=True), OPTS)
+
+
+# ------------------------------------------------------- golden parity ----
+@pytest.mark.parametrize("task", GOLDEN_TASKS)
+def test_residency_runner_matches_golden_per_sample(task):
+    """Residency-mode per-sample runners (the default) reproduce the
+    pre-refactor goldens bit-for-bit: weights become device-resident plan
+    state, but the whole-program jit keeps them as trace constants because
+    XLA folds/fuses constant weights differently from parameters — the
+    golden numerics are pinned to the constant-weights program."""
+    plan = _plan(task)
+    run = build_runner(plan, residency=True)
+    assert run.resident is not None and run.resident.nbytes() > 0
+    outs = run(**random_inputs(plan, seed=GOLDEN_SEED))
+    gold = np.load(GOLDEN_DIR / f"{task}.npz")
+    for i, out in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(out), gold[f"out{i}"])
+
+
+@pytest.mark.parametrize("task", GOLDEN_TASKS)
+def test_residency_batched_matches_pre_refactor_bitexact(task):
+    """batch=4 residency-mode output == the legacy per-call-staging path,
+    bit-for-bit (the batched runner threads the resident pytree through
+    the program as an argument)."""
+    plan = _plan(task)
+    samples = [random_inputs(plan, seed=s) for s in range(4)]
+    stacked = stack_inputs(samples)
+    new = build_runner(plan, batch=4, residency=True)(**stacked)
+    old = build_runner(plan, batch=4, residency=False)(**stacked)
+    for a, b in zip(new, old):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_batched_jit_args_mode_matches_eager():
+    """The serving configuration (batch=N, jit=True, weights as jit
+    arguments) computes the same batched program as eager per-op dispatch
+    up to XLA realization differences."""
+    plan = _plan("b6")
+    samples = [random_inputs(plan, seed=s) for s in range(2)]
+    stacked = stack_inputs(samples)
+    jitted = build_runner(plan, batch=2, jit=True)(**stacked)
+    eager = build_runner(plan, batch=2, jit=False)(**stacked)
+    for a, b in zip(jitted, eager):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# -------------------------------------------------------- deduplication ---
+def test_collect_params_dedups_by_identity():
+    """One host array referenced by several ops uploads exactly once."""
+    shared = np.ones((4, 4), np.float32)
+    ops = [MatOp("a", "mm", ("x",), weights={"w": shared},
+                 attrs={"weight_side": "right"}, out_shape=(4, 4)),
+           MatOp("b", "mm", ("a",), weights={"w": shared},
+                 attrs={"weight_side": "right"}, out_shape=(4, 4))]
+    plan = ExecutionPlan("shared", ["x"], ops, ["b"],
+                         meta={"input_shapes": {"x": (4, 4)}})
+    params = collect_params(plan)
+    assert params.slots[("a", "w")] == params.slots[("b", "w")]
+    assert len(params.arrays) == 1
+    assert params.nbytes() == shared.nbytes
+    assert plan_param_bytes(plan) == shared.nbytes
+
+
+def test_shared_adjacency_uploads_once():
+    """A graph-level shared adjacency stays one device buffer across every
+    mp layer that references it."""
+    rng = np.random.default_rng(0)
+    n, f = 12, 8
+    adj = (rng.random((n, n)) < 0.8).astype(np.float32)  # dense: no ELL win
+    b = GraphBuilder("shared_adj")
+    x = b.input((n, f), name="x")
+    h = b.mp(x, adj=adj)
+    h = b.mp(h, adj=adj)
+    g = b.output(h)
+    plan = compile_graph(g, OPTS)
+    mp_ops = [op for op in plan.ops if "adj" in op.weights]
+    assert len(mp_ops) == 2
+    params = collect_params(plan)
+    refs = {params.slots[(op.name, "adj")] for op in mp_ops
+            if params.has(op, "adj")}
+    # either both ops share one resident buffer, or ELL conversion
+    # superseded the dense operand entirely (zero 'adj' uploads)
+    assert len(refs) <= 1
+
+
+def test_ell_supersedes_dense_operand():
+    """When Step 4 chose SpDMM, the dense 'adj'/'w' the ELL was built from
+    is dead — it must not be uploaded."""
+    for plan in (_plan("b6"), _plan("b2")):
+        params = collect_params(plan)
+        for op in plan.ops:
+            if op.ell is not None and op.primitive == "SpDMM":
+                assert not params.has(op, "adj")
+                assert not params.has(op, "w")
+                assert params.has(op, "ell_idx")
+                assert params.has(op, "ell_val")
+
+
+# ------------------------------------------------------- handler seam -----
+def test_handler_seam_falls_back_without_params():
+    """weight/opt_weight/ell_pair serve handlers identically with bound
+    params and with the legacy params=None staging."""
+    idx = np.zeros((3, 2), np.int32)
+    val = np.ones((3, 2), np.float32)
+    op = MatOp("o", "mm", ("x",),
+               weights={"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                        "b": None},
+               attrs={"weight_side": "right"}, out_shape=(3,),
+               ell=(idx, val))
+    plan = ExecutionPlan("p", ["x"], [op], ["o"],
+                         meta={"input_shapes": {"x": (2,)}})
+    params = collect_params(plan)
+    np.testing.assert_array_equal(np.asarray(weight(op, "w", params)),
+                                  np.asarray(weight(op, "w", None)))
+    assert opt_weight(op, "b", params) is None
+    assert opt_weight(op, "b", None) is None
+    for a, b in zip(ell_pair(op, params), ell_pair(op, None)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------- AOT + trace economy ----
+def test_aot_compile_freezes_tracing_under_traffic():
+    """After aot_compile(), live calls never trace again — the serving
+    fixed-latency contract."""
+    plan = _plan("b6")
+    run = build_runner(plan, batch=2, jit=True)
+    assert run.aot_compile() is not None
+    warm_traces = run.trace_count()
+    assert warm_traces >= 1
+    for s in range(3):
+        samples = [random_inputs(plan, seed=s), random_inputs(plan, seed=9)]
+        run(**stack_inputs(samples))
+    assert run.trace_count() == warm_traces
+    # idempotent: a second aot_compile reuses the warm program
+    exe = run.aot_compile()
+    assert run.aot_compile() is exe
+
+
+def test_aot_explicit_executable_matches_fast_path():
+    """aot_compile(explicit=True) materializes the standalone
+    lower().compile() artifact; it computes the same outputs the primed
+    jit fast path serves."""
+    plan = _plan("b6")
+    run = build_runner(plan, batch=2, jit=True)
+    exe = run.aot_compile(explicit=True)
+    assert exe is not None and exe is not run.aot_compile()
+    assert run.aot_compile(explicit=True) is exe     # cached
+    samples = [random_inputs(plan, seed=0), random_inputs(plan, seed=1)]
+    env = {k: jnp.asarray(v)
+           for k, v in stack_inputs(samples).items()}
+    via_exe = exe(run.resident.arrays, env)
+    via_run = run(**stack_inputs(samples))
+    for a, b in zip(via_exe, via_run):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_aot_compile_is_none_for_eager_runners():
+    plan = _plan("b6")
+    assert build_runner(plan, jit=False).aot_compile() is None
+
+
+# --------------------------------------------------------- hot swap -------
+def test_weight_hot_swap_without_retrace():
+    """resident.swap replaces a device buffer in place: outputs change,
+    the compiled program does not."""
+    plan = _plan("b6")
+    run = build_runner(plan, batch=2, jit=True)
+    run.aot_compile()
+    traces = run.trace_count()
+    samples = [random_inputs(plan, seed=0), random_inputs(plan, seed=1)]
+    before = np.asarray(run(**stack_inputs(samples))[0])
+
+    target = next(op for op in plan.ops if op.weights.get("w") is not None)
+    old = np.asarray(target.weights["w"])
+    run.resident.swap(target.name, "w", old * 2.0)
+    after = np.asarray(run(**stack_inputs(samples))[0])
+    assert not np.array_equal(before, after)
+    assert run.trace_count() == traces          # no retrace
+
+    run.resident.swap(target.name, "w", old)    # restore
+    restored = np.asarray(run(**stack_inputs(samples))[0])
+    np.testing.assert_array_equal(restored, before)
+
+
+def test_swap_rejects_shape_change():
+    plan = _plan("b6")
+    run = build_runner(plan, batch=2, jit=True)
+    target = next(op for op in plan.ops if op.weights.get("w") is not None)
+    with pytest.raises(AssertionError, match="shape"):
+        run.resident.swap(target.name, "w", np.zeros((1, 1), np.float32))
+
+
+def test_swap_refused_on_trace_constant_runner():
+    """A per-sample whole-program-jit runner bakes weights in as trace
+    constants; swapping its store could only return stale results, so
+    swap refuses instead."""
+    plan = _plan("b6")
+    run = build_runner(plan)                  # jit=True, batch=None
+    assert run.resident.trace_constants
+    target = next(op for op in plan.ops if op.weights.get("w") is not None)
+    old = np.asarray(target.weights["w"])
+    with pytest.raises(AssertionError, match="trace constants"):
+        run.resident.swap(target.name, "w", old * 2.0)
+
+
+# ------------------------------------------------------- stack_inputs -----
+def test_stack_inputs_host_stacks_once_per_name():
+    """Host-side stacking is value-identical to the old per-sample device
+    stacking and produces one device array per input name."""
+    plan = _plan("b4")
+    samples = [random_inputs(plan, seed=s) for s in range(3)]
+    stacked = stack_inputs(samples)
+    for name in plan.input_names:
+        want = np.stack([np.asarray(s[name]) for s in samples])
+        got = np.asarray(stacked[name])
+        np.testing.assert_array_equal(got, want)
+        assert got.dtype == want.dtype

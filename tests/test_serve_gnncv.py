@@ -153,6 +153,86 @@ def test_cache_hit_miss_counters(graphs):
     assert cache_stats()["runner_hits"] == 0
 
 
+def test_warmup_covers_every_task_bucket(graphs):
+    """warmup() AOT-compiles the full (task, bucket) grid — the CI gate
+    that fails the job if any runner would compile during live traffic."""
+    clear_caches()
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=4)
+    warmed = eng.warmup()
+    assert warmed == {(t, b) for t in graphs for b in (1, 2, 4)}
+    assert eng.stats()["warmed"] == len(graphs) * 3
+
+
+def test_warmup_freezes_runner_misses_under_traffic(graphs):
+    """After warmup(), steady-state traffic across every batch size never
+    misses the runner cache and never compiles — misses stay frozen at the
+    warmup count while hits grow."""
+    clear_caches()
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=4)
+    eng.warmup()
+    warm = eng.stats()
+    assert warm["runner_misses"] == len(graphs) * 3
+    reqs = []
+    for n in (1, 3, 4, 2):                     # pads into every bucket
+        for task in graphs:
+            for s in range(n):
+                reqs.append(eng.submit(
+                    task, **request_inputs(eng.plans[task], seed=s)))
+        eng.run()
+    hot = eng.stats()
+    assert all(r.done for r in reqs)
+    assert hot["runner_misses"] == warm["runner_misses"]
+    assert hot["runner_hits"] > warm["runner_hits"]
+
+
+def test_pipelined_run_matches_direct_runs(graphs):
+    """Depth-2 pipelining (dispatch k+1 while k is in flight) must not
+    change results or lose requests across a heterogeneous stream."""
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=4,
+                           pipeline_depth=2)
+    reqs = []
+    for s in range(12):
+        task = ("b1", "b4", "b6")[s % 3]
+        reqs.append(eng.submit(
+            task, **request_inputs(eng.plans[task], seed=s)))
+    assert eng.run() == 12
+    assert eng.pending() == 0 and eng.inflight() == 0
+    for req in reqs:
+        ref = build_runner(cached_plan(graphs[req.task], OPTS))(**req.inputs)
+        for got, want in zip(req.result, ref):
+            np.testing.assert_allclose(got, np.asarray(want),
+                                       rtol=1e-4, atol=1e-5)
+
+
+def test_dispatch_harvest_split(graphs):
+    """dispatch() is non-blocking intake->device; results only materialize
+    at harvest()."""
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=4)
+    plan = eng.plans["b6"]
+    reqs = [eng.submit("b6", **request_inputs(plan, seed=s))
+            for s in range(2)]
+    assert eng.dispatch() == 2
+    assert eng.inflight() == 2 and not any(r.done for r in reqs)
+    assert eng.completed == 0
+    assert eng.harvest() == 2
+    assert all(r.done and r.result is not None for r in reqs)
+    assert eng.inflight() == 0 and eng.completed == 2
+    assert eng.harvest() == 0                  # nothing left in flight
+
+
+def test_request_timestamps_recorded(graphs):
+    eng = GNNCVServeEngine(graphs, options=OPTS, max_batch=2)
+    req = eng.submit("b6", **request_inputs(eng.plans["b6"], seed=0))
+    assert req.t_submit > 0 and req.t_done == 0.0
+    eng.run()
+    assert req.t_done >= req.t_submit
+
+
+def test_invalid_pipeline_depth_rejected(graphs):
+    with pytest.raises(AssertionError, match="pipeline_depth"):
+        GNNCVServeEngine(graphs, options=OPTS, pipeline_depth=0)
+
+
 def test_engine_stats_surface_cache_effectiveness(graphs):
     """After warmup, repeat traffic must show runner hits growing while
     misses stay frozen at one per (task, bucket)."""
