@@ -9,8 +9,8 @@ import pathlib
 import platform
 import time
 
+from repro import gcv
 from repro.core import CompileOptions, compile_graph
-from repro.core.executor import build_runner, random_inputs
 from repro.core.perf_model import FPGA
 
 
@@ -37,12 +37,12 @@ def compile_task(graph, **opts):
 def measure_wall_ms(plan, iters: int = 3, use_pallas: bool = False) -> float:
     """CPU wall-clock of the jit'd executor (sanity only — the modelled
     latency is the paper-comparable number)."""
-    run = build_runner(plan, use_pallas=use_pallas)
-    ins = random_inputs(plan)
-    out = run(**ins)                         # compile + warm
+    model = gcv.compile(plan, use_pallas=use_pallas)
+    ins = model.random_inputs()
+    out = model.run(**ins)                   # compile + warm
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = run(**ins)
+        out = model.run(**ins)
     _ = [o for o in (out if isinstance(out, (list, tuple)) else [out])]
     return (time.perf_counter() - t0) / iters * 1e3
 

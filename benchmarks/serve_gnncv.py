@@ -1,6 +1,6 @@
 """Throughput of the GNN-CV serving engine across three serving modes over
 a mixed request stream of *builder* models (b1/b4/b6) and *traced*
-user-defined JAX models (b2/b4/b7 via ``frontend.compile_model``'s path):
+user-defined JAX models (b2/b4/b7 via ``gcv.compile``'s tracing path):
 
   one_at_a_time     the seed serving story: every request dispatches its
                     own jit'd per-sample runner;
@@ -35,8 +35,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro import gcv
 from repro.core import CompileOptions
-from repro.core.runtime.cache import cached_plan, cached_runner
 from repro.core.runtime.residency import plan_param_bytes
 from repro.gnncv.jax_tasks import build_traced_task
 from repro.gnncv.tasks import SMALL_CONFIGS, build_task, request_inputs
@@ -84,16 +84,16 @@ class PR3BaselineEngine(GNNCVServeEngine):
 
 
 def bench_one_at_a_time(graphs, options, stream, repeats):
-    runners = {t: cached_runner(graphs[t], options) for t in graphs}
+    models = {t: gcv.compile(graphs[t], options=options) for t in graphs}
     for task, inputs in stream[:len(MIX)]:          # warm compiles
-        runners[task](**inputs)
+        models[task].run(**inputs)
     best, best_lats = float("inf"), []
     for _ in range(repeats):
         t0 = time.perf_counter()
         lats = []
         for task, inputs in stream:
             # materialize each response, like a server answering a request
-            _ = [np.asarray(o) for o in runners[task](**inputs)]
+            _ = [np.asarray(o) for o in models[task].run(**inputs)]
             lats.append(time.perf_counter() - t0)
         dt = time.perf_counter() - t0
         if dt < best:
@@ -109,8 +109,7 @@ def bench_engine(graphs, options, stream, max_batch, *, pipelined: bool,
     weight staging."""
     kw = dict(options=options, max_batch=max_batch)
     if pipelined:
-        eng = GNNCVServeEngine(graphs, pipeline_depth=2, residency=True,
-                               **kw)
+        eng = gcv.serve(graphs, pipeline_depth=2, residency=True, **kw)
         warmed = eng.warmup()                       # AOT: trace+compile now
         assert warmed == {(t, b) for t in graphs for b in eng.buckets()}, \
             "warmup left (task, bucket) runners uncompiled"
@@ -160,7 +159,8 @@ def run(requests: int = 96, max_batch: int = 8, repeats: int = 5):
     # (ViG) exists only through the tracing frontend.
     graphs.update({f"{t}@traced": build_traced_task(t, small=True)
                    for t in TRACED_MIX})
-    plans = {t: cached_plan(g, options) for t, g in graphs.items()}
+    plans = {t: gcv.compile(g, options=options).plan
+             for t, g in graphs.items()}
     stream = make_stream(plans, requests)
 
     loop_s, loop_lats = bench_one_at_a_time(graphs, options, stream,
@@ -193,7 +193,7 @@ def run(requests: int = 96, max_batch: int = 8, repeats: int = 5):
     rows, task_records = [], {}
     for task, g in {**all_graphs,
                     **{t: graphs[t] for t in MIX if "@" in t}}.items():
-        plan = cached_plan(g, options)
+        plan = gcv.compile(g, options=options).plan
         freed = plan.peak_live_bytes(free_dead=True)
         kept = plan.peak_live_bytes(free_dead=False)
         resident = plan_param_bytes(plan)

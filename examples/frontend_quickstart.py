@@ -4,8 +4,9 @@ The declarative ``GraphBuilder`` path (examples/quickstart.py) requires
 re-expressing a model layer by layer.  This is the other ingestion path —
 the paper's "takes a user-defined model as input" promise: write an
 ordinary JAX function (convs, matmuls, pooling as plain ``jax``/``jnp``;
-GNN aggregation through ``repro.frontend.nn``), trace it, compile it
-through the unchanged six-pass pipeline, and run the plan.
+GNN aggregation through ``repro.frontend.nn``) and hand it to
+``gcv.compile``, which traces it, runs the six-pass compiler, and returns
+a ``CompiledModel`` owning the whole lifecycle.
 
     PYTHONPATH=src python examples/frontend_quickstart.py
 """
@@ -13,8 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import frontend
-from repro.core import CompileOptions, build_runner
+from repro import gcv
 from repro.frontend import nn
 
 rng = np.random.default_rng(0)
@@ -47,17 +47,16 @@ def model(images):
     return h @ w_out
 
 
-# -- trace the callable into the layer-graph IR
+# -- one call: trace -> canonicalize -> six passes -> runner lifecycle
 images = rng.standard_normal((6, 1, 12, 12)).astype(np.float32)
-graph = frontend.to_graph(model, {"images": images}, name="user_model")
+compiled = gcv.compile(model, {"images": images}, target="fpga",
+                       name="user_model")
 print("recovered layers:", [f"{l.name}:{l.kind}" for l in
-                            graph.toposorted()])
+                            compiled.graph.toposorted()])
 
-# -- the unchanged six-pass compiler + op-registry runtime take it from here
-plan = frontend.compile_model(model, {"images": images},
-                              CompileOptions(target="fpga"))
-out = np.asarray(build_runner(plan)(images=images)[0])
+out = np.asarray(compiled.run(images=images)[0])
 direct = np.asarray(model(jnp.asarray(images)))
-print("primitives used:", plan.primitive_counts())
+print("primitives used:", compiled.plan.primitive_counts())
 print("max |compiled - direct jax|:", float(np.abs(out - direct).max()))
 print("logits[0]:", out[0].round(3))
+print("lifecycle stats:", compiled.stats())

@@ -6,8 +6,7 @@ structure of the paper's evaluation on CPU.
 """
 import numpy as np
 
-from repro.core import CompileOptions, build_runner, compile_graph
-from repro.core.executor import random_inputs
+from repro import gcv
 from repro.core.perf_model import FPGA
 from repro.gnncv import tasks
 
@@ -29,14 +28,14 @@ def main():
           f"{'live KB':>8s} {'kept KB':>8s}")
     for name, build in builders.items():
         g = build()
-        plan = compile_graph(g, CompileOptions(target="fpga"))
-        base = compile_graph(g, CompileOptions(
-            target="fpga", fuse=False, sparsity_aware=False))
-        run = build_runner(plan)
-        out = run(**random_inputs(plan))
+        model = gcv.compile(g, target="fpga")
+        base = gcv.compile(g, target="fpga", fuse=False,
+                           sparsity_aware=False)
+        out = model.run(**model.random_inputs())
         shape = np.asarray(out[0]).shape
+        plan = model.plan
         print(f"{name:15s} {str(shape):>8s} {latency_ms(plan):9.3f} "
-              f"{latency_ms(base):10.3f} "
+              f"{latency_ms(base.plan):10.3f} "
               f"{plan.peak_live_bytes() / 1024:8.0f} "
               f"{plan.peak_live_bytes(free_dead=False) / 1024:8.0f}")
     print("\n(optimized = six-pass compile with DM fusion, sparsity-aware "

@@ -7,9 +7,8 @@ GCV-Turbo compiler, execute the plan, and print the modelled latency split.
 """
 import numpy as np
 
-from repro.core import CompileOptions, GraphBuilder, build_runner, \
-    compile_graph
-from repro.core.executor import random_inputs
+from repro import gcv
+from repro.core import GraphBuilder
 from repro.core.perf_model import FPGA
 
 rng = np.random.default_rng(0)
@@ -32,11 +31,11 @@ h = b.linear(h, rng.standard_normal((16, 10)).astype(np.float32) * 0.1)
 h = b.globalpool(h, kind="avg")
 g = b.output(h)
 
-# -- compile (five passes) and run
-plan = compile_graph(g, CompileOptions(target="fpga"))
-run = build_runner(plan)
-out = run(**random_inputs(plan))
+# -- compile (six passes) and run through the one-call facade
+model = gcv.compile(g, target="fpga")
+out = model.run(**model.random_inputs())
 print("output:", np.asarray(out[0]).round(3))
-print("primitives used:", plan.primitive_counts())
-lat = sum(FPGA.op_seconds(op.cycles, op.bytes_moved) for op in plan.ops)
+print("primitives used:", model.plan.primitive_counts())
+lat = sum(FPGA.op_seconds(op.cycles, op.bytes_moved)
+          for op in model.plan.ops)
 print(f"modelled batch-1 latency: {lat*1e6:.1f} us")

@@ -199,6 +199,7 @@ def build_runner(plan: ExecutionPlan, *, use_pallas: bool = False,
     run.resident = resident
     run.aot_compile = aot_compile
     run.trace_count = lambda: traces["n"]
+    run.input_specs = input_specs
     return run
 
 

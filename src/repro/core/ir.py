@@ -208,9 +208,13 @@ class GraphBuilder:
                          weights))
         return n
 
-    def act(self, x, fn="relu", name=None):
+    def act(self, x, fn="relu", name=None, *, alpha=None):
+        """``alpha``: leaky_relu slope (defaults to the runtime's 0.2)."""
         n = self._name("act", name)
-        self.g.add(Layer(n, "act", (x,), {"fn": fn}))
+        params = {"fn": fn}
+        if alpha is not None:
+            params["alpha"] = float(alpha)
+        self.g.add(Layer(n, "act", (x,), params))
         return n
 
     def add(self, x, y, name=None):

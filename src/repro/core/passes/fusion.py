@@ -96,6 +96,8 @@ def fuse_layers(g: Graph, *, enable: bool = True,
                 and prod.kind in _COMPUTE and single
                 and "fused_act" not in prod.params):
             prod.params["fused_act"] = layer.params["fn"]
+            if layer.params.get("alpha") is not None:
+                prod.params["fused_act_alpha"] = layer.params["alpha"]
             if "fused_residual" in prod.params:
                 prod.params["act_pos"] = "post_res"
             dead.add(layer.name)

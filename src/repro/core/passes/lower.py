@@ -30,6 +30,13 @@ def _density(w: np.ndarray) -> float:
     return float((w != 0).sum()) / max(w.size, 1)
 
 
+def _act_attrs(p: dict) -> dict:
+    """The fused-activation epilogue attrs every compute MatOp carries
+    (one definition, so a new epilogue parameter lands everywhere)."""
+    return {"fused_act": p.get("fused_act"),
+            "fused_act_alpha": p.get("fused_act_alpha")}
+
+
 def lower_to_matops(g: Graph) -> ExecutionPlan:
     shapes: dict[str, tuple[int, ...]] = {}
     ops: list[MatOp] = []
@@ -63,7 +70,7 @@ def lower_to_matops(g: Graph) -> ExecutionPlan:
             emit(MatOp(name, "conv", layer.inputs, dict(layer.weights),
                        {"stride": (sh, sw),
                         "padding": p.get("padding", "SAME"),
-                        "fused_act": p.get("fused_act"),
+                        **_act_attrs(p),
                         "act_pos": p.get("act_pos"),
                         "fused_residual": p.get("fused_residual"),
                         "k": (k1, k2), "batch": int(np.prod(lead)) if lead
@@ -76,7 +83,7 @@ def lower_to_matops(g: Graph) -> ExecutionPlan:
             lead = ish[0][:-1]
             emit(MatOp(name, "mm", layer.inputs, dict(layer.weights),
                        {"weight_side": "right",
-                        "fused_act": p.get("fused_act"),
+                        **_act_attrs(p),
                         "fused_residual": p.get("fused_residual"),
                         "s1": int(np.prod(lead)) if lead else 1,
                         "s2": fin, "s3": fout,
@@ -91,7 +98,7 @@ def lower_to_matops(g: Graph) -> ExecutionPlan:
                 emit(MatOp(name, "mm", layer.inputs, dict(layer.weights),
                            {"weight_side": "left_coo",
                             "runtime_edge": bool(p.get("runtime_edge")),
-                            "fused_act": p.get("fused_act"),
+                            **_act_attrs(p),
                             "reduce": p.get("reduce", "sum"),
                             "n": nv, "nnz": nnz,
                             "s1": nv, "s2": nv, "s3": x_shape[-1],
@@ -101,7 +108,7 @@ def lower_to_matops(g: Graph) -> ExecutionPlan:
                 nv = x_shape[0]
                 emit(MatOp(name, "mm", layer.inputs, {},
                            {"weight_side": "left_runtime",
-                            "fused_act": p.get("fused_act"),
+                            **_act_attrs(p),
                             "s1": nv, "s2": nv, "s3": x_shape[1],
                             "density": 1.0},
                            x_shape, portion))
@@ -117,7 +124,7 @@ def lower_to_matops(g: Graph) -> ExecutionPlan:
                 elif len(x_shape) == 2:          # (N, F): A @ X
                     emit(MatOp(name, "mm", layer.inputs, {"adj": adj},
                                {"weight_side": "left",
-                                "fused_act": p.get("fused_act"),
+                                **_act_attrs(p),
                                 "s1": nv, "s2": nv, "s3": x_shape[1],
                                 "density": _density(adj)},
                                x_shape, portion))
@@ -126,7 +133,7 @@ def lower_to_matops(g: Graph) -> ExecutionPlan:
                     assert v == nv, (name, x_shape, adj.shape)
                     emit(MatOp(name, "mm", layer.inputs, {"adj": adj},
                                {"weight_side": "right_t",
-                                "fused_act": p.get("fused_act"),
+                                **_act_attrs(p),
                                 "s1": c * t, "s2": v, "s3": v,
                                 "density": _density(adj)},
                                x_shape, portion))
@@ -198,7 +205,7 @@ def lower_to_matops(g: Graph) -> ExecutionPlan:
             out = a[:-1] + bsh[1:]
             emit(MatOp(name, "mm", layer.inputs, {},
                        {"weight_side": "both_runtime",
-                        "fused_act": p.get("fused_act"),
+                        **_act_attrs(p),
                         "s1": int(np.prod(a[:-1])) if a[:-1] else 1,
                         "s2": a[-1],
                         "s3": int(np.prod(bsh[1:])) if bsh[1:] else 1,
@@ -212,8 +219,11 @@ def lower_to_matops(g: Graph) -> ExecutionPlan:
                        ish[0], portion))
 
         elif kind == "act":
-            emit(MatOp(name, "ew", layer.inputs, {},
-                       {"fn": p["fn"]}, ish[0], portion))
+            attrs = {"fn": p["fn"]}
+            if p.get("alpha") is not None:
+                attrs["alpha"] = p["alpha"]
+            emit(MatOp(name, "ew", layer.inputs, {}, attrs,
+                       ish[0], portion))
 
         elif kind == "add":
             emit(MatOp(name, "ew", layer.inputs, {}, {"fn": "add"},

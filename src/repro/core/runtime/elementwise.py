@@ -14,15 +14,23 @@ from repro.core.plan import MatOp
 from repro.core.runtime.registry import register_op
 from repro.core.runtime.residency import opt_weight, weight
 
-# Single source of truth for the leaky_relu slope: the tracing frontend's
-# pattern matcher (frontend/canonicalize.py) only accepts traced models
-# whose slope equals this value, because Step-1 act fusion carries just the
-# activation *name* into the epilogue.
+# Default leaky_relu slope, used when a layer carries no explicit ``alpha``
+# attr (the declarative builder's historical behaviour).  Traced models
+# carry the exact slope of their select pattern through Step-1 act fusion
+# and lowering as an ``alpha``/``fused_act_alpha`` attr, so any slope
+# compiles; this constant is only the attr-less fallback.
 LEAKY_SLOPE = 0.2
 
 ACTIVATIONS = {"relu": jax.nn.relu, "gelu": jax.nn.gelu, "silu": jax.nn.silu,
                "tanh": jnp.tanh, "sigmoid": jax.nn.sigmoid,
                "leaky_relu": lambda x: jax.nn.leaky_relu(x, LEAKY_SLOPE)}
+
+
+def apply_act(fn: str, x, alpha=None):
+    """One activation, honouring a per-layer leaky slope when present."""
+    if fn == "leaky_relu":
+        return jax.nn.leaky_relu(x, LEAKY_SLOPE if alpha is None else alpha)
+    return ACTIVATIONS[fn](x)
 
 
 def apply_epilogue(out, op: MatOp, env, params=None):
@@ -34,14 +42,15 @@ def apply_epilogue(out, op: MatOp, env, params=None):
         else:
             out = out + b
     act = op.attrs.get("fused_act")
+    alpha = op.attrs.get("fused_act_alpha")
     post = op.attrs.get("act_pos") == "post_res"
     if act and not post:
-        out = ACTIVATIONS[act](out)
+        out = apply_act(act, out, alpha)
     res = op.attrs.get("fused_residual")
     if res:
         out = out + env[res]
     if act and post:
-        out = ACTIVATIONS[act](out)
+        out = apply_act(act, out, alpha)
     return out
 
 
@@ -88,4 +97,4 @@ def run_ew(op: MatOp, env, use_pallas: bool, params=None):
         if bias is not None:
             out = out + bias
         return out
-    return ACTIVATIONS[fn](x)
+    return apply_act(fn, x, op.attrs.get("alpha"))

@@ -29,6 +29,7 @@ pre-residency behaviour.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import jax
 import jax.numpy as jnp
@@ -36,9 +37,44 @@ import numpy as np
 
 from repro.core.plan import ExecutionPlan, MatOp
 
+
+def _content_key(arr: np.ndarray) -> tuple:
+    """Value-equality key for equal-shaped arrays: shape + dtype + a digest
+    of the raw bytes.  Step-4 ELL conversions materialize per-op copies of
+    the same structure that identity dedup cannot catch; two arrays with
+    the same key fold into one resident buffer."""
+    digest = hashlib.blake2b(np.ascontiguousarray(arr).tobytes(),
+                             digest_size=16).digest()
+    return (arr.shape, arr.dtype.str, digest)
+
 # Slot names for the two halves of an op's ELL structure (``op.ell`` is a
 # positional (idx, val) pair, unlike the keyed ``op.weights``).
 ELL_IDX, ELL_VAL = "ell_idx", "ell_val"
+
+
+def _op_param_slots(op: MatOp):
+    """Yield ``(slot, host_array)`` for the op's *live* compile-time
+    arrays — the one place the Step-4 supersession rule lives: when the
+    ELL conversion chose SpDMM / maxagg, the dense 'adj'/'w' it was built
+    from is dead (the handlers execute from (idx, val)) and must not be
+    collected."""
+    dead = ({"adj", "w"}
+            if op.ell is not None
+            and (op.primitive == "SpDMM" or op.kind == "maxagg")
+            else set())
+    for name, value in op.weights.items():
+        if value is not None and name not in dead:
+            yield name, value
+    if op.ell is not None:
+        yield ELL_IDX, op.ell[0]
+        yield ELL_VAL, op.ell[1]
+
+
+def plan_slots(plan: ExecutionPlan) -> set[tuple[str, str]]:
+    """Every ``(op_name, slot)`` a collected store would hold — cheap
+    (no hashing, no uploads); the validation surface for hot swaps."""
+    return {(op.name, slot) for op in plan.ops
+            for slot, _ in _op_param_slots(op)}
 
 
 @dataclasses.dataclass
@@ -62,6 +98,15 @@ class ResidentParams:
     # host-side trace input only — swapping it would silently change
     # nothing, so ``swap`` refuses.
     trace_constants: bool = False
+    # Bytes that value-based (content-hash) dedup folded away beyond
+    # identity dedup — surfaced through ``CompiledModel.stats()``.
+    value_dedup_bytes: int = 0
+    # (op.name, slot) -> opaque label of the *host array* the slot came
+    # from.  Slots with the same label are identity-shared (the model
+    # author reused one array — swapping one legitimately swaps all);
+    # slots with different labels mapped to one ref were folded by
+    # content, and ``swap`` un-aliases them before replacing.
+    origins: dict[tuple[str, str], int] | None = None
 
     def bind(self, arrays) -> "ResidentParams":
         return ResidentParams(arrays, self.slots)
@@ -76,20 +121,50 @@ class ResidentParams:
         return sum(int(a.size) * a.dtype.itemsize
                    for a in self.arrays.values())
 
-    def swap(self, op_name: str, slot: str, value) -> None:
+    def swap(self, op_name: str, slot: str, value, *,
+             _pre_trace: bool = False) -> None:
         """Hot-swap one weight without retracing: the replacement must keep
         shape and dtype (the jit cache key), so compiled programs keep
-        running against the new buffer."""
-        assert not self.trace_constants, \
-            "hot-swap has no effect on a runner whose jitted program " \
-            "baked weights in as trace constants (per-sample " \
-            "whole-program jit); swap on a batched/serving runner, which " \
-            "threads weights through jit as arguments"
-        ref = self.slots[(op_name, slot)]
+        running against the new buffer.
+
+        Identity-shared slots (the model author reused one host array)
+        share the buffer and all follow the swap.  Slots that were folded
+        by *content* dedup (incidentally byte-equal at compile time) are
+        un-aliased first: the swapped slot's identity group moves to a
+        fresh buffer and every other group keeps the old one — replacing
+        one op's zero-initialized bias must not retarget another's.  The
+        un-aliasing adds an arrays entry, which changes the jit argument
+        pytree and costs one retrace; the common (unaliased) path stays
+        zero-retrace.
+
+        ``_pre_trace`` is the executor/façade-internal host-store mode:
+        a trace-constants store may only be swapped before its program
+        first traces (``CompiledModel`` enforces that), where the values
+        are kept as host arrays."""
+        if self.trace_constants:
+            assert _pre_trace, \
+                "hot-swap has no effect on a runner whose jitted program " \
+                "baked weights in as trace constants (per-sample " \
+                "whole-program jit); swap on a batched/serving runner, " \
+                "which threads weights through jit as arguments"
+        key = (op_name, slot)
+        ref = self.slots[key]
         old = self.arrays[ref]
-        new = jax.device_put(jnp.asarray(value, dtype=old.dtype))
+        new = np.asarray(value, dtype=old.dtype) if _pre_trace \
+            else jax.device_put(jnp.asarray(value, dtype=old.dtype))
         assert new.shape == old.shape, \
             f"swap {op_name!r}/{slot!r}: shape {new.shape} != {old.shape}"
+        group = self.origins.get(key) if self.origins else None
+        sharers = [k for k, r in self.slots.items() if r == ref]
+        foreign = group is not None and any(
+            self.origins.get(k) != group for k in sharers)
+        if foreign:
+            split = f"{ref}s{len(self.arrays)}"
+            self.arrays[split] = new
+            for k in sharers:
+                if self.origins.get(k) == group:
+                    self.slots[k] = split
+            return
         self.arrays[ref] = new
 
 
@@ -97,11 +172,18 @@ def collect_params(plan: ExecutionPlan, *,
                    device: bool = True) -> ResidentParams:
     """One pass over the plan: upload every compile-time ndarray once.
 
-    Dedup is by host-array identity (``id``) — the builder and the passes
-    share ndarrays when layers share structure (e.g. one adjacency feeding
-    several mp layers), and identity is the only equality that costs
-    nothing to check.  Two equal-but-distinct arrays simply upload twice,
-    which is what the pre-residency runtime did for every single call.
+    Dedup is two-level.  First by host-array identity (``id``) — the
+    builder and the passes share ndarrays when layers share structure
+    (e.g. one adjacency feeding several mp layers).  Second by *content*:
+    equal-shaped arrays with identical bytes fold into one buffer even when
+    they are distinct host objects — Step-4 ELL conversions materialize
+    per-op (idx, val) copies of the same structure, and traced models
+    re-materialize equal constants (zero biases, repeated norm statistics)
+    per use site.  The folded bytes are reported in
+    ``ResidentParams.value_dedup_bytes``.  Content-folded slots share one
+    buffer until one of them is ``swap``ped, which un-aliases the swapped
+    slot's identity group first (see ``swap``) — the fold is a storage
+    optimization, never a semantic merge.
 
     ``device=False`` keeps the store as host ndarray references (no
     ``device_put``) — for runners whose jitted program will embed the
@@ -110,34 +192,34 @@ def collect_params(plan: ExecutionPlan, *,
     """
     arrays: dict[str, jax.Array] = {}
     slots: dict[tuple[str, str], str] = {}
+    origins: dict[tuple[str, str], int] = {}
     by_id: dict[int, str] = {}
+    by_content: dict[tuple, str] = {}
+    folded = {"bytes": 0}
 
     def ref_for(host_array) -> str:
         key = id(host_array)
         if key not in by_id:
-            ref = f"p{len(arrays)}"
+            arr = np.asarray(host_array)
+            ckey = _content_key(arr)
+            ref = by_content.get(ckey)
+            if ref is not None:
+                folded["bytes"] += arr.nbytes
+            else:
+                ref = f"p{len(arrays)}"
+                by_content[ckey] = ref
+                arrays[ref] = jax.device_put(jnp.asarray(host_array)) \
+                    if device else arr
             by_id[key] = ref
-            arrays[ref] = jax.device_put(jnp.asarray(host_array)) \
-                if device else np.asarray(host_array)
         return by_id[key]
 
     for op in plan.ops:
-        # Step 4's ELL conversion supersedes the dense operand it was built
-        # from: the SpDMM / maxagg handlers execute from (idx, val) and
-        # never read the dense 'adj'/'w', so uploading it would waste
-        # device memory on a buffer nothing reads.
-        dead = ({"adj", "w"}
-                if op.ell is not None
-                and (op.primitive == "SpDMM" or op.kind == "maxagg")
-                else set())
-        for name, value in op.weights.items():
-            if value is None or name in dead:
-                continue
+        for name, value in _op_param_slots(op):
             slots[(op.name, name)] = ref_for(value)
-        if op.ell is not None:
-            slots[(op.name, ELL_IDX)] = ref_for(op.ell[0])
-            slots[(op.name, ELL_VAL)] = ref_for(op.ell[1])
-    return ResidentParams(arrays, slots)
+            origins[(op.name, name)] = id(value)
+    return ResidentParams(arrays, slots,
+                          value_dedup_bytes=folded["bytes"],
+                          origins=origins)
 
 
 # ---------------------------------------------------------- handler seam --
@@ -167,18 +249,16 @@ def ell_pair(op: MatOp, params: ResidentParams | None):
 
 def plan_param_bytes(plan: ExecutionPlan) -> int:
     """Deduplicated parameter footprint of a plan, without uploading —
-    the sizing model for 'weights resident on chip'."""
-    seen: dict[int, int] = {}
+    the sizing model for 'weights resident on chip'.  Mirrors
+    ``collect_params``'s two-level (identity, then content) dedup so the
+    model matches what the store would actually hold."""
+    seen_ids: set[int] = set()
+    seen_content: dict[tuple, int] = {}
     for op in plan.ops:
-        dead = ({"adj", "w"}
-                if op.ell is not None
-                and (op.primitive == "SpDMM" or op.kind == "maxagg")
-                else set())
-        values = [v for k, v in op.weights.items()
-                  if v is not None and k not in dead]
-        if op.ell is not None:
-            values += [op.ell[0], op.ell[1]]
-        for v in values:
+        for _, v in _op_param_slots(op):
+            if id(v) in seen_ids:
+                continue
+            seen_ids.add(id(v))
             arr = np.asarray(v)
-            seen[id(v)] = arr.size * arr.itemsize
-    return int(sum(seen.values()))
+            seen_content.setdefault(_content_key(arr), arr.nbytes)
+    return int(sum(seen_content.values()))

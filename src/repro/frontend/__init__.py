@@ -14,14 +14,14 @@ the second frontend next to the declarative ``GraphBuilder``:
         return h @ w2 + b2
 
     graph = frontend.to_graph(model, {"x": example}, name="mymodel")
-    plan = frontend.compile_model(model, {"x": example})   # -> ExecutionPlan
+    compiled = gcv.compile(model, {"x": example})    # the one-call façade
 
 Stages: ``trace.trace_model`` interprets the model's jaxpr into proto
 layers, ``canonicalize.canonicalize`` rewrites jaxpr idioms (bias adds,
 softmax chains, DM reshuffles) back into the paper's layer vocabulary, and
 the resulting ``Graph`` flows through the six-pass compiler unchanged.
 """
-from repro.core.compiler import CompileOptions, compile_graph
+from repro.core.compiler import CompileOptions
 from repro.core.ir import Graph
 from repro.core.plan import ExecutionPlan
 from repro.frontend import nn                                  # noqa: F401
@@ -39,6 +39,13 @@ def to_graph(fn, example_inputs, *, name: str = "traced") -> Graph:
 def compile_model(fn, example_inputs,
                   options: CompileOptions = CompileOptions(), *,
                   name: str = "traced") -> ExecutionPlan:
-    """One-call path from a user-defined JAX model to an ``ExecutionPlan``
-    (trace -> canonicalize -> six-pass compile)."""
-    return compile_graph(to_graph(fn, example_inputs, name=name), options)
+    """Deprecated shim: use ``repro.gcv.compile(fn, example_inputs)`` —
+    the unified façade — and read ``.plan`` if you need the raw
+    ``ExecutionPlan``.  Kept for one PR."""
+    import warnings
+    warnings.warn(
+        "frontend.compile_model is deprecated; use "
+        "repro.gcv.compile(model, example_inputs) (the CompiledModel owns "
+        "the plan as .plan)", DeprecationWarning, stacklevel=2)
+    from repro import gcv
+    return gcv.compile(fn, example_inputs, options=options, name=name).plan

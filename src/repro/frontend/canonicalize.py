@@ -31,9 +31,9 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.ir import Graph, Layer
-# The runtime's fixed leaky_relu slope — the only slope a leaky_relu
-# pattern can canonicalize to without changing numerics under Step-1 act
-# fusion (the fused epilogue carries just the activation *name*).
+# The runtime's default leaky_relu slope.  A traced pattern whose slope
+# differs carries it as an 'alpha' attr, which Step-1 act fusion and
+# lowering thread through to the runtime epilogue — any slope compiles.
 from repro.core.runtime.elementwise import LEAKY_SLOPE as _LEAKY_SLOPE
 from repro.frontend.trace import TraceGraph, TraceNode, UnsupportedOpError
 
@@ -239,12 +239,13 @@ class _Rewriter:
                 continue
             if len(cons[cmp.name]) != 1 or len(cons[mul.name]) != 1:
                 continue
+            # carry the traced slope as an 'alpha' attr so Step-1 act
+            # fusion and lowering preserve non-default slopes (the runtime
+            # epilogue reads it; absent alpha means the 0.2 default)
+            params = {"fn": "leaky_relu"}
             if abs(slopes[0] - _LEAKY_SLOPE) > 1e-6:
-                raise UnsupportedOpError(
-                    f"leaky_relu pattern ('select_n') with slope "
-                    f"{slopes[0]:g} has no layer equivalent — the runtime's "
-                    f"'leaky_relu' activation is fixed at {_LEAKY_SLOPE}")
-            sel.op, sel.inputs, sel.params = "act", [x], {"fn": "leaky_relu"}
+                params["alpha"] = slopes[0]
+            sel.op, sel.inputs, sel.params = "act", [x], params
             self.absorb(sel, cmp.name, mul.name)
             self.dead.update([cmp.name, mul.name])
         self.flush()
@@ -573,7 +574,10 @@ def _emit(tg: TraceGraph) -> Graph:
             add(node, "norm", {"norm": "batch",
                                "eps": node.params["eps"]})
         elif node.op == "act":
-            add(node, "act", {"fn": node.params["fn"]})
+            p = {"fn": node.params["fn"]}
+            if "alpha" in node.params:
+                p["alpha"] = node.params["alpha"]
+            add(node, "act", p)
         elif node.op == "softmax":
             if "segments" in node.weights:
                 add(node, "softmax",

@@ -1,0 +1,399 @@
+"""One-call public API: ``gcv.compile`` / ``gcv.serve`` (paper §V-A).
+
+The paper's compiler pillar "takes a user-defined model as input ... and
+produces optimized code for hardware execution".  After PRs 1-4 that
+promise was spread over five disjoint surfaces (``GraphBuilder`` /
+``frontend.compile_model`` / ``compile_graph`` / ``build_runner`` +
+``aot_compile``/``resident.swap`` / ``GNNCVServeEngine``); this module is
+the single ``torch.compile``-style entry point over all of them:
+
+    from repro import gcv
+
+    model = gcv.compile(fn, {"x": example})     # plain JAX callable
+    model = gcv.compile(graph)                  # GraphBuilder graph
+    model = gcv.compile(plan)                   # pre-compiled ExecutionPlan
+
+    out = model.run(x=sample)                   # per-sample execution
+    runb = model.batched(8)                     # cached per-batch runner
+    model.warmup(batches=[1, 2, 4])             # AOT trace+compile now
+    model.swap_weights({"linear_1": {"w": w2}}) # hot-swap, no retrace
+    model.stats() / model.lint() / model.input_specs / model.plan
+
+    eng = gcv.serve({"b6": model, "b4": graph}, max_batch=8)
+
+``compile`` dispatches on the input type and routes everything through the
+same internals (trace -> canonicalize -> six passes -> plan/runner cache ->
+device-resident weight planning -> serving engine); callers never stitch
+those stages together by hand again.
+
+Batched example inputs (ROADMAP item): users who only hold *batched*
+reference arrays don't need to slice them — ``gcv.compile(fn, batched,
+batch=8)`` notices every example carries the leading batch axis and strips
+it before tracing, with a ``UserWarning`` naming the interpretation
+(``example_batched=True`` declares it and silences the warning, ``False``
+forbids stripping for models whose genuine per-sample leading dim equals
+the batch size).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compiler import CompileOptions
+from repro.core.executor import build_runner, random_inputs, stack_inputs
+from repro.core.ir import Graph
+from repro.core.plan import ExecutionPlan
+from repro.core.runtime.cache import cached_plan, cached_runner
+from repro.core.runtime.residency import (collect_params, plan_param_bytes,
+                                          plan_slots)
+
+__all__ = ["CompiledModel", "compile", "serve", "stack_inputs"]
+
+
+def _resolve_options(options, overrides) -> CompileOptions:
+    if options is None:
+        return CompileOptions(**overrides)
+    assert not overrides, \
+        f"pass either options= or keyword overrides, not both: " \
+        f"{sorted(overrides)}"
+    return options
+
+
+def _example_shapes(example_inputs: Mapping[str, Any]) -> dict[str, tuple]:
+    return {k: tuple(v.shape) if isinstance(v, jax.ShapeDtypeStruct)
+            else tuple(np.shape(v))
+            for k, v in example_inputs.items()}
+
+
+def _strip_leading_axis(example_inputs: Mapping[str, Any]):
+    """Per-sample specs from batched examples (drop each leading axis)."""
+    out = {}
+    for k, v in example_inputs.items():
+        if isinstance(v, jax.ShapeDtypeStruct):
+            out[k] = jax.ShapeDtypeStruct(tuple(v.shape)[1:], v.dtype)
+        else:
+            arr = np.asarray(v)
+            out[k] = jax.ShapeDtypeStruct(arr.shape[1:], arr.dtype)
+    return out
+
+
+class CompiledModel:
+    """The full lifecycle of one compiled model, owned in one object.
+
+    Construct via ``gcv.compile`` — not directly.  Runners (per-sample and
+    per-batch) are built lazily and cached; when the model was compiled
+    from a ``Graph`` they come from the process-wide plan/runner cache
+    (``core.runtime.cache``), so a serving engine and a notebook holding
+    the same graph share compiled programs.
+    """
+
+    def __init__(self, plan: ExecutionPlan, *, graph: Graph | None = None,
+                 options: CompileOptions, use_pallas: bool = False,
+                 residency: bool = True, batch: int | None = None):
+        self.plan = plan
+        self.graph = graph
+        self.options = options
+        self.use_pallas = use_pallas
+        self.residency = residency
+        self.batch = batch                   # default batch for .run()
+        self._runners: dict[tuple, Callable] = {}
+        # Runners come from the shared cache until weights diverge from the
+        # plan's (swap_weights): from then on this model builds private
+        # runners so its swapped weights never leak into other holders of
+        # the same graph.
+        self._private = graph is None
+        self._swaps: dict[tuple[str, str], Any] = {}
+        self._sizing = None          # memoized host-side ResidentParams
+
+    # ------------------------------------------------------------ runners --
+    def runner(self, batch: int | None = None, *, jit: bool | None = None):
+        """The underlying runner for ``batch`` (``run(**inputs)`` callable
+        with ``aot_compile``/``resident``/``trace_count`` attached).
+
+        ``jit=None`` keeps ``build_runner``'s batch-aware default
+        (whole-program jit per-sample, bit-stable per-op dispatch batched);
+        the serving engine passes ``jit=True`` for throughput."""
+        key = (batch, jit)
+        if not self._private:
+            # Always resolve through the process-wide cache so its
+            # hit/miss effectiveness counters keep meaning something
+            # (the lookup is two dict probes); the local record only
+            # feeds introspection and swap bookkeeping.
+            run = cached_runner(self.graph, self.options, batch=batch,
+                                use_pallas=self.use_pallas, jit=jit,
+                                residency=self.residency)
+            self._runners[key] = run
+            return run
+        run = self._runners.get(key)
+        if run is None:
+            run = build_runner(self.plan, use_pallas=self.use_pallas,
+                               jit=jit, batch=batch,
+                               residency=self.residency)
+            self._apply_swaps(run)
+            self._runners[key] = run
+        return run
+
+    def run(self, **inputs) -> tuple:
+        """Execute the model (per-sample, or batched when the model was
+        compiled with ``batch=N`` — inputs then carry the leading axis)."""
+        return self.runner(self.batch)(**inputs)
+
+    __call__ = run
+
+    def batched(self, n: int, *, jit: bool | None = None):
+        """Cached runner expecting every input stacked on a leading axis of
+        size ``n`` (``gcv.stack_inputs`` builds that from samples)."""
+        assert n >= 1, f"batch must be >= 1, got {n}"
+        return self.runner(n, jit=jit)
+
+    # ------------------------------------------------------------- warmup --
+    def aot_compile(self, *, explicit: bool = False):
+        """Pay the default runner's jit trace + XLA compile now (the
+        single-model warmup hook); see ``build_runner``'s ``aot_compile``."""
+        return self.runner(self.batch).aot_compile(explicit=explicit)
+
+    def warmup(self, batches=None) -> set:
+        """AOT-compile runners ahead of traffic.
+
+        ``batches=None`` warms the default ``run()`` runner; otherwise each
+        listed batch size is warmed through the serving configuration
+        (``jit=True`` — what ``gcv.serve`` dispatches through).  Returns
+        the set of batch sizes actually compiled (eager runners have
+        nothing to warm)."""
+        warmed = set()
+        if batches is None:
+            if self.aot_compile() is not None:
+                warmed.add(self.batch)
+            return warmed
+        for b in batches:
+            if self.batched(b, jit=True).aot_compile() is not None:
+                warmed.add(b)
+        return warmed
+
+    # ----------------------------------------------------------- hot swap --
+    def swap_weights(self, updates: Mapping) -> None:
+        """Replace compile-time weights without recompiling.
+
+        ``updates`` maps ``op_name -> {slot: value}`` (or flat
+        ``(op_name, slot) -> value``); op names and slots are the
+        ``ExecutionPlan``'s (``model.plan.ops``).  Runners that thread
+        weights through jit as arguments (batched/serving) are hot-swapped
+        in place with zero retrace; per-sample whole-program runners bake
+        weights in as trace constants, so they are rebuilt lazily on next
+        use.  After the first swap the model's runners are private — other
+        holders of the same graph keep the original weights."""
+        assert self.residency, \
+            "swap_weights requires residency=True (the device-resident " \
+            "weight store is what gets swapped)"
+        flat: dict[tuple[str, str], Any] = {}
+        for key, value in updates.items():
+            if isinstance(key, tuple):
+                flat[key] = value
+            else:
+                for slot, v in value.items():
+                    flat[(key, slot)] = v
+        known = plan_slots(self.plan)      # structural: no store, no hash
+        missing = [k for k in flat if k not in known]
+        assert not missing, \
+            f"unknown weight slots {missing}; known op/slot pairs come " \
+            f"from the plan's ops"
+        self._swaps.update(flat)
+        if not self._private:
+            # shared-cache runners must keep the original weights for
+            # other holders of the graph; go private, rebuild lazily
+            self._private = True
+            self._runners.clear()
+            return
+        for key, run in list(self._runners.items()):
+            res = run.resident
+            if res is not None and res.trace_constants \
+                    and run.trace_count() == 0:
+                self._apply_swaps(run)       # not yet traced: host swap
+            elif res is not None and not res.trace_constants:
+                self._apply_swaps(run)       # arg-threaded: zero retrace
+            else:
+                self._runners.pop(key)       # constants already traced
+
+    def _apply_swaps(self, run) -> None:
+        if not self._swaps:
+            return
+        res = run.resident
+        assert res is not None, \
+            "swap_weights requires residency=True runners"
+        for (op_name, slot), value in self._swaps.items():
+            # trace-constants stores are only ever swapped before their
+            # program first traces (callers rebuild otherwise) — the
+            # _pre_trace mode keeps one validated mutation path
+            res.swap(op_name, slot, value,
+                     _pre_trace=res.trace_constants)
+
+    # -------------------------------------------------------- introspection
+    @property
+    def input_specs(self) -> dict[str, jax.ShapeDtypeStruct]:
+        """Per-sample input specs (name -> ShapeDtypeStruct), from the
+        plan's recorded shapes.  ``run()`` on a ``batch=N`` model expects
+        each with an extra leading axis of N."""
+        shapes = self.plan.meta.get("input_shapes", {})
+        return {n: jax.ShapeDtypeStruct(tuple(shapes[n]), jnp.float32)
+                for n in self.plan.input_names}
+
+    def lint(self) -> str:
+        """Trace-provenance report (which jaxpr equations produced each
+        layer) for traced models; explains itself otherwise."""
+        from repro.frontend.lint import lint
+        if self.graph is None:
+            return (f"plan {self.plan.name!r}: compiled from an "
+                    f"ExecutionPlan — no layer graph to lint")
+        return lint(self.graph)
+
+    def stats(self) -> dict:
+        """One dict over the whole lifecycle: plan shape, primitive mix,
+        memory planning, residency footprint (incl. bytes folded by
+        value-based dedup), and runner/trace state."""
+        resident = next((r.resident for r in self._runners.values()
+                         if r.resident is not None), None)
+        if resident is None and self.residency:
+            if self._sizing is None:      # hash once, not per stats() call
+                self._sizing = collect_params(self.plan, device=False)
+            resident = self._sizing
+        out = {
+            "name": self.plan.name,
+            "frontend": self.plan.meta.get("frontend"),
+            "ops": len(self.plan.ops),
+            "primitives": self.plan.primitive_counts(),
+            "peak_live_bytes": self.plan.peak_live_bytes(),
+            "param_bytes": plan_param_bytes(self.plan),
+            "runners_built": len(self._runners),
+            "default_batch": self.batch,
+            "swapped_slots": len(self._swaps),
+        }
+        if resident is not None:
+            out["resident_bytes"] = resident.nbytes()
+            out["value_deduped_bytes"] = resident.value_dedup_bytes
+        return out
+
+    def random_inputs(self, seed: int = 0, *,
+                      batch: int | None = "default") -> dict:
+        """Random inputs matching ``input_specs`` (convenience for demos
+        and benchmarks); ``batch`` defaults to the model's."""
+        b = self.batch if batch == "default" else batch
+        return random_inputs(self.plan, seed=seed, batch=b)
+
+    def __repr__(self) -> str:
+        return (f"CompiledModel({self.plan.name!r}, "
+                f"frontend={self.plan.meta.get('frontend')!r}, "
+                f"ops={len(self.plan.ops)}, batch={self.batch})")
+
+
+def compile(model, example_inputs: Mapping[str, Any] | None = None, *,
+            batch: int | None = None, options: CompileOptions | None = None,
+            use_pallas: bool = False, residency: bool = True,
+            example_batched: bool | None = None, name: str | None = None,
+            **option_overrides) -> CompiledModel:
+    """Compile anything the pipeline can ingest into a ``CompiledModel``.
+
+    ``model`` is one of:
+
+      * a plain JAX callable — ``example_inputs`` (arrays or
+        ``ShapeDtypeStruct``s) names the model inputs; the tracing
+        frontend recovers the layer graph (``frontend.to_graph``);
+      * a layer ``Graph`` (from ``GraphBuilder`` or a prior trace);
+      * an already-compiled ``ExecutionPlan``.
+
+    ``batch=N`` makes ``run()`` expect/return a leading batch axis of N
+    (per-batch runners for other sizes via ``.batched(n)``).  When tracing
+    a callable with ``batch=N`` and every example input carrying that
+    leading axis, the axis is stripped before tracing (batched reference
+    inputs "just work"); ``example_batched`` forces (``True``) or forbids
+    (``False``) the stripping for ambiguous shapes.
+
+    Compile options come either as ``options=CompileOptions(...)`` or as
+    keyword overrides (``gcv.compile(g, target="fpga")``).
+    """
+    opts = _resolve_options(options, option_overrides)
+    if isinstance(model, ExecutionPlan):
+        assert example_inputs is None, \
+            "an ExecutionPlan is already compiled; example_inputs are " \
+            "only for tracing a callable"
+        return CompiledModel(model, graph=None, options=opts,
+                             use_pallas=use_pallas, residency=residency,
+                             batch=batch)
+    if isinstance(model, Graph):
+        assert example_inputs is None, \
+            "a layer Graph declares its own inputs; example_inputs are " \
+            "only for tracing a callable"
+        plan = cached_plan(model, opts)
+        return CompiledModel(plan, graph=model, options=opts,
+                             use_pallas=use_pallas, residency=residency,
+                             batch=batch)
+    assert callable(model), \
+        f"cannot compile {type(model).__name__}: expected a JAX " \
+        f"callable, a Graph, or an ExecutionPlan"
+    assert example_inputs is not None, \
+        "compiling a callable requires example_inputs (arrays or " \
+        "jax.ShapeDtypeStruct per named input)"
+    shapes = _example_shapes(example_inputs)
+    strip = example_batched
+    if strip is None:
+        strip = batch is not None and all(
+            len(s) >= 1 and s[0] == batch for s in shapes.values())
+        if strip:
+            # auto-detect is a guess: a genuine per-sample leading dim
+            # that happens to equal `batch` would be mis-stripped, so say
+            # what was decided and how to override it
+            import warnings
+            warnings.warn(
+                f"gcv.compile: every example input leads with axis "
+                f"{batch} == batch, so it is being interpreted as the "
+                f"batch axis and stripped before tracing; pass "
+                f"example_batched=True to silence this, or "
+                f"example_batched=False if {batch} is a genuine model "
+                f"dimension", UserWarning, stacklevel=2)
+    if strip:
+        leads = {s[0] for s in shapes.values() if len(s) >= 1}
+        assert len(leads) == 1 and all(len(s) >= 1
+                                       for s in shapes.values()), \
+            f"example_batched expects one shared leading batch axis, " \
+            f"got shapes {shapes}"
+        (lead,) = leads
+        assert batch is None or batch == lead, \
+            f"batch={batch} does not match the examples' leading " \
+            f"axis {lead}"
+        batch = lead if batch is None else batch
+        example_inputs = _strip_leading_axis(example_inputs)
+    from repro import frontend
+    graph = frontend.to_graph(
+        model, example_inputs,
+        name=name or getattr(model, "__name__", None) or "traced")
+    plan = cached_plan(graph, opts)
+    return CompiledModel(plan, graph=graph, options=opts,
+                         use_pallas=use_pallas, residency=residency,
+                         batch=batch)
+
+
+def serve(models: Mapping[str, Any], *,
+          options: CompileOptions | None = None, max_batch: int = 8,
+          use_pallas: bool = False, jit: bool = True,
+          pipeline_depth: int = 2, residency: bool = True, warmup=False,
+          **option_overrides):
+    """Build the micro-batching serving engine from models, not plumbing.
+
+    ``models`` maps task name -> anything ``gcv.compile`` accepts (a
+    ``CompiledModel``, a layer ``Graph``, an ``ExecutionPlan``, or a
+    ``(fn, example_inputs)`` pair for plain JAX callables).  Pre-compiled
+    models keep their own pallas/residency settings; everything else is
+    compiled with this call's.  ``warmup=True`` AOT-compiles every
+    (task, bucket) runner before returning — no live request ever traces.
+    """
+    from repro.serve.gnncv import GNNCVServeEngine
+    opts = _resolve_options(options, option_overrides)
+    eng = GNNCVServeEngine(dict(models), options=opts, max_batch=max_batch,
+                           use_pallas=use_pallas, jit=jit,
+                           pipeline_depth=pipeline_depth,
+                           residency=residency)
+    if warmup:
+        eng.warmup()
+    return eng

@@ -35,6 +35,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
+import warnings
 from collections import deque
 
 import numpy as np
@@ -42,7 +43,7 @@ import numpy as np
 from repro.core.compiler import CompileOptions
 from repro.core.executor import stack_inputs
 from repro.core.ir import Graph
-from repro.core.runtime.cache import cached_plan, cached_runner
+from repro.core.plan import ExecutionPlan
 
 
 @dataclasses.dataclass
@@ -57,14 +58,33 @@ class TaskRequest:
 
 
 class GNNCVServeEngine:
-    """Queue heterogeneous task requests, drain them in per-plan batches."""
+    """Queue heterogeneous task requests, drain them in per-plan batches.
 
-    def __init__(self, graphs: dict[str, Graph], *,
+    Constructed by (and from) the ``repro.gcv`` façade: ``models`` maps
+    task name -> anything ``gcv.compile`` accepts — a ``CompiledModel``, a
+    layer ``Graph``, an ``ExecutionPlan``, or a ``(fn, example_inputs)``
+    pair for plain JAX callables.  Everything not already compiled is run
+    through ``gcv.compile`` with this engine's options; pre-compiled
+    models keep their own.  (``graphs=`` is the deprecated PR-4 spelling
+    of the same dict, kept as a shim for one PR.)
+    """
+
+    def __init__(self, models=None, *,
                  options: CompileOptions = CompileOptions(),
                  max_batch: int = 8, use_pallas: bool = False,
                  jit: bool = True, pipeline_depth: int = 2,
-                 residency: bool = True):
-        self.graphs = dict(graphs)
+                 residency: bool = True, graphs=None):
+        from repro import gcv                  # late: gcv builds engines
+        if graphs is not None:
+            warnings.warn(
+                "GNNCVServeEngine(graphs=...) is deprecated; pass the "
+                "dict as the first argument (or use gcv.serve), whose "
+                "values may be Graphs, CompiledModels, ExecutionPlans or "
+                "(fn, example_inputs) pairs", DeprecationWarning,
+                stacklevel=2)
+            assert models is None, "pass models or graphs, not both"
+            models = graphs
+        assert models, "GNNCVServeEngine needs at least one model"
         self.options = options
         # power of two keeps _bucket's doubling landing on the cap and the
         # runner cache on its log2(max_batch)+1 contract; rejecting other
@@ -78,9 +98,26 @@ class GNNCVServeEngine:
         self.jit = jit
         self.pipeline_depth = pipeline_depth
         self.residency = residency
-        self.plans = {t: cached_plan(g, options)
-                      for t, g in self.graphs.items()}
-        self.queues: dict[str, deque] = {t: deque() for t in self.graphs}
+        self.models: dict[str, gcv.CompiledModel] = {}
+        for task, model in dict(models).items():
+            if isinstance(model, gcv.CompiledModel):
+                self.models[task] = model
+            else:
+                fn, example = model if isinstance(model, tuple) \
+                    else (model, None)
+                assert isinstance(fn, (Graph, ExecutionPlan)) \
+                    or example is not None, \
+                    f"task {task!r}: a plain callable needs example " \
+                    f"inputs — pass (fn, example_inputs) or a " \
+                    f"pre-compiled model"
+                self.models[task] = gcv.compile(
+                    fn, example, options=options, use_pallas=use_pallas,
+                    residency=residency, name=task)
+        self.plans = {t: m.plan for t, m in self.models.items()}
+        # Back-compat view (pre-façade engines were keyed on raw graphs);
+        # plan-only models have no graph to expose.
+        self.graphs = {t: m.graph for t, m in self.models.items()}
+        self.queues: dict[str, deque] = {t: deque() for t in self.models}
         self._rid = itertools.count()
         self._inflight: deque[tuple[list[TaskRequest], tuple]] = deque()
         self._warmed: set[tuple[str, int]] = set()
@@ -92,7 +129,7 @@ class GNNCVServeEngine:
         """Validated intake: a malformed request is rejected here, where it
         can only hurt its own caller — inside ``dispatch`` it would take a
         whole popped batch down with it."""
-        assert task in self.graphs, f"unknown task {task!r}"
+        assert task in self.models, f"unknown task {task!r}"
         plan = self.plans[task]
         missing = set(plan.input_names) - inputs.keys()
         extra = inputs.keys() - set(plan.input_names)
@@ -125,7 +162,7 @@ class GNNCVServeEngine:
         from repro.core.runtime.cache import cache_stats
         return {"completed": self.completed, "steps": self.steps,
                 "pending": self.pending(), "inflight": self.inflight(),
-                "tasks": len(self.graphs), "warmed": len(self._warmed),
+                "tasks": len(self.models), "warmed": len(self._warmed),
                 **cache_stats()}
 
     @staticmethod
@@ -145,9 +182,7 @@ class GNNCVServeEngine:
         return out
 
     def _runner(self, task: str, bucket: int):
-        return cached_runner(self.graphs[task], self.options, batch=bucket,
-                             use_pallas=self.use_pallas, jit=self.jit,
-                             residency=self.residency)
+        return self.models[task].batched(bucket, jit=self.jit)
 
     @staticmethod
     def _stack(samples: list[dict]) -> dict:
@@ -168,10 +203,10 @@ class GNNCVServeEngine:
         compiled; with ``jit=False`` there is nothing to compile and the
         set stays empty.
         """
-        tasks = list(self.graphs) if tasks is None else list(tasks)
+        tasks = list(self.models) if tasks is None else list(tasks)
         buckets = self.buckets() if buckets is None else list(buckets)
         for task in tasks:
-            assert task in self.graphs, f"unknown task {task!r}"
+            assert task in self.models, f"unknown task {task!r}"
             for bucket in buckets:
                 run = self._runner(task, bucket)
                 if run.aot_compile() is not None:

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import frontend
+from repro import frontend, gcv
 from repro.core import CompileOptions, build_runner, compile_graph
 from repro.core.ir import LAYER_KINDS
 from repro.frontend import UnsupportedOpError, nn
@@ -129,8 +129,8 @@ def test_layer_kind_round_trips(kind):
 def test_layer_kind_programs_compile_and_run(kind):
     """Each matrix entry must also survive the six passes and execute."""
     fn, example, _ = KIND_PROGRAMS[kind]
-    plan = frontend.compile_model(fn, example,
-                                  CompileOptions(target="fpga"))
+    plan = gcv.compile(fn, example,
+                       options=CompileOptions(target="fpga")).plan
     ins = {k: RNG.standard_normal(v.shape).astype(np.float32)
            for k, v in example.items()}
     out = build_runner(plan)(**ins)[0]
@@ -150,8 +150,8 @@ def test_idiom_round_trips(idiom):
 @pytest.mark.parametrize("idiom", sorted(IDIOM_PROGRAMS))
 def test_idiom_programs_compile_and_run(idiom):
     fn, example, _ = IDIOM_PROGRAMS[idiom]
-    plan = frontend.compile_model(fn, example,
-                                  CompileOptions(target="fpga"))
+    plan = gcv.compile(fn, example,
+                       options=CompileOptions(target="fpga")).plan
     ins = {k: RNG.standard_normal(v.shape).astype(np.float32)
            for k, v in example.items()}
     out = build_runner(plan)(**ins)[0]
@@ -229,12 +229,37 @@ def test_leftover_elementwise_is_rejected_not_mislowered():
         frontend.to_graph(lambda x, y: x * y, _xx)
 
 
-def test_leaky_relu_foreign_slope_rejected():
-    """A leaky_relu pattern with any slope other than the runtime's fixed
-    0.2 must raise (Step-1 act fusion keeps only the activation *name*, so
-    silently accepting it would change numerics)."""
-    with pytest.raises(UnsupportedOpError, match="slope 0.3"):
-        frontend.to_graph(lambda x: jax.nn.leaky_relu(x, 0.3), _x2)
+def test_leaky_relu_foreign_slope_carries_alpha():
+    """A leaky_relu pattern with a non-default slope compiles: the slope
+    rides an 'alpha' attr through Step-1 act fusion and lowering, and the
+    runtime epilogue honours it (previously any slope != 0.2 raised)."""
+    g = frontend.to_graph(lambda x: jax.nn.leaky_relu(x, 0.3), _x2)
+    act = next(l for l in g.toposorted() if l.kind == "act")
+    assert act.params["fn"] == "leaky_relu"
+    assert act.params["alpha"] == pytest.approx(0.3)
+    plan = compile_graph(g, CompileOptions())
+    x = np.linspace(-2, 2, 48).astype(np.float32).reshape(6, 8)
+    out = np.asarray(build_runner(plan)(x=x)[0])
+    np.testing.assert_allclose(out, np.asarray(jax.nn.leaky_relu(x, 0.3)),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_leaky_relu_foreign_slope_fuses_into_epilogue():
+    """The non-default slope survives Step-1 act fusion into a producing
+    linear's epilogue (fused_act_alpha), not just standalone act ops."""
+    w = np.linspace(-1, 1, 16).astype(np.float32).reshape(8, 2)
+
+    def fn(x):
+        return jax.nn.leaky_relu(x @ w, 0.05)
+
+    plan = compile_graph(frontend.to_graph(fn, _x2), CompileOptions())
+    mm = next(op for op in plan.ops if op.kind == "mm")
+    assert mm.attrs["fused_act"] == "leaky_relu"
+    assert mm.attrs["fused_act_alpha"] == pytest.approx(0.05)
+    x = np.linspace(-2, 2, 48).astype(np.float32).reshape(6, 8)
+    out = np.asarray(build_runner(plan)(x=x)[0])
+    np.testing.assert_allclose(out, np.asarray(fn(jnp.asarray(x))),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_unmatched_select_is_rejected_by_name():

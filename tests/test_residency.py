@@ -89,6 +89,59 @@ def test_collect_params_dedups_by_identity():
     assert plan_param_bytes(plan) == shared.nbytes
 
 
+def test_collect_params_dedups_by_content():
+    """Equal-shaped, equal-valued but *distinct* host arrays fold into one
+    resident buffer (the Step-4 per-op ELL copies case), and the folded
+    bytes are reported."""
+    a = np.arange(16, dtype=np.float32).reshape(4, 4)
+    b = a.copy()                                  # equal content, new object
+    c = np.arange(16, dtype=np.float32).reshape(4, 4) + 1.0   # different
+    ops = [MatOp("a", "mm", ("x",), weights={"w": a},
+                 attrs={"weight_side": "right"}, out_shape=(4, 4)),
+           MatOp("b", "mm", ("a",), weights={"w": b},
+                 attrs={"weight_side": "right"}, out_shape=(4, 4)),
+           MatOp("c", "mm", ("b",), weights={"w": c},
+                 attrs={"weight_side": "right"}, out_shape=(4, 4))]
+    plan = ExecutionPlan("valdedup", ["x"], ops, ["c"],
+                         meta={"input_shapes": {"x": (4, 4)}})
+    params = collect_params(plan)
+    assert params.slots[("a", "w")] == params.slots[("b", "w")]
+    assert params.slots[("c", "w")] != params.slots[("a", "w")]
+    assert len(params.arrays) == 2
+    assert params.value_dedup_bytes == a.nbytes
+    assert params.nbytes() == a.nbytes + c.nbytes
+    assert plan_param_bytes(plan) == a.nbytes + c.nbytes
+
+
+def test_value_dedup_folds_per_op_ell_copies():
+    """Two mp layers over *copies* of the same sparse adjacency: Step 4
+    materializes an ELL (idx, val) pair per op, which identity dedup cannot
+    fold — content dedup must, and outputs must be unchanged."""
+    rng = np.random.default_rng(3)
+    n, f = 12, 8
+    adj = (rng.random((n, n)) < 0.2).astype(np.float32)   # sparse: ELL wins
+    b = GraphBuilder("ell_copies")
+    x = b.input((n, f), name="x")
+    h = b.mp(x, adj=adj.copy())
+    h = b.mp(h, adj=adj.copy())
+    g = b.output(h)
+    plan = compile_graph(g, OPTS)
+    ell_ops = [op for op in plan.ops if op.ell is not None]
+    assert len(ell_ops) == 2
+    assert ell_ops[0].ell[0] is not ell_ops[1].ell[0]     # per-op copies
+    params = collect_params(plan)
+    assert params.slots[(ell_ops[0].name, "ell_idx")] == \
+        params.slots[(ell_ops[1].name, "ell_idx")]
+    assert params.slots[(ell_ops[0].name, "ell_val")] == \
+        params.slots[(ell_ops[1].name, "ell_val")]
+    assert params.value_dedup_bytes > 0
+    ins = random_inputs(plan, seed=GOLDEN_SEED)
+    with_res = build_runner(plan, residency=True)(**ins)
+    without = build_runner(plan, residency=False)(**ins)
+    for got, want in zip(with_res, without):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_shared_adjacency_uploads_once():
     """A graph-level shared adjacency stays one device buffer across every
     mp layer that references it."""
@@ -208,6 +261,48 @@ def test_weight_hot_swap_without_retrace():
     run.resident.swap(target.name, "w", old)    # restore
     restored = np.asarray(run(**stack_inputs(samples))[0])
     np.testing.assert_array_equal(restored, before)
+
+
+def test_swap_unaliases_content_folded_slots():
+    """Two ops whose biases were byte-equal at compile time share one
+    buffer (value dedup); swapping one op's bias must un-alias it first —
+    the other op keeps the old values."""
+    rng = np.random.default_rng(1)
+    b = GraphBuilder("alias_swap")
+    x = b.input((4, 8), name="x")
+    w1 = rng.standard_normal((8, 8)).astype(np.float32)
+    w2 = rng.standard_normal((8, 8)).astype(np.float32)
+    h = b.linear(x, w1, b=np.zeros(8, np.float32), name="l1")
+    h = b.linear(h, w2, b=np.zeros(8, np.float32), name="l2")
+    plan = compile_graph(b.output(h), OPTS)
+    run = build_runner(plan, batch=2, jit=True)
+    res = run.resident
+    assert res.slots[("l1", "b")] == res.slots[("l2", "b")]   # folded
+    samples = [{"x": rng.standard_normal((4, 8)).astype(np.float32)}
+               for _ in range(2)]
+    stacked = stack_inputs(samples)
+    base = np.asarray(run(**stacked)[0])
+
+    delta = np.full(8, 0.5, np.float32)
+    res.swap("l1", "b", delta)
+    assert res.slots[("l1", "b")] != res.slots[("l2", "b")]   # un-aliased
+    swapped = np.asarray(run(**stacked)[0])
+    # only l1's bias moved: its delta propagates through relu-free l2 as
+    # (delta @ w2); l2's own bias must NOT have changed
+    want = base + delta @ np.asarray(w2)
+    np.testing.assert_allclose(swapped, want, rtol=1e-4, atol=1e-5)
+
+    # identity-shared slots still follow the swap together
+    shared = np.zeros(8, np.float32)
+    b2 = GraphBuilder("identity_swap")
+    x2 = b2.input((4, 8), name="x")
+    h2 = b2.linear(x2, w1, b=shared, name="l1")
+    h2 = b2.linear(h2, w2, b=shared, name="l2")
+    plan2 = compile_graph(b2.output(h2), OPTS)
+    run2 = build_runner(plan2, batch=2, jit=True)
+    res2 = run2.resident
+    res2.swap("l1", "b", delta)
+    assert res2.slots[("l1", "b")] == res2.slots[("l2", "b")]
 
 
 def test_swap_rejects_shape_change():

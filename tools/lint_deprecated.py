@@ -1,0 +1,78 @@
+"""Lint gate: no new in-repo uses of the pre-façade entry points.
+
+``repro.gcv`` is the public API; the old surfaces (direct
+``build_runner``/``cached_runner`` calls, ``frontend.compile_model``,
+hand-constructed ``GNNCVServeEngine``) survive one PR as shims or
+internals constructed *by* the façade.  This gate keeps them from
+creeping back into library code, examples, or benchmarks:
+
+  * library code under ``src/repro`` may use them only inside the modules
+    that define or implement them (``core/``, ``gcv.py``, the shim in
+    ``frontend/__init__.py``, the engine module itself);
+  * ``examples/`` and ``benchmarks/`` must go through ``gcv``;
+  * ``tests/`` are exempt — they deliberately pin the legacy path for
+    bit-for-bit parity and exercise the deprecation shims.
+
+Run from the repo root (CI does): ``python tools/lint_deprecated.py``.
+Exit code 1 and one line per offence on failure.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# entry points the façade supersedes (call sites, not attribute mentions)
+FORBIDDEN = [
+    re.compile(r"\bbuild_runner\s*\("),
+    re.compile(r"\bcached_runner\s*\("),
+    re.compile(r"\bcompile_model\s*\("),
+    re.compile(r"\bGNNCVServeEngine\s*\("),
+]
+
+SCAN_DIRS = ("src/repro", "examples", "benchmarks")
+
+# modules that define, implement, or intentionally shim the entry points
+ALLOWED = {
+    "src/repro/gcv.py",                  # the façade itself
+    "src/repro/frontend/__init__.py",    # the deprecated compile_model shim
+    "src/repro/serve/gnncv.py",          # defines GNNCVServeEngine
+}
+ALLOWED_PREFIXES = ("src/repro/core/",)  # the internals the façade drives
+
+
+def offences(root: pathlib.Path = ROOT) -> list[str]:
+    out = []
+    for scan in SCAN_DIRS:
+        for path in sorted((root / scan).rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            if rel in ALLOWED or rel.startswith(ALLOWED_PREFIXES):
+                continue
+            for lineno, line in enumerate(
+                    path.read_text().splitlines(), start=1):
+                code = line.split("#", 1)[0]         # strip comments
+                for pat in FORBIDDEN:
+                    if pat.search(code):
+                        out.append(f"{rel}:{lineno}: deprecated entry "
+                                   f"point {pat.pattern!r} — use "
+                                   f"repro.gcv instead")
+    return out
+
+
+def main() -> int:
+    found = offences()
+    for line in found:
+        print(line)
+    if found:
+        print(f"\n{len(found)} use(s) of deprecated entry points; "
+              f"route them through repro.gcv (see README 'Migration').")
+        return 1
+    print("lint_deprecated: OK (no in-repo uses of pre-facade "
+          "entry points outside shims)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
