@@ -34,10 +34,11 @@ def compile_task(graph, **opts):
     return compile_graph(graph, CompileOptions(**opts))
 
 
-def measure_wall_ms(plan, iters: int = 3, use_pallas: bool = False) -> float:
+def measure_wall_ms(plan, iters: int = 3, kernels: str = "auto") -> float:
     """CPU wall-clock of the jit'd executor (sanity only — the modelled
-    latency is the paper-comparable number)."""
-    model = gcv.compile(plan, use_pallas=use_pallas)
+    latency is the paper-comparable number).  ``kernels`` picks the per-op
+    realization mode (auto/xla/pallas/measured)."""
+    model = gcv.compile(plan, options=CompileOptions(kernels=kernels))
     ins = model.random_inputs()
     out = model.run(**ins)                   # compile + warm
     t0 = time.perf_counter()

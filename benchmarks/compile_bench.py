@@ -4,12 +4,19 @@ traced-only b7 ViG through the JAX tracer — its own recorded baseline,
 since the paper publishes no latency target for ViG).
 
     PYTHONPATH=src python -m benchmarks.compile_bench [--small] [--iters N]
-                                                      [--quick]
+        [--quick] [--kernels auto|xla|pallas|measured] [--tasks b1,b6]
 
 ``--quick`` is the CI smoke mode: one iteration, skip the first-run jit
 phase (by far the slowest), keep the full seven-task frontend sweep — a
 regression anywhere in trace/canonicalize (new unsupported primitive,
 broken pattern match) still fails fast.
+
+``--kernels`` picks the Step-4b realization mode; every record carries the
+per-op kernel decisions (``kernel_counts`` + the choice map), so the
+uploaded ``BENCH_compile.json`` doubles as the kernel-choice report.
+``--kernels measured`` additionally populates/reads the autotune cache
+(``.autotune_cache.json`` or ``$REPRO_AUTOTUNE_CACHE``), which CI uploads
+as an artifact.  ``--tasks`` restricts the sweep (comma-separated).
 
 Four phases per (task, frontend):
 
@@ -59,7 +66,7 @@ def _time_ms(fn, iters: int):
 
 
 def bench(task: str, use_tracer: bool, *, small: bool, iters: int,
-          first_run: bool = True):
+          first_run: bool = True, options: CompileOptions = OPTS):
     builder = build_traced_task if use_tracer else build_task
     build_ms, graph = _time_ms(lambda: builder(task, small=small), iters)
 
@@ -67,7 +74,7 @@ def bench(task: str, use_tracer: bool, *, small: bool, iters: int,
         # clear the plan cache so every iteration times the six passes,
         # not a cache hit — the cold path a server pays once per graph
         clear_caches()
-        return gcv.compile(graph, options=OPTS)
+        return gcv.compile(graph, options=options)
 
     compile_ms, model = _time_ms(compile_cold, iters)
     plan = model.plan
@@ -81,25 +88,31 @@ def bench(task: str, use_tracer: bool, *, small: bool, iters: int,
     upload_ms, params = _time_ms(upload, iters)
     if not first_run:
         return (build_ms, compile_ms, upload_ms, float("nan"),
-                len(plan.ops), params)
+                len(plan.ops), params, plan)
     ins = model.random_inputs(seed=0)
     t0 = time.perf_counter()
     out = model.run(**ins)
     _ = [o.block_until_ready() for o in out]
     first_ms = (time.perf_counter() - t0) * 1e3
     return (build_ms, compile_ms, upload_ms, first_ms, len(plan.ops),
-            params)
+            params, plan)
 
 
-def run(small: bool = True, iters: int = 3, first_run: bool = True):
+def run(small: bool = True, iters: int = 3, first_run: bool = True,
+        kernels: str = "auto", tasks=None):
+    import dataclasses
+    options = dataclasses.replace(OPTS, kernels=kernels)
     rows, records = [], []
     sweep = [(t, use_tracer) for t in TASKS
              for use_tracer in (False, True)]
     sweep += [(t, True) for t in TRACED_ONLY]
+    if tasks is not None:
+        sweep = [(t, u) for t, u in sweep if t in tasks]
     for task, use_tracer in sweep:
         frontend_name = "tracer" if use_tracer else "builder"
-        b, c, u, f, n_ops, params = bench(task, use_tracer, small=small,
-                                          iters=iters, first_run=first_run)
+        b, c, u, f, n_ops, params, plan = bench(
+            task, use_tracer, small=small, iters=iters,
+            first_run=first_run, options=options)
         rows.append((task, frontend_name, n_ops, f"{b:.1f}", f"{c:.1f}",
                      f"{u:.1f}", f"{f:.1f}", f"{b + c + u + f:.1f}"))
         records.append({"task": task, "frontend": frontend_name,
@@ -109,11 +122,17 @@ def run(small: bool = True, iters: int = 3, first_run: bool = True):
                         "first_run_ms": None if math.isnan(f)
                         else round(f, 2),
                         "resident_param_bytes": params.nbytes(),
-                        "value_deduped_bytes": params.value_dedup_bytes})
+                        "value_deduped_bytes": params.value_dedup_bytes,
+                        "kernel_counts": plan.kernel_counts(),
+                        "kernel_choices": {
+                            name: ch["kernel"] for name, ch in
+                            plan.meta.get("kernel_choices", {}).items()},
+                        "autotune": plan.meta.get("autotune")})
     emit(rows, ["task", "frontend", "ops", "build_ms", "compile_ms",
                 "upload_ms", "first_run_ms", "total_ms"])
     write_bench_json("compile", {"small": small, "iters": iters,
-                                 "first_run": first_run, "tasks": records})
+                                 "first_run": first_run,
+                                 "kernels": kernels, "tasks": records})
     return rows
 
 
@@ -125,8 +144,16 @@ if __name__ == "__main__":
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: 1 iteration, skip the first-run phase")
+    ap.add_argument("--kernels", default="auto",
+                    choices=("auto", "xla", "pallas", "measured"),
+                    help="Step-4b kernel selection mode")
+    ap.add_argument("--tasks", default=None,
+                    help="comma-separated task subset (e.g. b1,b6)")
     args = ap.parse_args()
+    task_filter = args.tasks.split(",") if args.tasks else None
     if args.quick:
-        run(small=True, iters=1, first_run=False)
+        run(small=True, iters=1, first_run=False, kernels=args.kernels,
+            tasks=task_filter)
     else:
-        run(small=args.small, iters=args.iters)
+        run(small=args.small, iters=args.iters, kernels=args.kernels,
+            tasks=task_filter)

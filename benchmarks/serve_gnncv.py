@@ -6,13 +6,18 @@ user-defined JAX models (b2/b4/b7 via ``gcv.compile``'s tracing path):
                     own jit'd per-sample runner;
   engine_baseline   the PR-3 engine: synchronous step (dispatch + block),
                     legacy per-call weight staging (``residency=False``);
-  engine_pipelined  this PR's hot path: device-resident weights threaded
+  engine_kernels_xla  the pipelined engine with every op forced onto its
+                    XLA realization (``kernels="xla"``) — the prior
+                    all-XLA configuration, the reference the kernel
+                    selector must not regress;
+  engine_pipelined  the full hot path with per-op kernel selection
+                    (``kernels="auto"``): device-resident weights threaded
                     through jit as arguments, ``warmup()`` AOT-compiling
                     every (task, bucket) runner before traffic, and
                     pipelined dispatch/harvest overlapping host batching
                     with device execution.
 
-Both engine modes are fully warmed before timing, so the delta is pure
+All engine modes are fully warmed before timing, so the delta is pure
 steady-state serving.  The run asserts ``runner_misses`` stays frozen
 during pipelined traffic (no live request ever compiles) and writes the
 machine-readable ``BENCH_serve_gnncv.json`` perf record (p50/p95 request
@@ -30,6 +35,7 @@ reported — steady-state serving throughput, robust to noisy hosts.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax.numpy as jnp
@@ -142,6 +148,39 @@ def bench_engine(graphs, options, stream, max_batch, *, pipelined: bool,
     return best, best_lats, best_dispatches, post
 
 
+def bench_kernel_modes(graphs, options, stream, max_batch, repeats):
+    """Pipelined engines for kernels="xla" and kernels="auto", warmed
+    together and timed in *alternating* passes — on CPU the two modes
+    compile identical dispatch, so timing them in separate back-to-back
+    blocks would just measure which block got the warmer host slot."""
+    engines = {}
+    for mode in ("xla", "auto"):
+        opts = dataclasses.replace(options, kernels=mode)
+        eng = gcv.serve(graphs, pipeline_depth=2, residency=True,
+                        options=opts, max_batch=max_batch)
+        warmed = eng.warmup()
+        assert warmed == {(t, b) for t in graphs for b in eng.buckets()}, \
+            "warmup left (task, bucket) runners uncompiled"
+        engines[mode] = eng
+    pre = {m: e.stats()["runner_misses"] for m, e in engines.items()}
+    best = {m: (float("inf"), [], 0) for m in engines}
+    for _ in range(repeats):
+        for mode, eng in engines.items():
+            steps_before = eng.steps
+            reqs = [eng.submit(task, **inputs) for task, inputs in stream]
+            t0 = time.perf_counter()
+            served = eng.run()
+            dt = time.perf_counter() - t0
+            assert served == len(stream)
+            if dt < best[mode][0]:
+                best[mode] = (dt, [r.t_done - t0 for r in reqs],
+                              eng.steps - steps_before)
+    for mode, eng in engines.items():
+        assert eng.stats()["runner_misses"] == pre[mode], \
+            "a live request paid a runner compile after warmup()"
+    return best, {m: e.stats() for m, e in engines.items()}
+
+
 def mode_record(name, wall_s, lats, n, extra=None):
     return {"mode": name, "wall_ms": round(wall_s * 1e3, 2),
             "req_per_s": round(n / wall_s, 2),
@@ -168,16 +207,23 @@ def run(requests: int = 96, max_batch: int = 8, repeats: int = 5):
     base_s, base_lats, base_disp, base_stats = bench_engine(
         graphs, options, stream, max_batch, pipelined=False,
         repeats=repeats)
-    pipe_s, pipe_lats, pipe_disp, pipe_stats = bench_engine(
-        graphs, options, stream, max_batch, pipelined=True,
-        repeats=repeats)
+    # the prior all-XLA config vs kernels="auto" — same pipelined engine,
+    # only Step-4b selection differs, so auto_vs_xla isolates the kernel
+    # selector's effect on the hot path
+    kern_best, kern_stats = bench_kernel_modes(
+        graphs, options, stream, max_batch, repeats)
+    xla_s, xla_lats, xla_disp = kern_best["xla"]
+    pipe_s, pipe_lats, pipe_disp = kern_best["auto"]
+    pipe_stats = kern_stats["auto"]
 
     modes = [
         mode_record("one_at_a_time", loop_s, loop_lats, requests),
         mode_record("engine_baseline", base_s, base_lats, requests,
                     {"dispatches": base_disp}),
+        mode_record("engine_kernels_xla", xla_s, xla_lats, requests,
+                    {"dispatches": xla_disp, "kernels": "xla"}),
         mode_record("engine_pipelined", pipe_s, pipe_lats, requests,
-                    {"dispatches": pipe_disp,
+                    {"dispatches": pipe_disp, "kernels": options.kernels,
                      "warmed": pipe_stats["warmed"]}),
     ]
     emit([[m["mode"], m["wall_ms"], m["req_per_s"], m["p50_ms"],
@@ -202,19 +248,25 @@ def run(requests: int = 96, max_batch: int = 8, repeats: int = 5):
         task_records[task] = {"frontend": plan.meta["frontend"],
                               "peak_live_bytes_freed": freed,
                               "peak_live_bytes_kept": kept,
-                              "resident_param_bytes": resident}
+                              "resident_param_bytes": resident,
+                              "kernel_counts": plan.kernel_counts()}
     emit(rows, ["task", "frontend", "peak_live_bytes_freed",
                 "peak_live_bytes_kept", "reduction",
                 "resident_param_bytes"])
 
     speedup = (requests / pipe_s) / (requests / base_s)
+    auto_vs_xla = (requests / pipe_s) / (requests / xla_s)
     print(f"pipelined+residency vs PR-3 baseline: {speedup:.2f}x req/s")
+    print(f"kernels=auto vs all-XLA pipelined:    {auto_vs_xla:.2f}x req/s")
     write_bench_json("serve_gnncv", {
         "requests": requests, "max_batch": max_batch,
         "repeats": repeats, "mix": list(MIX),
         "modes": modes, "baseline_req_per_s": round(requests / base_s, 2),
         "pipelined_req_per_s": round(requests / pipe_s, 2),
         "pipelined_vs_baseline": round(speedup, 3),
+        "kernels_xla_req_per_s": round(requests / xla_s, 2),
+        "kernels_auto_req_per_s": round(requests / pipe_s, 2),
+        "auto_vs_xla": round(auto_vs_xla, 3),
         "runner_misses_frozen_under_traffic": True,
         "tasks": task_records,
     })

@@ -1,0 +1,176 @@
+"""Measured kernel autotuning — the optional refinement of Step-4b.
+
+The analytic ``perf_model.predict_kernel_seconds`` is a roofline: it ranks
+realizations correctly in the regimes it models, but the real crossover
+between (say) the jnp gather SpDMM and the Pallas ELL kernel depends on
+backend details no closed form captures.  ``kernels="measured"`` times each
+candidate realization once per unique
+
+    (kind, shapes, dtype, nnz-bucket, backend)
+
+signature — actual op arrays where they exist (ELL structures, masks),
+deterministic random activations otherwise — and binds the winner.  Results
+persist in an on-disk JSON cache (``REPRO_AUTOTUNE_CACHE`` env var or
+``.autotune_cache.json`` in the cwd) so repeated compiles and CI never
+re-measure: a warm cache makes the measured mode as cheap as the predicted
+one.
+
+nnz is bucketed to the nearest power of two: two adjacencies with 1000 vs
+1100 edges share one measurement, which is the point — the micro-benchmark
+characterizes a *regime*, not an exact matrix.
+
+Selection stays compile-time-only (FlowGNN discussion, paper §VII-D2): the
+measurements happen during compilation, never during serving.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import pathlib
+import time
+
+import numpy as np
+
+DEFAULT_CACHE = ".autotune_cache.json"
+_VERSION = 1
+
+
+def _nnz_bucket(nnz: int | None) -> str:
+    if nnz is None or nnz <= 0:
+        return "none"
+    return f"2^{max(0, math.ceil(math.log2(nnz)))}"
+
+
+def op_signature(op, backend: str) -> str:
+    """Measurement identity of one MatOp: everything that changes which
+    realization wins, nothing that doesn't (weights' values don't)."""
+    a = op.attrs
+    dims = "x".join(str(a.get(k, 0)) for k in ("s1", "s2", "s3"))
+    if op.kind == "conv":
+        w = op.weights["w"]
+        dims = "x".join(str(d) for d in (*w.shape, *op.out_shape))
+        dims += f"|st{a.get('stride')}|{a.get('padding')}"
+    facet = a.get("weight_side", a.get("exec", ""))
+    ell_l = op.ell[0].shape[1] if op.ell is not None else 0
+    return "|".join([op.kind, str(facet), dims, f"L{ell_l}",
+                     _nnz_bucket(a.get("nnz")), backend, "f32"])
+
+
+class AutotuneCache:
+    """On-disk ``signature -> {kernel: seconds}`` store.
+
+    ``measured_now`` counts signatures measured by *this* process — a warm
+    cache round-trips with it at zero (the round-trip test's contract).
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = pathlib.Path(
+            path or os.environ.get("REPRO_AUTOTUNE_CACHE", DEFAULT_CACHE))
+        self.entries: dict[str, dict[str, float]] = {}
+        self.dirty = False
+        self.measured_now = 0
+        self.hits = 0
+        if self.path.exists():
+            blob = json.loads(self.path.read_text())
+            if blob.get("version") == _VERSION:
+                self.entries = blob.get("entries", {})
+
+    def lookup(self, sig: str) -> dict[str, float] | None:
+        return self.entries.get(sig)
+
+    def store(self, sig: str, timings: dict[str, float]) -> None:
+        self.entries[sig] = {k: float(v) for k, v in timings.items()}
+        self.dirty = True
+
+    def save(self) -> None:
+        if not self.dirty:
+            return
+        self.path.write_text(json.dumps(
+            {"version": _VERSION, "entries": self.entries},
+            indent=1, sort_keys=True))
+        self.dirty = False
+
+
+# ------------------------------------------------------------ measurement --
+def _time_call(fn, args, repeats: int) -> float:
+    import jax
+    out = fn(*args)                        # warmup: trace + compile
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _realization(op, kernel: str, rng):
+    """(fn, args) micro-benchmark for one candidate, or None when the
+    kernel has no standalone measurable form (single-candidate families are
+    never measured)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+    a = op.attrs
+    f32 = np.float32
+    if op.kind == "conv":
+        k1, k2, cin, cout = op.weights["w"].shape
+        ho, wo = op.out_shape[-2:]
+        st = a["stride"]
+        sh, sw = (st, st) if isinstance(st, int) else st
+        if a["padding"] == "SAME":
+            h, w = ho * sh, wo * sw
+        else:
+            h, w = (ho - 1) * sh + k1, (wo - 1) * sw + k2
+        x = jnp.asarray(rng.standard_normal((cin, h, w)), dtype=f32)
+        wgt = jnp.asarray(op.weights["w"], dtype=f32)
+        pall = kernel == "pallas_ddmm"
+        return (lambda xi, wi: kops.conv2d(
+            xi, wi, stride=st, padding=a["padding"], use_pallas=pall),
+            (x, wgt))
+    s1, s2, s3 = a.get("s1", 1), a.get("s2", 1), a.get("s3", 1)
+    if kernel in ("xla_ell_spdmm", "pallas_ell_spdmm"):
+        idx = jnp.asarray(op.ell[0])
+        val = jnp.asarray(op.ell[1], dtype=f32)
+        y = jnp.asarray(rng.standard_normal((s2, s3)), dtype=f32)
+        pall = kernel == "pallas_ell_spdmm"
+        return (lambda i, v, yi: kops.sparse_matmul(
+            i, v, yi, use_pallas=pall), (idx, val, y))
+    if kernel in ("xla_dense", "pallas_ddmm"):
+        x = jnp.asarray(rng.standard_normal((s1, s2)), dtype=f32)
+        y = jnp.asarray(rng.standard_normal((s2, s3)), dtype=f32)
+        pall = kernel == "pallas_ddmm"
+        return (lambda xi, yi: kops.matmul(xi, yi, use_pallas=pall), (x, y))
+    if kernel in ("xla_sddmm", "pallas_sddmm"):
+        x = jnp.asarray(rng.standard_normal((s1, s2)), dtype=f32)
+        mask = (jnp.asarray(op.weights["mask"], dtype=f32)
+                if op.weights.get("mask") is not None
+                else jnp.ones((s1, s1), dtype=f32))
+        pall = kernel == "pallas_sddmm"
+        return (lambda xi, m: kops.sampled_matmul(
+            xi, xi.T, m, use_pallas=pall), (x, mask))
+    return None
+
+
+def measure_op(op, candidates: list[str], cache: AutotuneCache, *,
+               backend: str, repeats: int = 2) -> dict[str, float]:
+    """Best-of-``repeats`` wall time per candidate, through the cache."""
+    sig = op_signature(op, backend)
+    hit = cache.lookup(sig)
+    if hit is not None and all(k in hit for k in candidates):
+        cache.hits += 1
+        return {k: hit[k] for k in candidates}
+    timings = dict(hit or {})
+    rng = np.random.default_rng(0)
+    for kernel in candidates:
+        if kernel in timings:
+            continue
+        real = _realization(op, kernel, rng)
+        if real is None:
+            continue
+        fn, args = real
+        timings[kernel] = _time_call(fn, args, repeats)
+    cache.store(sig, timings)
+    cache.measured_now += 1
+    return {k: v for k, v in timings.items() if k in candidates}

@@ -14,7 +14,7 @@ import dataclasses
 
 from repro.core.ir import Graph
 from repro.core.passes import (annotate_liveness, assign_tiles, fuse_layers,
-                               lower_to_matops, schedule_plan,
+                               lower_to_matops, schedule_plan, select_kernels,
                                select_primitives)
 from repro.core.plan import ExecutionPlan
 
@@ -26,6 +26,13 @@ class CompileOptions:
     sparsity_aware: bool = True       # Step 4 (ablation: §VII-C)
     target: str = "tpu"               # 'tpu' | 'fpga'
     vmem_budget_bytes: int = 8 * 2**20
+    # Step 4b — per-op kernel realization: 'auto' (analytic cost model) |
+    # 'xla' | 'pallas' (forced, with recorded fallbacks) | 'measured'
+    # (micro-benchmark autotune through the on-disk cache)
+    kernels: str = "auto"
+    # JSON cache path for kernels='measured'; None = $REPRO_AUTOTUNE_CACHE
+    # or .autotune_cache.json in the cwd
+    autotune_cache: str | None = None
 
 
 def compile_graph(g: Graph,
@@ -38,6 +45,8 @@ def compile_graph(g: Graph,
                         vmem_budget_bytes=options.vmem_budget_bytes)
     plan = select_primitives(plan, target=options.target,   # Step 4
                              enable=options.sparsity_aware)
+    plan = select_kernels(plan, kernels=options.kernels,    # Step 4b
+                          autotune_cache=options.autotune_cache)
     plan = schedule_plan(plan)                          # Step 5
     plan = annotate_liveness(plan)                      # Step 6
     plan.meta["options"] = dataclasses.asdict(options)

@@ -3,8 +3,10 @@
 The software analogue of the GCV-Turbo APU: it walks the ``ExecutionPlan``
 instruction sequence and dispatches every op through
 ``repro.core.runtime.run_op`` (per-kind handlers registered with
-``@register_op``; Pallas kernels when ``use_pallas=True``, fused pure-jnp
-realizations otherwise).  Weights and compile-time ELL structures are
+``@register_op``; each op executes the realization Step 4b bound to it —
+``op.kernel`` — so one plan can mix Pallas and XLA kernels op by op.  The
+``use_pallas`` argument survives only as the legacy dispatch for
+kernel-less plans).  Weights and compile-time ELL structures are
 **device-resident plan state** (``runtime/residency.py``): collected and
 uploaded once per runner, deduplicated by array identity, and threaded
 through ``jax.jit`` as an *argument* pytree — the paper's parameters
@@ -56,6 +58,11 @@ def build_runner(plan: ExecutionPlan, *, use_pallas: bool = False,
                  free_dead: bool = True, residency: bool = True,
                  weights_as_args: bool | None = None) -> Callable[..., tuple]:
     """Returns ``run(**inputs) -> tuple(outputs)``.
+
+    ``use_pallas`` is a legacy shim: compiled plans carry per-op kernel
+    bindings (``op.kernel``, Step 4b) that fully determine dispatch; the
+    flag only affects kernel-less ops (hand-built plans, old pickles),
+    reconstructing the pre-selection global-flag behaviour.
 
     ``batch=None`` preserves the per-sample contract; ``batch=N`` expects
     every input stacked on a new leading axis of size N and returns outputs

@@ -2,6 +2,8 @@
 from repro.core.passes.fusion import fuse_layers          # noqa: F401
 from repro.core.passes.lower import lower_to_matops       # noqa: F401
 from repro.core.passes.tiling import assign_tiles         # noqa: F401
-from repro.core.passes.select import select_primitives    # noqa: F401
+from repro.core.passes.select import (kernel_report,      # noqa: F401
+                                      select_kernels,
+                                      select_primitives)
 from repro.core.passes.schedule import schedule_plan      # noqa: F401
 from repro.core.passes.liveness import annotate_liveness  # noqa: F401

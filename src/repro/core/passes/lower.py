@@ -182,10 +182,13 @@ def lower_to_matops(g: Graph) -> ExecutionPlan:
             lead = ish[0][:-3]
             c, h, w_sp = ish[0][-3:]
             s = p.get("stride", p["window"])
+            # window/stride are scalars (square, the builder's spelling)
+            # or (kh, kw) tuples (rectangular, from traced reduce_window)
+            s1, s2 = (s, s) if isinstance(s, int) else s
             emit(MatOp(name, "pool2d", layer.inputs, {},
                        {"window": p["window"], "stride": s,
                         "pool": p.get("pool", "max")},
-                       tuple(lead) + (c, -(-h // s), -(-w_sp // s)),
+                       tuple(lead) + (c, -(-h // s1), -(-w_sp // s2)),
                        portion))
 
         elif kind == "globalpool":

@@ -1,4 +1,5 @@
-"""Step 4 — sparsity-aware primitive mapping (paper §V-C5).
+"""Step 4 — sparsity-aware primitive mapping (paper §V-C5) + Step 4b,
+per-op kernel selection.
 
 Every matrix operation is bound to one of the five hardware primitives.
 For matmuls with a compile-time-known operand (layer weights, graph
@@ -13,14 +14,35 @@ sparsity is unknown at compile time, and the paper explicitly rejects
 on-the-fly sparsity profiling (FlowGNN discussion, §VII-D2).
 
 ``enable=False`` maps *everything* dense — the §VII-C sparsity ablation.
+
+Step 4b (``select_kernels``) then binds each op's *software realization*
+(``op.kernel``, from ``plan.KERNELS``) of the primitive just chosen:
+
+  * ``kernels="auto"``      — pick per candidate family by the analytic
+    ``predict_kernel_seconds`` cost at the op's actual shapes/nnz (Pallas
+    on TPU where the fused kernel beats the jnp path, XLA off-TPU where
+    Pallas runs in interpret mode);
+  * ``kernels="xla"``       — force the XLA member of every family (the
+    pre-kernel-selection ``use_pallas=False`` dispatch, bit-for-bit);
+  * ``kernels="pallas"``    — force the Pallas member wherever one exists,
+    fall back with a recorded reason where none does;
+  * ``kernels="measured"``  — micro-benchmark the candidates through the
+    on-disk ``core.autotune`` cache and bind the measured winner (the one
+    mode allowed to cross primitive families: an ELL op with a live dense
+    operand also races the dense kernels).
+
+Decisions — kernel, candidate set, predicted/measured seconds, fallback
+reason — land in ``plan.meta["kernel_choices"]`` keyed by op name.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.perf_model import select_primitive
-from repro.core.plan import ExecutionPlan
+from repro.core.perf_model import predict_kernel_seconds, select_primitive
+from repro.core.plan import ELL_KERNELS, ExecutionPlan, MatOp
 from repro.kernels.spdmm import dense_to_ell
+
+KERNEL_MODES = ("auto", "xla", "pallas", "measured")
 
 
 def select_primitives(plan: ExecutionPlan, *, target: str = "tpu",
@@ -87,3 +109,147 @@ def select_primitives(plan: ExecutionPlan, *, target: str = "tpu",
     plan.meta["sparsity_aware"] = enable
     plan.meta["select_target"] = target
     return plan
+
+
+# ------------------------------------------------------- Step 4b: kernels --
+def _candidates(op: MatOp) -> tuple[list[str], str | None]:
+    """The realization family of one op (XLA member first), plus the
+    reason when the family is a singleton."""
+    if op.kind == "conv":
+        return ["xla_dense", "pallas_ddmm"], None
+    if op.kind == "mm":
+        side = op.attrs["weight_side"]
+        if side == "left_coo":
+            return ["coo_scatter"], ("COO scatter is the only realization "
+                                     "(dataset-scale adjacency is never "
+                                     "densified)")
+        if op.ell is not None and op.primitive == "SpDMM":
+            return ["xla_ell_spdmm", "pallas_ell_spdmm"], None
+        return ["xla_dense", "pallas_ddmm"], None
+    if op.kind == "sddmm":
+        if op.attrs.get("exec") == "coo":
+            return ["coo_scatter"], ("per-edge COO inner products have no "
+                                     "dense-sampled realization")
+        return ["xla_sddmm", "pallas_sddmm"], None
+    if op.kind == "maxagg":
+        return ["xla_ell_spdmm"], ("max-reduce aggregation is inherently "
+                                   "gather (no dense or Pallas path)")
+    return ["xla_ew"], "elementwise/layout op — single jnp realization"
+
+
+def _op_dims(op: MatOp) -> dict:
+    """GEMM-form dims + nnz for ``predict_kernel_seconds``."""
+    a = op.attrs
+    if op.kind == "conv":
+        k1, k2, cin, cout = op.weights["w"].shape
+        ho, wo = op.out_shape[-2:]
+        return {"s1": ho * wo, "s2": k1 * k2 * cin, "s3": cout,
+                "out_elems": int(np.prod(op.out_shape))}
+    if op.kind == "maxagg":
+        n = op.out_shape[0] if op.out_shape else 1
+        return {"s1": n, "s2": n, "s3": a.get("s3", 1), "nnz": a.get("nnz")}
+    return {"s1": a.get("s1", 1), "s2": a.get("s2", 1),
+            "s3": a.get("s3", 1), "nnz": a.get("nnz"),
+            "out_elems": int(np.prod(op.out_shape)) if op.out_shape else 1}
+
+
+def select_kernels(plan: ExecutionPlan, *, kernels: str = "auto",
+                   autotune_cache=None,
+                   backend: str | None = None) -> ExecutionPlan:
+    """Bind ``op.kernel`` for every MatOp and record the decisions.
+
+    Idempotent and re-runnable: calling again with a different mode
+    rebinds in place (``gcv.compile(plan, kernels=...)`` uses that to
+    re-target an existing plan).
+    """
+    assert kernels in KERNEL_MODES, \
+        f"kernels must be one of {KERNEL_MODES}, got {kernels!r}"
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    cache = None
+    if kernels == "measured":
+        from repro.core.autotune import AutotuneCache, measure_op
+        cache = autotune_cache if isinstance(autotune_cache, AutotuneCache) \
+            else AutotuneCache(autotune_cache)
+    choices: dict[str, dict] = {}
+    for op in plan.ops:
+        cands, note = _candidates(op)
+        if (kernels == "measured" and op.kind == "mm"
+                and cands[0] in ELL_KERNELS
+                and op.weights.get("adj", op.weights.get("w")) is not None):
+            # measured mode may cross the primitive family: the dense
+            # operand the ELL superseded is still on the op, so the dense
+            # kernels are real (float-tolerance, not bit-identical) rivals
+            cands = cands + ["xla_dense", "pallas_ddmm"]
+        dims = _op_dims(op)
+        predicted = {k: predict_kernel_seconds(k, backend=backend, **dims)
+                     for k in cands}
+        measured = None
+        source, reason = "predicted", note
+        if len(cands) == 1:
+            kern, source = cands[0], "only"
+        elif kernels == "xla":
+            kern = next(k for k in cands if not k.startswith("pallas_"))
+            source = "forced"
+        elif kernels == "pallas":
+            pall = [k for k in cands if k.startswith("pallas_")]
+            if pall:
+                kern, source = pall[0], "forced"
+            else:
+                kern, source = cands[0], "fallback"
+                reason = note or "no Pallas realization for this op"
+        elif kernels == "measured":
+            measured = measure_op(op, cands, cache, backend=backend)
+            if measured:
+                kern, source = min(measured, key=measured.get), "measured"
+            else:
+                kern = min(predicted, key=predicted.get)
+        else:                                   # auto
+            kern = min(predicted, key=predicted.get)
+        op.kernel = kern
+        choices[op.name] = {
+            "kernel": kern, "kind": op.kind,
+            "primitive": op.primitive, "candidates": cands,
+            "source": source,
+            "predicted_s": {k: float(v) for k, v in predicted.items()},
+            "measured_s": ({k: float(v) for k, v in measured.items()}
+                           if measured else None),
+            "reason": reason,
+        }
+    if cache is not None:
+        cache.save()
+        plan.meta["autotune"] = {
+            "cache": str(cache.path),
+            "measured_signatures": cache.measured_now,
+            "cache_hits": cache.hits,
+        }
+    plan.meta["kernel_choices"] = choices
+    plan.meta["kernel_counts"] = plan.kernel_counts()
+    plan.meta["kernels_mode"] = kernels
+    plan.meta["kernels_backend"] = backend
+    return plan
+
+
+def kernel_report(plan: ExecutionPlan) -> str:
+    """Human-readable view of ``plan.meta["kernel_choices"]`` — one line
+    per op: chosen kernel, decision source, predicted/measured cost."""
+    choices = plan.meta.get("kernel_choices")
+    if not choices:
+        return (f"plan {plan.name!r}: no kernel choices recorded "
+                f"(compiled before kernel selection?)")
+    lines = [f"kernel choices for {plan.name!r} "
+             f"(mode={plan.meta.get('kernels_mode')}, "
+             f"backend={plan.meta.get('kernels_backend')}):"]
+    for name, c in choices.items():
+        cost = (c["measured_s"] or c["predicted_s"]).get(c["kernel"])
+        unit = "measured" if c["measured_s"] else "predicted"
+        line = (f"  {name:<28} {c['kernel']:<18} [{c['source']}] "
+                f"{unit} {cost * 1e6:8.2f} us")
+        if c["source"] in ("fallback", "only") and c["reason"]:
+            line += f"  ({c['reason']})"
+        lines.append(line)
+    counts = plan.meta.get("kernel_counts", {})
+    lines.append("  totals: " + ", ".join(
+        f"{k}={v}" for k, v in sorted(counts.items())))
+    return "\n".join(lines)

@@ -111,3 +111,62 @@ def select_primitive(s1: int, s2: int, s3: int, nnz: int, *,
     sparse = TPU.gather_spdmm_seconds(s1, ell_l, s3, s2)
     dense = TPU.matmul_seconds(s1, s2, s3)
     return "SpDMM" if sparse < dense else "DDMM"
+
+
+# ---------------------------------------------------------------------------
+# Step-4b kernel-realization costs.  ``select_primitive`` above makes the
+# paper's *structural* sparse-vs-dense decision; these predict the runtime
+# cost of each concrete software realization of the chosen primitive
+# (xla vs Pallas), so the compiler can bind ``op.kernel`` per op.
+
+# Fixed per-launch cost of a Pallas call (grid setup + dispatch) — keeps
+# XLA's native dense matmul winning ties, where it is genuinely optimal.
+PALLAS_LAUNCH_S = 2e-6
+# Off-TPU, Pallas kernels run in interpret mode (``default_interpret``) —
+# orders of magnitude slower than compiled XLA.  The exact factor is
+# irrelevant; it only needs to make every Pallas candidate lose off-TPU.
+PALLAS_INTERPRET_PENALTY = 100.0
+
+
+def predict_kernel_seconds(kernel: str, *, s1: int = 1, s2: int = 1,
+                           s3: int = 1, nnz: int | None = None,
+                           out_elems: int | None = None,
+                           backend: str = "tpu") -> float:
+    """Predicted seconds for one op realized by ``kernel`` (TPU roofline).
+
+    ``s1/s2/s3`` are the matmul dims of the op's GEMM form (conv is its
+    im2col GEMM), ``nnz`` the sparse operand's nonzeros where relevant,
+    ``out_elems`` the output size for bandwidth-bound non-matrix ops.
+    ``backend`` is ``jax.default_backend()`` at compile time — off-TPU the
+    Pallas realizations pay the interpret-mode penalty.
+    """
+    t = TPU
+    bpe = 4                                      # runtime arrays are fp32
+    if kernel in ("xla_dense", "pallas_ddmm"):
+        base = t.matmul_seconds(s1, s2, s3, bytes_per_elem=bpe)
+    elif kernel in ("xla_ell_spdmm", "pallas_ell_spdmm"):
+        n = nnz if nnz is not None else s1 * s2
+        ell_l = max(1, math.ceil(n / max(s1, 1)))
+        base = t.gather_spdmm_seconds(s1, ell_l, s3, s2, bytes_per_elem=bpe)
+        if kernel == "xla_ell_spdmm":
+            # the jnp gather realization materializes the (s1, L, s3)
+            # gathered block in HBM (write + re-read) before the FMA
+            base += 2.0 * s1 * ell_l * s3 * bpe / t.hbm_bw
+    elif kernel in ("xla_sddmm", "pallas_sddmm"):
+        base = t.matmul_seconds(s1, s2, s3, bytes_per_elem=bpe)
+        if kernel == "xla_sddmm":
+            # unfused mask multiply: one extra HBM round-trip of the output
+            base += 3.0 * s1 * s3 * bpe / t.hbm_bw
+    elif kernel == "coo_scatter":
+        n = nnz if nnz is not None else s1 * s2
+        flops = 2.0 * n * s3
+        bts = n * (4 + 4 + 4) + 2.0 * (s1 + s2) * s3 * bpe
+        base = max(8.0 * flops / t.peak_flops, bts / t.hbm_bw)
+    else:                                        # xla_ew and friends
+        elems = out_elems if out_elems is not None else s1 * s3
+        base = 2.0 * elems * bpe / t.hbm_bw
+    if kernel.startswith("pallas_"):
+        base += PALLAS_LAUNCH_S
+        if backend != "tpu":
+            base *= PALLAS_INTERPRET_PENALTY
+    return base

@@ -23,6 +23,28 @@ MATOP_KINDS = frozenset({
     "transpose", "reshape", "concat", "identity",
 })
 
+# The kernel lattice: every concrete realization a MatOp can dispatch to at
+# runtime.  ``op.primitive`` stays the paper's *hardware primitive* (DDMM /
+# SpDMM / SDDMM / PSVM / PVVA — the Step-4 structural decision and the
+# Step-5 costing vocabulary); ``op.kernel`` is the *software realization*
+# of that primitive Step 4 additionally binds (xla vs Pallas, gather vs
+# scatter).  Two names per primitive family where both realizations exist.
+KERNELS = frozenset({
+    "xla_dense",        # dense matmul / native conv on plain XLA
+    "pallas_ddmm",      # Pallas DDMM tile kernel (conv: shift-conv kernel)
+    "xla_ell_spdmm",    # ELL gather+FMA in jnp (spdmm oracle)
+    "pallas_ell_spdmm",  # Pallas ELL SpDMM kernel
+    "coo_scatter",      # COO segment scatter/gather (only realization)
+    "xla_sddmm",        # masked dense product in jnp
+    "pallas_sddmm",     # Pallas blockwise sampled-dense-dense kernel
+    "xla_ew",           # everything non-matrix (ew/pool/layout)
+})
+
+# Realization families (used by runtime dispatch and residency planning).
+DENSE_KERNELS = frozenset({"xla_dense", "pallas_ddmm"})
+ELL_KERNELS = frozenset({"xla_ell_spdmm", "pallas_ell_spdmm"})
+SDDMM_KERNELS = frozenset({"xla_sddmm", "pallas_sddmm"})
+
 
 @dataclasses.dataclass
 class MatOp:
@@ -38,6 +60,9 @@ class MatOp:
     # ---- Step 4: primitive mapping ----
     primitive: str | None = None     # DDMM/SpDMM/SDDMM/PSVM/PVVA/none
     ell: tuple[np.ndarray, np.ndarray] | None = None
+    # ---- Step 4b: kernel selection (one of KERNELS; None = legacy plan,
+    # the runtime then derives the realization from primitive + use_pallas)
+    kernel: str | None = None
     # ---- Step 5: cost/schedule ----
     cycles: float = 0.0              # FPGA cycles (one PE, pre-balancing)
     bytes_moved: float = 0.0
@@ -61,6 +86,13 @@ class ExecutionPlan:
         counts: dict[str, int] = {}
         for op in self.ops:
             key = op.primitive or op.kind
+            counts[key] = counts.get(key, 0) + 1
+        return counts
+
+    def kernel_counts(self) -> dict[str, int]:
+        counts: dict[str, int] = {}
+        for op in self.ops:
+            key = op.kernel or "unselected"
             counts[key] = counts.get(key, 0) + 1
         return counts
 

@@ -39,10 +39,14 @@ def cached_plan(graph: Graph,
 
 def cached_runner(graph: Graph,
                   options: CompileOptions = CompileOptions(), *,
-                  batch: int | None = None, use_pallas: bool = False,
+                  batch: int | None = None,
                   jit: bool | None = None, free_dead: bool = True,
                   residency: bool = True):
     """Compiled runner for ``graph``, one per (options, batch, ...).
+
+    Kernel realizations are compile-time plan state (``options.kernels``
+    via Step 4b), so two kernel modes are two *plans* — distinct
+    ``options`` — and the runner key needs no realization flag.
 
     ``jit`` defaults to None so ``build_runner`` resolves it batch-aware
     (whole-program jit per-sample, per-op dispatch batched — preserving the
@@ -53,12 +57,12 @@ def cached_runner(graph: Graph,
     per bucket.
     """
     from repro.core.executor import build_runner   # late: avoid import cycle
-    key = (options, batch, use_pallas, jit, free_dead, residency)
+    key = (options, batch, jit, free_dead, residency)
     per_graph = _RUNNERS.setdefault(graph, {})
     if key not in per_graph:
         _STATS["runner_misses"] += 1
         per_graph[key] = build_runner(
-            cached_plan(graph, options), use_pallas=use_pallas, jit=jit,
+            cached_plan(graph, options), jit=jit,
             batch=batch, free_dead=free_dead, residency=residency)
     else:
         _STATS["runner_hits"] += 1

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.core.plan import MatOp
 from repro.core.runtime.context import in_batched_execution
 from repro.core.runtime.elementwise import apply_epilogue
-from repro.core.runtime.registry import register_op
+from repro.core.runtime.registry import op_kernel, register_op
 from repro.core.runtime.residency import weight
 from repro.kernels import ops as kops
 
@@ -72,9 +72,10 @@ def _shift_gemm_conv2d(x, w, *, stride, padding):
 
 @register_op("conv")
 def run_conv(op: MatOp, env, use_pallas: bool, params=None):
+    kern = op_kernel(op, use_pallas)
     x = env[op.inputs[0]]
     w = weight(op, "w", params)
-    if in_batched_execution() and not use_pallas:
+    if in_batched_execution() and kern != "pallas_ddmm":
         fn = lambda xi: _shift_gemm_conv2d(  # noqa: E731
             xi, w, stride=op.attrs["stride"],
             padding=op.attrs["padding"])
@@ -83,5 +84,5 @@ def run_conv(op: MatOp, env, use_pallas: bool, params=None):
         out = kops.conv2d(x, w,
                           stride=op.attrs["stride"],
                           padding=op.attrs["padding"],
-                          use_pallas=use_pallas)
+                          use_pallas=kern == "pallas_ddmm")
     return apply_epilogue(out, op, env, params)

@@ -4,6 +4,9 @@ Covers activations, residual add, dense/masked/segment softmax and the two
 norm flavours.  ``apply_epilogue`` is the one place bias + fused activation +
 fused residual semantics live; the matmul and conv handlers call it so the
 fusion pass's annotations mean the same thing for every producing op.
+
+These ops have a single jnp realization — Step 4b records them as
+``xla_ew`` ("only candidate"); the handler never branches on a kernel.
 """
 from __future__ import annotations
 

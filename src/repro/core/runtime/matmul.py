@@ -2,19 +2,21 @@
 
 ``mm`` sub-dispatches on ``weight_side`` — the lowering pass's encoding of
 where the compile-time operand sits (right weight, left adjacency, COO
-scatter, runtime x runtime, and the ST-GCN (C,T,V) x Aᵀ layout).  SpDMM
-primitives route through the ELL kernels; DDMM through the dense matmul
-kernel (or plain ``@`` on the jnp fast path).
+scatter, runtime x runtime, and the ST-GCN (C,T,V) x Aᵀ layout) — and then
+on the op's Step-4b kernel binding (``op_kernel``): ELL-family kernels
+route through the sparse matmul seam (Pallas ELL kernel or jnp gather
+oracle), dense-family kernels through the DDMM kernel or the batch-stable
+plain dot, ``coo_scatter`` through segment scatter.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.plan import MatOp
+from repro.core.plan import ELL_KERNELS, MatOp
 from repro.core.runtime.context import in_batched_execution
 from repro.core.runtime.elementwise import apply_epilogue
-from repro.core.runtime.registry import register_op
+from repro.core.runtime.registry import op_kernel, register_op
 from repro.core.runtime.residency import ell_pair, weight
 from repro.kernels import ops as kops
 
@@ -32,6 +34,13 @@ def _stable_matmul(x2, y2):
         if x2.shape[0] == 1:
             return (x2[0][:, None] * y2).sum(0)[None]
     return x2 @ y2
+
+
+def _dense(kern: str, x2, y2):
+    """One dense product through the chosen realization."""
+    if kern == "pallas_ddmm":
+        return kops.matmul(x2, y2, use_pallas=True)
+    return _stable_matmul(x2, y2)
 
 
 def _coo_aggregate(op: MatOp, env, x, params):
@@ -53,52 +62,44 @@ def _coo_aggregate(op: MatOp, env, x, params):
 
 @register_op("mm")
 def run_mm(op: MatOp, env, use_pallas: bool, params=None):
+    kern = op_kernel(op, use_pallas)
     side = op.attrs["weight_side"]
     x = env[op.inputs[0]]
     if side == "right":
         x2 = x.reshape(-1, x.shape[-1])
-        if op.primitive == "SpDMM":
+        if kern in ELL_KERNELS:
             # w sparse: x @ w = (wᵀ @ x2ᵀ)ᵀ ; ELL stores wᵀ already
             idx, val = ell_pair(op, params)
-            out = kops.sparse_matmul(idx, val, x2.T,
-                                     use_pallas=use_pallas).T
+            out = kops.sparse_matmul(
+                idx, val, x2.T, use_pallas=kern == "pallas_ell_spdmm").T
         else:
-            w = weight(op, "w", params)
-            out = (kops.matmul(x2, w, use_pallas=use_pallas)
-                   if use_pallas else _stable_matmul(x2, w))
+            out = _dense(kern, x2, weight(op, "w", params))
         out = out.reshape(op.out_shape if op.out_shape else (-1,))
     elif side == "left":
-        if op.primitive == "SpDMM":
+        if kern in ELL_KERNELS:
             idx, val = ell_pair(op, params)
-            out = kops.sparse_matmul(idx, val, x, use_pallas=use_pallas)
+            out = kops.sparse_matmul(
+                idx, val, x, use_pallas=kern == "pallas_ell_spdmm")
         else:
-            adj = weight(op, "adj", params)
-            out = (kops.matmul(adj, x, use_pallas=use_pallas)
-                   if use_pallas else _stable_matmul(adj, x))
+            out = _dense(kern, weight(op, "adj", params), x)
     elif side == "left_coo":
         out = _coo_aggregate(op, env, x, params)
     elif side == "left_runtime":
-        adj = env[op.inputs[1]]
-        out = (kops.matmul(adj, x, use_pallas=use_pallas)
-               if use_pallas else _stable_matmul(adj, x))
+        out = _dense(kern, env[op.inputs[1]], x)
     elif side == "both_runtime":
         y = env[op.inputs[1]]
         y2 = y.reshape(y.shape[0], -1)
         x2 = x.reshape(-1, x.shape[-1])
-        out = (kops.matmul(x2, y2, use_pallas=use_pallas)
-               if use_pallas else _stable_matmul(x2, y2))
-        out = out.reshape(op.out_shape)
+        out = _dense(kern, x2, y2).reshape(op.out_shape)
     elif side == "right_t":                    # (C,T,V) x Aᵀ
         c, t, v = x.shape
         x2 = x.reshape(c * t, v)
-        if op.primitive == "SpDMM":            # ELL holds Aᵀ? stored A side
+        if kern in ELL_KERNELS:                # ELL holds Aᵀ? stored A side
             idx, val = ell_pair(op, params)
-            out = kops.sparse_matmul(idx, val, x2.T,
-                                     use_pallas=use_pallas).T
+            out = kops.sparse_matmul(
+                idx, val, x2.T, use_pallas=kern == "pallas_ell_spdmm").T
         else:
-            adj = weight(op, "adj", params)
-            out = (kops.matmul(x2, adj.T, use_pallas=use_pallas)
-                   if use_pallas else _stable_matmul(x2, adj.T))
+            out = _dense(kern, x2, weight(op, "adj", params).T)
         out = out.reshape(c, t, v)
     else:
         raise ValueError(side)
@@ -107,13 +108,15 @@ def run_mm(op: MatOp, env, use_pallas: bool, params=None):
 
 @register_op("sddmm")
 def run_sddmm(op: MatOp, env, use_pallas: bool, params=None):
+    kern = op_kernel(op, use_pallas)
     x = env[op.inputs[0]]
-    if op.attrs.get("exec") == "coo":          # per-edge inner products
+    if kern == "coo_scatter":                  # per-edge inner products
         rows = weight(op, "coo_rows", params)
         cols = weight(op, "coo_cols", params)
         return (x[rows] * x[cols]).sum(-1)
     if "mask" in op.weights:
         mask = weight(op, "mask", params)
-        return kops.sampled_matmul(x, x.T, mask, use_pallas=use_pallas)
-    return kops.matmul(x, x.T, use_pallas=use_pallas) \
-        if use_pallas else x @ x.T
+        return kops.sampled_matmul(x, x.T, mask,
+                                   use_pallas=kern == "pallas_sddmm")
+    return kops.matmul(x, x.T, use_pallas=True) \
+        if kern == "pallas_sddmm" else x @ x.T

@@ -1,5 +1,11 @@
 """Pooling-family handlers: windowed pool2d, global pooling, and the ELL
 max-aggregation used for dense-adjacency ``reduce='max'`` message passing.
+
+``pool2d``/``globalpool`` have a single jnp realization (Step 4b records
+them as ``xla_ew``); ``maxagg`` executes from its compile-time ELL
+structure (``xla_ell_spdmm`` — the gather family, with no Pallas member).
+Windows and strides may be scalars (square pools, the builder's spelling)
+or ``(kh, kw)`` tuples (rectangular pools from traced ``reduce_window``).
 """
 from __future__ import annotations
 
@@ -11,18 +17,23 @@ from repro.core.runtime.registry import register_op
 from repro.core.runtime.residency import ell_pair
 
 
+def _pair(v) -> tuple[int, int]:
+    return (v, v) if isinstance(v, int) else tuple(v)
+
+
 @register_op("pool2d")
 def run_pool2d(op: MatOp, env, use_pallas: bool, params=None):
     x = env[op.inputs[0]]
-    wdw, s = op.attrs["window"], op.attrs["stride"]
+    k1, k2 = _pair(op.attrs["window"])
+    s1, s2 = _pair(op.attrs["stride"])
     ones = (1,) * (x.ndim - 2)
-    win, strides = ones + (wdw, wdw), ones + (s, s)
+    win, strides = ones + (k1, k2), ones + (s1, s2)
     if op.attrs["pool"] == "max":
         return jax.lax.reduce_window(
             x, -jnp.inf, jax.lax.max, win, strides, "SAME")
     out = jax.lax.reduce_window(
         x, 0.0, jax.lax.add, win, strides, "SAME")
-    return out / (wdw * wdw)
+    return out / (k1 * k2)
 
 
 @register_op("globalpool")

@@ -13,13 +13,48 @@ point the executor (and tests poking at single ops) need.  The registry is
 also the ground truth the lowering pass is validated against: every kind in
 ``plan.MATOP_KINDS`` must have a handler (see ``validate_registry``), so an
 op that lowers but cannot execute is caught at import time, not mid-run.
+
+Realization dispatch: handlers branch on ``op_kernel(op, use_pallas)`` —
+the compile-time Step-4b choice recorded on the op.  The ``use_pallas``
+protocol argument is a legacy shim: it only matters for *kernel-less* ops
+(plans compiled before kernel selection, or hand-built MatOps in tests),
+where it reconstructs the pre-selection global-flag dispatch.
 """
 from __future__ import annotations
 
 from typing import Callable, Mapping, Optional, Protocol
 
-from repro.core.plan import MatOp
+from repro.core.plan import KERNELS, MatOp
 from repro.core.runtime.residency import ResidentParams
+
+
+def op_kernel(op: MatOp, use_pallas: bool = False) -> str:
+    """The op's concrete realization.
+
+    Prefers the compile-time ``op.kernel`` binding (Step 4b).  Kernel-less
+    ops fall back to the legacy mapping from (kind, side, primitive,
+    use_pallas) — exactly the dispatch the global flag used to produce, so
+    direct ``run_op`` pokes on hand-built ops keep working.
+    """
+    kern = op.kernel
+    if kern is not None:
+        assert kern in KERNELS, f"{op.name}: unknown kernel {kern!r}"
+        return kern
+    if op.kind == "mm":
+        if op.attrs.get("weight_side") == "left_coo":
+            return "coo_scatter"
+        if op.primitive == "SpDMM":
+            return "pallas_ell_spdmm" if use_pallas else "xla_ell_spdmm"
+        return "pallas_ddmm" if use_pallas else "xla_dense"
+    if op.kind == "sddmm":
+        if op.attrs.get("exec") == "coo":
+            return "coo_scatter"
+        return "pallas_sddmm" if use_pallas else "xla_sddmm"
+    if op.kind == "conv":
+        return "pallas_ddmm" if use_pallas else "xla_dense"
+    if op.kind == "maxagg":
+        return "xla_ell_spdmm"
+    return "xla_ew"
 
 
 class OpHandler(Protocol):

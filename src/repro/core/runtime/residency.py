@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plan import ExecutionPlan, MatOp
+from repro.core.plan import ELL_KERNELS, ExecutionPlan, MatOp
 
 
 def _content_key(arr: np.ndarray) -> tuple:
@@ -54,10 +54,23 @@ ELL_IDX, ELL_VAL = "ell_idx", "ell_val"
 
 def _op_param_slots(op: MatOp):
     """Yield ``(slot, host_array)`` for the op's *live* compile-time
-    arrays — the one place the Step-4 supersession rule lives: when the
-    ELL conversion chose SpDMM / maxagg, the dense 'adj'/'w' it was built
-    from is dead (the handlers execute from (idx, val)) and must not be
-    collected."""
+    arrays — the one place the Step-4 supersession rule lives, now keyed
+    on the Step-4b kernel binding: an ELL-family kernel executes from
+    (idx, val), so the dense 'adj'/'w' it was built from is dead; a
+    dense-family kernel (a measured-mode crossover on an op that still
+    carries its ELL) executes from the dense operand, so the ELL halves
+    are dead instead.  Kernel-less ops keep the legacy primitive-based
+    rule (and collect both representations when present)."""
+    if op.kernel is not None:
+        ell_live = op.ell is not None and op.kernel in ELL_KERNELS
+        dead = {"adj", "w"} if ell_live else set()
+        for name, value in op.weights.items():
+            if value is not None and name not in dead:
+                yield name, value
+        if ell_live:
+            yield ELL_IDX, op.ell[0]
+            yield ELL_VAL, op.ell[1]
+        return
     dead = ({"adj", "w"}
             if op.ell is not None
             and (op.primitive == "SpDMM" or op.kind == "maxagg")

@@ -3,6 +3,10 @@
 DM layers that survived fusion lower to ``transpose``/``identity`` ops whose
 only job is the paper's layout shuffles between CNN (C, H, W) and GNN (N, F)
 worlds; ``reshape``/``concat`` are the residual "Other Layers".
+
+Pure layout movement has a single jnp realization — Step 4b records these
+ops as ``xla_ew`` ("only candidate"); the handlers never branch on a
+kernel and ignore the legacy ``use_pallas`` protocol argument.
 """
 from __future__ import annotations
 

@@ -21,9 +21,7 @@ layers, ``canonicalize.canonicalize`` rewrites jaxpr idioms (bias adds,
 softmax chains, DM reshuffles) back into the paper's layer vocabulary, and
 the resulting ``Graph`` flows through the six-pass compiler unchanged.
 """
-from repro.core.compiler import CompileOptions
 from repro.core.ir import Graph
-from repro.core.plan import ExecutionPlan
 from repro.frontend import nn                                  # noqa: F401
 from repro.frontend.canonicalize import canonicalize           # noqa: F401
 from repro.frontend.lint import lint                           # noqa: F401
@@ -34,18 +32,3 @@ from repro.frontend.trace import (TraceGraph, TraceNode,       # noqa: F401
 def to_graph(fn, example_inputs, *, name: str = "traced") -> Graph:
     """Trace + canonicalize a plain JAX callable into a layer ``Graph``."""
     return canonicalize(trace_model(fn, example_inputs, name=name))
-
-
-def compile_model(fn, example_inputs,
-                  options: CompileOptions = CompileOptions(), *,
-                  name: str = "traced") -> ExecutionPlan:
-    """Deprecated shim: use ``repro.gcv.compile(fn, example_inputs)`` —
-    the unified façade — and read ``.plan`` if you need the raw
-    ``ExecutionPlan``.  Kept for one PR."""
-    import warnings
-    warnings.warn(
-        "frontend.compile_model is deprecated; use "
-        "repro.gcv.compile(model, example_inputs) (the CompiledModel owns "
-        "the plan as .plan)", DeprecationWarning, stacklevel=2)
-    from repro import gcv
-    return gcv.compile(fn, example_inputs, options=options, name=name).plan

@@ -53,6 +53,13 @@ def _scalar(atom):
     return None
 
 
+def _window_area(window) -> int:
+    """kh*kw of a pool window — scalar k means a square k x k window."""
+    if isinstance(window, int):
+        return window * window
+    return int(np.prod(window))
+
+
 class _Rewriter:
     def __init__(self, tg: TraceGraph):
         self.tg = tg
@@ -189,7 +196,8 @@ class _Rewriter:
                                   "in_shape": src.params["in_shape"]}
                     self.absorb(div, src.name)
                     self.dead.add(src.name)
-            elif src.op == "pool_sum" and src.params["window"] ** 2 == n:
+            elif src.op == "pool_sum" and _window_area(
+                    src.params["window"]) == n:
                 div.op = "pool"
                 div.inputs = [src.inputs[0]]
                 div.params = {**src.params, "pool": "avg"}

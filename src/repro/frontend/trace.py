@@ -347,10 +347,10 @@ class _Interpreter:
             raise UnsupportedOpError("dilated reduce_window")
         lead, (k1, k2) = win[:-2], win[-2:]
         slead, (s1, s2) = strides[:-2], strides[-2:]
-        if any(d != 1 for d in lead + slead) or k1 != k2 or s1 != s2:
+        if any(d != 1 for d in lead + slead):
             raise UnsupportedOpError(
-                f"reduce_window with window {win} / strides {strides} does "
-                f"not match a square spatial pool")
+                f"reduce_window with window {win} / strides {strides} "
+                f"pools non-spatial dims")
         sizes = tuple(eqn.invars[0].aval.shape[-2:])
         pads = _norm_pads(p["padding"])
         if pads[:-2] != ((0, 0),) * len(lead):
@@ -358,9 +358,14 @@ class _Interpreter:
         if pads[-2:] != _same_padding(sizes, (k1, k2), (s1, s2)):
             raise UnsupportedOpError(
                 f"reduce_window padding {pads[-2:]} is not SAME")
+        # Square pools keep the builder's scalar spelling (plan/golden
+        # stability); rectangular windows/strides carry (kh, kw) tuples,
+        # which lowering and the pool2d handler accept either way.
+        window = k1 if k1 == k2 else (k1, k2)
+        stride = s1 if s1 == s2 else (s1, s2)
         env[eqn.outvars[0]] = self.node(
-            "pool", pool_op, [atoms[0]], {"window": k1, "stride": s1}, {},
-            eqn.outvars[0])
+            "pool", pool_op, [atoms[0]],
+            {"window": window, "stride": stride}, {}, eqn.outvars[0])
 
     def p_reduce_window_max(self, eqn, atoms, env):
         self._reduce_window(eqn, atoms, env, "pool_max")

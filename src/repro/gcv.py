@@ -36,6 +36,7 @@ the batch size).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Mapping
 
 import jax
@@ -60,6 +61,21 @@ def _resolve_options(options, overrides) -> CompileOptions:
         f"pass either options= or keyword overrides, not both: " \
         f"{sorted(overrides)}"
     return options
+
+
+def _use_pallas_shim(opts: CompileOptions,
+                     use_pallas: bool | None) -> CompileOptions:
+    """Deprecation shim (one PR): the global flag becomes a kernel mode."""
+    if use_pallas is None:
+        return opts
+    import warnings
+    warnings.warn(
+        "use_pallas= is deprecated; per-op kernel selection replaced the "
+        "global flag — pass kernels='pallas' / kernels='xla' (or keep the "
+        "default kernels='auto' and let the cost model decide per op)",
+        DeprecationWarning, stacklevel=3)
+    return dataclasses.replace(
+        opts, kernels="pallas" if use_pallas else "xla")
 
 
 def _example_shapes(example_inputs: Mapping[str, Any]) -> dict[str, tuple]:
@@ -91,12 +107,11 @@ class CompiledModel:
     """
 
     def __init__(self, plan: ExecutionPlan, *, graph: Graph | None = None,
-                 options: CompileOptions, use_pallas: bool = False,
-                 residency: bool = True, batch: int | None = None):
+                 options: CompileOptions, residency: bool = True,
+                 batch: int | None = None):
         self.plan = plan
         self.graph = graph
         self.options = options
-        self.use_pallas = use_pallas
         self.residency = residency
         self.batch = batch                   # default batch for .run()
         self._runners: dict[tuple, Callable] = {}
@@ -123,14 +138,12 @@ class CompiledModel:
             # (the lookup is two dict probes); the local record only
             # feeds introspection and swap bookkeeping.
             run = cached_runner(self.graph, self.options, batch=batch,
-                                use_pallas=self.use_pallas, jit=jit,
-                                residency=self.residency)
+                                jit=jit, residency=self.residency)
             self._runners[key] = run
             return run
         run = self._runners.get(key)
         if run is None:
-            run = build_runner(self.plan, use_pallas=self.use_pallas,
-                               jit=jit, batch=batch,
+            run = build_runner(self.plan, jit=jit, batch=batch,
                                residency=self.residency)
             self._apply_swaps(run)
             self._runners[key] = run
@@ -242,12 +255,15 @@ class CompiledModel:
 
     def lint(self) -> str:
         """Trace-provenance report (which jaxpr equations produced each
-        layer) for traced models; explains itself otherwise."""
+        layer) for traced models, followed by the Step-4b kernel-choice
+        report (per-op realization, decision source, predicted/measured
+        cost)."""
+        from repro.core.passes import kernel_report
         from repro.frontend.lint import lint
-        if self.graph is None:
-            return (f"plan {self.plan.name!r}: compiled from an "
-                    f"ExecutionPlan — no layer graph to lint")
-        return lint(self.graph)
+        head = (f"plan {self.plan.name!r}: compiled from an "
+                f"ExecutionPlan — no layer graph to lint"
+                if self.graph is None else lint(self.graph))
+        return head + "\n\n" + kernel_report(self.plan)
 
     def stats(self) -> dict:
         """One dict over the whole lifecycle: plan shape, primitive mix,
@@ -264,6 +280,8 @@ class CompiledModel:
             "frontend": self.plan.meta.get("frontend"),
             "ops": len(self.plan.ops),
             "primitives": self.plan.primitive_counts(),
+            "kernels": self.plan.kernel_counts(),
+            "kernels_mode": self.plan.meta.get("kernels_mode"),
             "peak_live_bytes": self.plan.peak_live_bytes(),
             "param_bytes": plan_param_bytes(self.plan),
             "runners_built": len(self._runners),
@@ -290,7 +308,7 @@ class CompiledModel:
 
 def compile(model, example_inputs: Mapping[str, Any] | None = None, *,
             batch: int | None = None, options: CompileOptions | None = None,
-            use_pallas: bool = False, residency: bool = True,
+            use_pallas: bool | None = None, residency: bool = True,
             example_batched: bool | None = None, name: str | None = None,
             **option_overrides) -> CompiledModel:
     """Compile anything the pipeline can ingest into a ``CompiledModel``.
@@ -311,24 +329,33 @@ def compile(model, example_inputs: Mapping[str, Any] | None = None, *,
     (``False``) the stripping for ambiguous shapes.
 
     Compile options come either as ``options=CompileOptions(...)`` or as
-    keyword overrides (``gcv.compile(g, target="fpga")``).
+    keyword overrides (``gcv.compile(g, target="fpga")``).  Kernel
+    realization is ``kernels=`` ("auto" | "xla" | "pallas" | "measured",
+    a ``CompileOptions`` field, so it works both ways); the old global
+    ``use_pallas=`` flag is a deprecation shim mapping to
+    kernels="pallas"/"xla".
     """
-    opts = _resolve_options(options, option_overrides)
+    opts = _use_pallas_shim(_resolve_options(options, option_overrides),
+                            use_pallas)
     if isinstance(model, ExecutionPlan):
         assert example_inputs is None, \
             "an ExecutionPlan is already compiled; example_inputs are " \
             "only for tracing a callable"
+        if model.meta.get("kernels_mode") != opts.kernels:
+            # re-bind realizations in place: kernel selection is the only
+            # pass whose inputs (shapes/nnz) are already on the plan
+            from repro.core.passes import select_kernels
+            select_kernels(model, kernels=opts.kernels,
+                           autotune_cache=opts.autotune_cache)
         return CompiledModel(model, graph=None, options=opts,
-                             use_pallas=use_pallas, residency=residency,
-                             batch=batch)
+                             residency=residency, batch=batch)
     if isinstance(model, Graph):
         assert example_inputs is None, \
             "a layer Graph declares its own inputs; example_inputs are " \
             "only for tracing a callable"
         plan = cached_plan(model, opts)
         return CompiledModel(plan, graph=model, options=opts,
-                             use_pallas=use_pallas, residency=residency,
-                             batch=batch)
+                             residency=residency, batch=batch)
     assert callable(model), \
         f"cannot compile {type(model).__name__}: expected a JAX " \
         f"callable, a Graph, or an ExecutionPlan"
@@ -370,13 +397,12 @@ def compile(model, example_inputs: Mapping[str, Any] | None = None, *,
         name=name or getattr(model, "__name__", None) or "traced")
     plan = cached_plan(graph, opts)
     return CompiledModel(plan, graph=graph, options=opts,
-                         use_pallas=use_pallas, residency=residency,
-                         batch=batch)
+                         residency=residency, batch=batch)
 
 
 def serve(models: Mapping[str, Any], *,
           options: CompileOptions | None = None, max_batch: int = 8,
-          use_pallas: bool = False, jit: bool = True,
+          use_pallas: bool | None = None, jit: bool = True,
           pipeline_depth: int = 2, residency: bool = True, warmup=False,
           **option_overrides):
     """Build the micro-batching serving engine from models, not plumbing.
@@ -384,15 +410,17 @@ def serve(models: Mapping[str, Any], *,
     ``models`` maps task name -> anything ``gcv.compile`` accepts (a
     ``CompiledModel``, a layer ``Graph``, an ``ExecutionPlan``, or a
     ``(fn, example_inputs)`` pair for plain JAX callables).  Pre-compiled
-    models keep their own pallas/residency settings; everything else is
-    compiled with this call's.  ``warmup=True`` AOT-compiles every
-    (task, bucket) runner before returning — no live request ever traces.
+    models keep their own kernel/residency settings; everything else is
+    compiled with this call's (``kernels=`` picks the realization mode;
+    ``use_pallas=`` is the deprecated spelling).  ``warmup=True``
+    AOT-compiles every (task, bucket) runner before returning — no live
+    request ever traces.
     """
     from repro.serve.gnncv import GNNCVServeEngine
-    opts = _resolve_options(options, option_overrides)
+    opts = _use_pallas_shim(_resolve_options(options, option_overrides),
+                            use_pallas)
     eng = GNNCVServeEngine(dict(models), options=opts, max_batch=max_batch,
-                           use_pallas=use_pallas, jit=jit,
-                           pipeline_depth=pipeline_depth,
+                           jit=jit, pipeline_depth=pipeline_depth,
                            residency=residency)
     if warmup:
         eng.warmup()

@@ -65,25 +65,26 @@ class GNNCVServeEngine:
     layer ``Graph``, an ``ExecutionPlan``, or a ``(fn, example_inputs)``
     pair for plain JAX callables.  Everything not already compiled is run
     through ``gcv.compile`` with this engine's options; pre-compiled
-    models keep their own.  (``graphs=`` is the deprecated PR-4 spelling
-    of the same dict, kept as a shim for one PR.)
+    models keep their own.  Kernel realizations are per-op compile-time
+    plan state (``options.kernels``); ``use_pallas=`` survives one PR as
+    a deprecation shim mapping to kernels="pallas"/"xla".
     """
 
     def __init__(self, models=None, *,
                  options: CompileOptions = CompileOptions(),
-                 max_batch: int = 8, use_pallas: bool = False,
+                 max_batch: int = 8, use_pallas: bool | None = None,
                  jit: bool = True, pipeline_depth: int = 2,
-                 residency: bool = True, graphs=None):
+                 residency: bool = True):
         from repro import gcv                  # late: gcv builds engines
-        if graphs is not None:
+        if use_pallas is not None:
             warnings.warn(
-                "GNNCVServeEngine(graphs=...) is deprecated; pass the "
-                "dict as the first argument (or use gcv.serve), whose "
-                "values may be Graphs, CompiledModels, ExecutionPlans or "
-                "(fn, example_inputs) pairs", DeprecationWarning,
+                "GNNCVServeEngine(use_pallas=...) is deprecated; per-op "
+                "kernel selection replaced the global flag — pass "
+                "options=CompileOptions(kernels='pallas'/'xla') or keep "
+                "the default kernels='auto'", DeprecationWarning,
                 stacklevel=2)
-            assert models is None, "pass models or graphs, not both"
-            models = graphs
+            options = dataclasses.replace(
+                options, kernels="pallas" if use_pallas else "xla")
         assert models, "GNNCVServeEngine needs at least one model"
         self.options = options
         # power of two keeps _bucket's doubling landing on the cap and the
@@ -94,7 +95,6 @@ class GNNCVServeEngine:
         assert pipeline_depth >= 1, \
             f"pipeline_depth must be >= 1, got {pipeline_depth}"
         self.max_batch = max_batch
-        self.use_pallas = use_pallas
         self.jit = jit
         self.pipeline_depth = pipeline_depth
         self.residency = residency
@@ -111,7 +111,7 @@ class GNNCVServeEngine:
                     f"inputs — pass (fn, example_inputs) or a " \
                     f"pre-compiled model"
                 self.models[task] = gcv.compile(
-                    fn, example, options=options, use_pallas=use_pallas,
+                    fn, example, options=options,
                     residency=residency, name=task)
         self.plans = {t: m.plan for t, m in self.models.items()}
         # Back-compat view (pre-façade engines were keyed on raw graphs);

@@ -110,6 +110,14 @@ IDIOM_PROGRAMS = {
                       {"vip", "softmax", "mp"}),
     "adj_right_mp": (_stgcn_mp, _x3v, {"mp"}),
     "conv_batch1": (_conv_single, _x3, {"conv"}),
+    # rectangular windows/strides (kh != kw) land as (kh, kw) tuples on the
+    # pool layer; square pools keep the scalar spelling (golden stability)
+    "rect_pool_max": (lambda x: jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 3), (1, 1, 1, 2), "SAME"),
+        _x4, {"pool"}),
+    "rect_pool_avg": (lambda x: jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 1, 3, 2), (1, 1, 3, 2), "SAME") / 6.0,
+        _x4, {"pool"}),
 }
 
 

@@ -308,25 +308,42 @@ def test_serve_rejects_bare_callable_without_examples():
 
 
 # ------------------------------------------------- deprecation shims -------
-def test_compile_model_shim_warns_and_matches():
-    fn, example = _tiny_fn()
+def test_pre_facade_shims_are_gone():
+    """The one-PR shims ``frontend.compile_model`` and
+    ``GNNCVServeEngine(graphs=...)`` are deleted, not deprecated."""
     from repro import frontend
-    with pytest.warns(DeprecationWarning, match="gcv.compile"):
-        plan = frontend.compile_model(fn, example, OPTS)
-    model = gcv.compile(fn, example, options=OPTS)
-    assert [(o.kind, o.primitive) for o in plan.ops] == \
-        [(o.kind, o.primitive) for o in model.plan.ops]
-    x = np.random.default_rng(3).standard_normal((6, 8)).astype(np.float32)
-    np.testing.assert_array_equal(
-        np.asarray(build_runner(plan)(x=x)[0]),
-        np.asarray(model.run(x=x)[0]))
-
-
-def test_engine_graphs_kwarg_shim_warns_and_serves():
     from repro.serve import GNNCVServeEngine
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        eng = GNNCVServeEngine(graphs={"b6": _graph("b6")}, options=OPTS,
-                               max_batch=2)
+    assert not hasattr(frontend, "compile_model")
+    with pytest.raises(TypeError):
+        GNNCVServeEngine(graphs={"b6": _graph("b6")}, options=OPTS)
+
+
+def test_use_pallas_shim_warns_and_maps_to_kernel_mode():
+    """``use_pallas=`` survives one PR as a shim over per-op kernel
+    selection: it must warn and reproduce the forced kernels= modes."""
+    g = _graph("b6")
+    with pytest.warns(DeprecationWarning, match="kernel"):
+        shim_x = gcv.compile(g, options=OPTS, use_pallas=False)
+    with pytest.warns(DeprecationWarning, match="kernel"):
+        shim_p = gcv.compile(g, options=OPTS, use_pallas=True)
+    import dataclasses
+    forced_x = gcv.compile(
+        g, options=dataclasses.replace(OPTS, kernels="xla"))
+    forced_p = gcv.compile(
+        g, options=dataclasses.replace(OPTS, kernels="pallas"))
+    assert shim_x.plan.kernel_counts() == forced_x.plan.kernel_counts()
+    assert shim_p.plan.kernel_counts() == forced_p.plan.kernel_counts()
+    ins = random_inputs(shim_x.plan, seed=0)
+    for a, b in zip(shim_x.run(**ins), forced_x.run(**ins)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_use_pallas_shim_warns_and_serves():
+    from repro.serve import GNNCVServeEngine
+    with pytest.warns(DeprecationWarning, match="kernel"):
+        eng = GNNCVServeEngine({"b6": _graph("b6")}, options=OPTS,
+                               max_batch=2, use_pallas=False)
+    assert eng.options.kernels == "xla"
     req = eng.submit("b6", **random_inputs(eng.plans["b6"], seed=0))
     assert eng.run() == 1 and req.done
 

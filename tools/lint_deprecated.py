@@ -1,15 +1,19 @@
 """Lint gate: no new in-repo uses of the pre-façade entry points.
 
 ``repro.gcv`` is the public API; the old surfaces (direct
-``build_runner``/``cached_runner`` calls, ``frontend.compile_model``,
-hand-constructed ``GNNCVServeEngine``) survive one PR as shims or
+``build_runner``/``cached_runner`` calls, hand-constructed
+``GNNCVServeEngine``, the global ``use_pallas=`` flag that per-op kernel
+selection superseded) are either gone (``frontend.compile_model``,
+``GNNCVServeEngine(graphs=...)``) or survive one PR as shims and
 internals constructed *by* the façade.  This gate keeps them from
 creeping back into library code, examples, or benchmarks:
 
   * library code under ``src/repro`` may use them only inside the modules
-    that define or implement them (``core/``, ``gcv.py``, the shim in
-    ``frontend/__init__.py``, the engine module itself);
-  * ``examples/`` and ``benchmarks/`` must go through ``gcv``;
+    that define or implement them (``core/``, the ``kernels/`` seam whose
+    jitted entry points are parameterized on the realization, ``gcv.py``,
+    the engine module itself);
+  * ``examples/`` and ``benchmarks/`` must go through ``gcv`` and pick
+    kernels via ``CompileOptions(kernels=...)``;
   * ``tests/`` are exempt — they deliberately pin the legacy path for
     bit-for-bit parity and exercise the deprecation shims.
 
@@ -30,17 +34,20 @@ FORBIDDEN = [
     re.compile(r"\bcached_runner\s*\("),
     re.compile(r"\bcompile_model\s*\("),
     re.compile(r"\bGNNCVServeEngine\s*\("),
+    re.compile(r"\buse_pallas\s*="),     # superseded by kernels="auto"/...
 ]
 
 SCAN_DIRS = ("src/repro", "examples", "benchmarks")
 
 # modules that define, implement, or intentionally shim the entry points
 ALLOWED = {
-    "src/repro/gcv.py",                  # the façade itself
-    "src/repro/frontend/__init__.py",    # the deprecated compile_model shim
-    "src/repro/serve/gnncv.py",          # defines GNNCVServeEngine
+    "src/repro/gcv.py",                  # the façade + use_pallas shim
+    "src/repro/serve/gnncv.py",          # engine + its use_pallas shim
 }
-ALLOWED_PREFIXES = ("src/repro/core/",)  # the internals the façade drives
+ALLOWED_PREFIXES = (
+    "src/repro/core/",                   # the internals the façade drives
+    "src/repro/kernels/",                # jitted seam: realization is an arg
+)
 
 
 def offences(root: pathlib.Path = ROOT) -> list[str]:
