@@ -7,9 +7,8 @@ from __future__ import annotations
 import json
 import pathlib
 import platform
-import time
 
-from repro import gcv
+from repro import gcv, obs
 from repro.core import CompileOptions, compile_graph
 from repro.core.perf_model import FPGA
 
@@ -41,11 +40,11 @@ def measure_wall_ms(plan, iters: int = 3, kernels: str = "auto") -> float:
     model = gcv.compile(plan, options=CompileOptions(kernels=kernels))
     ins = model.random_inputs()
     out = model.run(**ins)                   # compile + warm
-    t0 = time.perf_counter()
+    t0 = obs.now()
     for _ in range(iters):
         out = model.run(**ins)
     _ = [o for o in (out if isinstance(out, (list, tuple)) else [out])]
-    return (time.perf_counter() - t0) / iters * 1e3
+    return (obs.now() - t0) / iters * 1e3
 
 
 def emit(rows, header):
@@ -69,13 +68,23 @@ def write_bench_json(name: str, payload: dict) -> pathlib.Path:
 
     The file lands in the current working directory (CI runs from the repo
     root and uploads ``BENCH_*.json`` as artifacts).  Host metadata is
-    attached so numbers from different machines are never compared blind.
+    attached so numbers from different machines are never compared blind —
+    including the jax backend and device kind, which dominate wall-clock
+    numbers far more than the CPU model does.
     """
+    import jax
     path = pathlib.Path(f"BENCH_{name}.json")
+    try:
+        device_kind = jax.devices()[0].device_kind
+    except Exception:            # no devices visible (headless CI quirk)
+        device_kind = None
     record = {"bench": name,
               "host": {"machine": platform.machine(),
                        "python": platform.python_version(),
-                       "system": platform.system()},
+                       "system": platform.system(),
+                       "jax": jax.__version__,
+                       "backend": jax.default_backend(),
+                       "device_kind": device_kind},
               **payload}
     path.write_text(json.dumps(record, indent=2, sort_keys=True) + "\n")
     print(f"wrote {path}")

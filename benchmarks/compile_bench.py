@@ -35,15 +35,18 @@ Four phases per (task, frontend):
 Regressions in the trace/canonicalize path show up as build_ms drift
 against this trajectory without touching steady-state numbers; every run
 also writes the machine-readable ``BENCH_compile.json`` record CI uploads.
+The record includes ``cost_model_agreement`` — Step-4b's analytic
+predictions validated against per-op stopwatch measurements on b1 and b6
+(``obs.profile_report``) — and the run emits a ``TRACE_compile.json``
+Chrome-trace artifact covering one fully-traced compile per task.
 """
 from __future__ import annotations
 
 import argparse
 import math
-import time
 
 from benchmarks.common import emit, write_bench_json
-from repro import gcv
+from repro import gcv, obs
 from repro.core import CompileOptions
 from repro.core.runtime.cache import clear_caches
 from repro.core.runtime.residency import collect_params
@@ -53,15 +56,19 @@ from repro.gnncv.tasks import build_task
 TASKS = ("b1", "b2", "b3-r50", "b4", "b5", "b6")
 TRACED_ONLY = ("b7",)                 # ViG exists only through the tracer
 OPTS = CompileOptions(target="fpga")
+# Tasks whose plans get the per-op predicted-vs-measured treatment: one
+# dense-dominated CNN pipeline and one sparse message-passing workload —
+# the two cost-model regimes.
+AGREEMENT_TASKS = ("b1", "b6")
 
 
 def _time_ms(fn, iters: int):
     best = float("inf")
     result = None
     for _ in range(iters):
-        t0 = time.perf_counter()
+        t0 = obs.now()
         result = fn()
-        best = min(best, (time.perf_counter() - t0) * 1e3)
+        best = min(best, (obs.now() - t0) * 1e3)
     return best, result
 
 
@@ -90,16 +97,38 @@ def bench(task: str, use_tracer: bool, *, small: bool, iters: int,
         return (build_ms, compile_ms, upload_ms, float("nan"),
                 len(plan.ops), params, plan)
     ins = model.random_inputs(seed=0)
-    t0 = time.perf_counter()
+    t0 = obs.now()
     out = model.run(**ins)
     _ = [o.block_until_ready() for o in out]
-    first_ms = (time.perf_counter() - t0) * 1e3
+    first_ms = (obs.now() - t0) * 1e3
     return (build_ms, compile_ms, upload_ms, first_ms, len(plan.ops),
             params, plan)
 
 
+def cost_model_agreement(options: CompileOptions, *, small: bool,
+                         tasks=AGREEMENT_TASKS, repeats: int = 2) -> dict:
+    """Predicted-vs-measured validation of the Step-4b cost model on the
+    agreement tasks: per-op stopwatch profile, rival-kernel
+    micro-benchmarks, and the pooled agreement rate over every op where
+    the analytic model actually had a choice to make."""
+    per_task, agree, considered = {}, 0, 0
+    for task in tasks:
+        plan = gcv.compile(build_task(task, small=small),
+                           options=options).plan
+        rep = obs.profile_report(plan, repeats=repeats)
+        per_task[task] = rep["agreement"]
+        agree += rep["agreement"]["agree"]
+        considered += rep["agreement"]["considered"]
+        print(rep["text"])
+        print()
+    return {"per_task": per_task, "agree": agree,
+            "considered": considered,
+            "rate": agree / considered if considered else None}
+
+
 def run(small: bool = True, iters: int = 3, first_run: bool = True,
-        kernels: str = "auto", tasks=None):
+        kernels: str = "auto", tasks=None, trace="TRACE_compile.json",
+        agreement: bool = True):
     import dataclasses
     options = dataclasses.replace(OPTS, kernels=kernels)
     rows, records = [], []
@@ -130,9 +159,23 @@ def run(small: bool = True, iters: int = 3, first_run: bool = True,
                         "autotune": plan.meta.get("autotune")})
     emit(rows, ["task", "frontend", "ops", "build_ms", "compile_ms",
                 "upload_ms", "first_run_ms", "total_ms"])
+    cma = None
+    if agreement:
+        cma = cost_model_agreement(options, small=small,
+                                   repeats=max(1, min(iters, 3)))
+    if trace:
+        # one fully-traced compile per swept task: clear the plan cache so
+        # the six passes re-run inside the tracer, then export the
+        # Chrome-trace artifact CI uploads next to BENCH_compile.json
+        with gcv.trace_to(trace):
+            clear_caches()
+            for task, use_tracer in sweep:
+                builder = build_traced_task if use_tracer else build_task
+                gcv.compile(builder(task, small=small), options=options)
     write_bench_json("compile", {"small": small, "iters": iters,
                                  "first_run": first_run,
-                                 "kernels": kernels, "tasks": records})
+                                 "kernels": kernels, "tasks": records,
+                                 "cost_model_agreement": cma})
     return rows
 
 
@@ -149,11 +192,16 @@ if __name__ == "__main__":
                     help="Step-4b kernel selection mode")
     ap.add_argument("--tasks", default=None,
                     help="comma-separated task subset (e.g. b1,b6)")
+    ap.add_argument("--trace", default="TRACE_compile.json",
+                    help="Chrome-trace artifact path ('' to disable)")
+    ap.add_argument("--no-agreement", dest="agreement",
+                    action="store_false", default=True,
+                    help="skip the predicted-vs-measured profile pass")
     args = ap.parse_args()
     task_filter = args.tasks.split(",") if args.tasks else None
     if args.quick:
         run(small=True, iters=1, first_run=False, kernels=args.kernels,
-            tasks=task_filter)
+            tasks=task_filter, trace=args.trace, agreement=args.agreement)
     else:
         run(small=args.small, iters=args.iters, kernels=args.kernels,
-            tasks=task_filter)
+            tasks=task_filter, trace=args.trace, agreement=args.agreement)

@@ -22,7 +22,12 @@ steady-state serving.  The run asserts ``runner_misses`` stays frozen
 during pipelined traffic (no live request ever compiles) and writes the
 machine-readable ``BENCH_serve_gnncv.json`` perf record (p50/p95 request
 sojourn, req/s per mode, per-task residency footprint — including the b7
-ViG baseline the paper has no latency target for).
+ViG baseline the paper has no latency target for).  A final *traced* pass
+re-runs compile -> warmup -> serving under the tracer and emits
+``TRACE_serve_gnncv.json`` (Chrome/Perfetto trace-event JSON: compiler
+passes, per-(task, bucket) warmups, per-batch dispatch/harvest, one span
+per request) — traced outside the timed passes, so telemetry cost never
+touches the reported numbers.
 
     PYTHONPATH=src python -m benchmarks.serve_gnncv [--requests N]
                                                     [--max-batch B]
@@ -36,12 +41,11 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro import gcv
+from repro import gcv, obs
 from repro.core import CompileOptions
 from repro.core.runtime.residency import plan_param_bytes
 from repro.gnncv.jax_tasks import build_traced_task
@@ -80,12 +84,12 @@ class PR3BaselineEngine(GNNCVServeEngine):
     def harvest(self) -> int:
         if not self._inflight:
             return 0
-        reqs, outs = self._inflight.popleft()
+        reqs, outs, _ = self._inflight.popleft()
         for i, req in enumerate(reqs):
             req.result = tuple(np.asarray(o[i]) for o in outs)
             req.done = True
-            req.t_done = time.perf_counter()
-        self.completed += len(reqs)
+            req.t_done = obs.now()
+        self._c_completed.inc(len(reqs))
         return len(reqs)
 
 
@@ -95,13 +99,13 @@ def bench_one_at_a_time(graphs, options, stream, repeats):
         models[task].run(**inputs)
     best, best_lats = float("inf"), []
     for _ in range(repeats):
-        t0 = time.perf_counter()
+        t0 = obs.now()
         lats = []
         for task, inputs in stream:
             # materialize each response, like a server answering a request
             _ = [np.asarray(o) for o in models[task].run(**inputs)]
-            lats.append(time.perf_counter() - t0)
-        dt = time.perf_counter() - t0
+            lats.append(obs.now() - t0)
+        dt = obs.now() - t0
         if dt < best:
             best, best_lats = dt, lats
     return best, best_lats
@@ -133,9 +137,9 @@ def bench_engine(graphs, options, stream, max_batch, *, pipelined: bool,
     for _ in range(repeats):
         steps_before = eng.steps
         reqs = [eng.submit(task, **inputs) for task, inputs in stream]
-        t0 = time.perf_counter()
+        t0 = obs.now()
         served = eng.run()
-        dt = time.perf_counter() - t0
+        dt = obs.now() - t0
         assert served == len(stream)
         if dt < best:
             best = dt
@@ -168,9 +172,9 @@ def bench_kernel_modes(graphs, options, stream, max_batch, repeats):
         for mode, eng in engines.items():
             steps_before = eng.steps
             reqs = [eng.submit(task, **inputs) for task, inputs in stream]
-            t0 = time.perf_counter()
+            t0 = obs.now()
             served = eng.run()
-            dt = time.perf_counter() - t0
+            dt = obs.now() - t0
             assert served == len(stream)
             if dt < best[mode][0]:
                 best[mode] = (dt, [r.t_done - t0 for r in reqs],
@@ -189,7 +193,28 @@ def mode_record(name, wall_s, lats, n, extra=None):
             **(extra or {})}
 
 
-def run(requests: int = 96, max_batch: int = 8, repeats: int = 5):
+def trace_pass(graphs, options, stream, max_batch, path):
+    """One fully-traced serve lifecycle, emitted as a Chrome-trace
+    artifact: compile (telemetry options force a fresh plan-cache entry,
+    so all six passes run inside the tracer), AOT warmup of every (task,
+    bucket), then a short request stream with per-batch dispatch/harvest
+    and per-request spans.  Runs after the timed passes — the reported
+    numbers never include tracer overhead."""
+    opts = dataclasses.replace(options, telemetry=True)
+    with gcv.trace_to(path):
+        eng = gcv.serve(graphs, pipeline_depth=2, residency=True,
+                        options=opts, max_batch=max_batch, warmup=True)
+        for task, inputs in stream:
+            eng.submit(task, **inputs)
+        eng.run()
+    s = eng.stats()
+    print(f"traced pass: {s['completed']} requests, "
+          f"p50 {s['p50_sojourn_ms']:.2f} ms, "
+          f"p95 {s['p95_sojourn_ms']:.2f} ms -> {path}")
+
+
+def run(requests: int = 96, max_batch: int = 8, repeats: int = 5,
+        trace: str = "TRACE_serve_gnncv.json"):
     options = CompileOptions(target="fpga")
     all_graphs = {t: build_task(t, small=True) for t in sorted(SMALL_CONFIGS)}
     graphs = {t: all_graphs[t] for t in BUILDER_MIX}
@@ -258,6 +283,9 @@ def run(requests: int = 96, max_batch: int = 8, repeats: int = 5):
     auto_vs_xla = (requests / pipe_s) / (requests / xla_s)
     print(f"pipelined+residency vs PR-3 baseline: {speedup:.2f}x req/s")
     print(f"kernels=auto vs all-XLA pipelined:    {auto_vs_xla:.2f}x req/s")
+    if trace:
+        trace_pass(graphs, options, stream[:min(len(stream), 2 * len(MIX))],
+                   max_batch, trace)
     write_bench_json("serve_gnncv", {
         "requests": requests, "max_batch": max_batch,
         "repeats": repeats, "mix": list(MIX),
@@ -281,12 +309,14 @@ def main():
                     help="timed passes per mode; best is reported")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: small stream, small buckets")
+    ap.add_argument("--trace", default="TRACE_serve_gnncv.json",
+                    help="Chrome-trace artifact path ('' to disable)")
     args = ap.parse_args()
     if args.quick:
-        run(requests=24, max_batch=2, repeats=2)
+        run(requests=24, max_batch=2, repeats=2, trace=args.trace)
     else:
         run(requests=args.requests, max_batch=args.max_batch,
-            repeats=args.repeats)
+            repeats=args.repeats, trace=args.trace)
 
 
 if __name__ == "__main__":

@@ -7,11 +7,18 @@ binary the APU executes. ``CompileOptions`` exposes exactly the knobs the
 paper ablates (§VII-C): layer fusion, DM fusion, sparsity-aware mapping,
 plus the cost target ('tpu' here / 'fpga' for reproducing the paper's
 numbers).
+
+Every pass entry point opens an ``obs`` span (layer/op counts as
+attributes), so a compile inside ``gcv.trace_to(path)`` — or with
+``CompileOptions(telemetry=True)`` — lands in the exported Chrome trace
+as one nested region per pass.  Tracing is off by default and costs one
+attribute read per pass when disabled.
 """
 from __future__ import annotations
 
 import dataclasses
 
+from repro import obs
 from repro.core.ir import Graph
 from repro.core.passes import (annotate_liveness, assign_tiles, fuse_layers,
                                lower_to_matops, schedule_plan, select_kernels,
@@ -33,21 +40,30 @@ class CompileOptions:
     # JSON cache path for kernels='measured'; None = $REPRO_AUTOTUNE_CACHE
     # or .autotune_cache.json in the cwd
     autotune_cache: str | None = None
+    # Record obs spans for this compile even outside a gcv.trace_to block
+    # (the spans land in the process tracer; export them with
+    # obs.export_chrome_trace).  Tracing never changes the compiled plan.
+    telemetry: bool = False
 
 
 def compile_graph(g: Graph,
                   options: CompileOptions = CompileOptions()
                   ) -> ExecutionPlan:
-    fused = fuse_layers(g, enable=options.fuse,
-                        dm_fusion=options.fuse and options.dm_fusion)
-    plan = lower_to_matops(fused)                       # Step 2
-    plan = assign_tiles(plan, target=options.target,    # Step 3
-                        vmem_budget_bytes=options.vmem_budget_bytes)
-    plan = select_primitives(plan, target=options.target,   # Step 4
-                             enable=options.sparsity_aware)
-    plan = select_kernels(plan, kernels=options.kernels,    # Step 4b
-                          autotune_cache=options.autotune_cache)
-    plan = schedule_plan(plan)                          # Step 5
-    plan = annotate_liveness(plan)                      # Step 6
+    with obs.telemetry(options.telemetry), \
+            obs.span("compile", cat="compile", graph=g.name,
+                     layers=len(g.layers),
+                     frontend=g.meta.get("frontend")) as sp:
+        fused = fuse_layers(g, enable=options.fuse,
+                            dm_fusion=options.fuse and options.dm_fusion)
+        plan = lower_to_matops(fused)                       # Step 2
+        plan = assign_tiles(plan, target=options.target,    # Step 3
+                            vmem_budget_bytes=options.vmem_budget_bytes)
+        plan = select_primitives(plan, target=options.target,   # Step 4
+                                 enable=options.sparsity_aware)
+        plan = select_kernels(plan, kernels=options.kernels,    # Step 4b
+                              autotune_cache=options.autotune_cache)
+        plan = schedule_plan(plan)                          # Step 5
+        plan = annotate_liveness(plan)                      # Step 6
+        sp.set(ops=len(plan.ops))
     plan.meta["options"] = dataclasses.asdict(options)
     return plan

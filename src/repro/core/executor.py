@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.plan import ExecutionPlan
 from repro.core.runtime import run_op
 from repro.core.runtime.context import batched_execution
@@ -109,8 +110,12 @@ def build_runner(plan: ExecutionPlan, *, use_pallas: bool = False,
     # host references instead (the trace embeds values either way) and
     # refuse hot-swaps, which could only return stale results there.
     bakes_constants = jit and not weights_as_args
-    resident = collect_params(plan, device=not bakes_constants) \
-        if residency else None
+    with obs.span("build_runner", cat="runtime", plan=plan.name,
+                  batch=batch, jit=bool(jit), residency=residency) as sp:
+        resident = collect_params(plan, device=not bakes_constants) \
+            if residency else None
+        if resident is not None:
+            sp.set(resident_bytes=resident.nbytes())
     if resident is not None and bakes_constants:
         resident.trace_constants = True
     traces = {"n": 0}
@@ -172,22 +177,25 @@ def build_runner(plan: ExecutionPlan, *, use_pallas: bool = False,
         the cost of a second XLA compile of the same program."""
         if not jit:
             return None
-        arrays = resident.arrays if resident is not None else {}
-        if aot["primed"] is None:
-            spec = input_specs()
-            zeros = {n: jnp.zeros(s.shape, s.dtype)
-                     for n, s in spec.items()}
-            warm = staged(arrays, zeros) if weights_as_args \
-                else staged(zeros)
-            for o in warm:
-                o.block_until_ready()
-            aot["primed"] = staged
-        if explicit and aot["exe"] is None:
-            spec = input_specs()
-            aot["exe"] = (staged.lower(arrays, spec).compile()
-                          if weights_as_args
-                          else staged.lower(spec).compile())
-        return aot["exe"] if explicit else aot["primed"]
+        with obs.span("aot_compile", cat="runtime", plan=plan.name,
+                      batch=batch, explicit=explicit,
+                      cached=aot["primed"] is not None):
+            arrays = resident.arrays if resident is not None else {}
+            if aot["primed"] is None:
+                spec = input_specs()
+                zeros = {n: jnp.zeros(s.shape, s.dtype)
+                         for n, s in spec.items()}
+                warm = staged(arrays, zeros) if weights_as_args \
+                    else staged(zeros)
+                for o in warm:
+                    o.block_until_ready()
+                aot["primed"] = staged
+            if explicit and aot["exe"] is None:
+                spec = input_specs()
+                aot["exe"] = (staged.lower(arrays, spec).compile()
+                              if weights_as_args
+                              else staged.lower(spec).compile())
+            return aot["exe"] if explicit else aot["primed"]
 
     def run(**inputs):
         env = {k: jnp.asarray(v) for k, v in inputs.items()}

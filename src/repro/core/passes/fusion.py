@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.core.ir import Graph, Layer
 
 _COMPUTE = {"conv", "linear", "mp"}
@@ -63,6 +64,15 @@ def fuse_layers(g: Graph, *, enable: bool = True,
                 dm_fusion: bool = True) -> Graph:
     """Returns a new graph with fused/eliminated layers. ``enable=False``
     keeps every layer standalone (the §VII-C ablation baseline)."""
+    with obs.span("pass.fusion", cat="compile", graph=g.name,
+                  layers_in=len(g.layers), enable=enable,
+                  dm_fusion=dm_fusion) as sp:
+        out = _fuse_layers(g, enable=enable, dm_fusion=dm_fusion)
+        sp.set(layers_out=len(out.layers))
+        return out
+
+
+def _fuse_layers(g: Graph, *, enable: bool, dm_fusion: bool) -> Graph:
     g = _light_copy(g)
     if not enable:
         return g

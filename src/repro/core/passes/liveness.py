@@ -14,6 +14,7 @@ consumer and is not an output is dead on arrival and freed immediately.
 """
 from __future__ import annotations
 
+from repro import obs
 from repro.core.plan import ExecutionPlan, MatOp
 
 
@@ -27,6 +28,12 @@ def op_uses(op: MatOp) -> tuple[str, ...]:
 
 
 def annotate_liveness(plan: ExecutionPlan) -> ExecutionPlan:
+    with obs.span("pass.liveness", cat="compile", plan=plan.name,
+                  ops=len(plan.ops)):
+        return _annotate_liveness(plan)
+
+
+def _annotate_liveness(plan: ExecutionPlan) -> ExecutionPlan:
     last_use: dict[str, int] = {}
     for i, op in enumerate(plan.ops):
         for name in op_uses(op):

@@ -22,6 +22,7 @@ import math
 
 import numpy as np
 
+from repro import obs
 from repro.core.ir import Graph
 from repro.core.plan import ExecutionPlan, MatOp
 
@@ -38,6 +39,14 @@ def _act_attrs(p: dict) -> dict:
 
 
 def lower_to_matops(g: Graph) -> ExecutionPlan:
+    with obs.span("pass.lower", cat="compile", graph=g.name,
+                  layers=len(g.layers)) as sp:
+        plan = _lower_to_matops(g)
+        sp.set(ops=len(plan.ops))
+        return plan
+
+
+def _lower_to_matops(g: Graph) -> ExecutionPlan:
     shapes: dict[str, tuple[int, ...]] = {}
     ops: list[MatOp] = []
     inputs: list[str] = []

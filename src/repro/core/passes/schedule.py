@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.core.perf_model import FPGA
 from repro.core.plan import ExecutionPlan, MatOp
 
@@ -71,6 +72,12 @@ def _op_cost(op: MatOp) -> tuple[float, float, float]:
 
 
 def schedule_plan(plan: ExecutionPlan) -> ExecutionPlan:
+    with obs.span("pass.schedule", cat="compile", plan=plan.name,
+                  ops=len(plan.ops)):
+        return _schedule_plan(plan)
+
+
+def _schedule_plan(plan: ExecutionPlan) -> ExecutionPlan:
     total_cycles = total_flops = total_bytes = 0.0
     weight_bytes = 0
     for op in plan.ops:

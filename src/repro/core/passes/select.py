@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.core.perf_model import predict_kernel_seconds, select_primitive
 from repro.core.plan import ELL_KERNELS, ExecutionPlan, MatOp
 from repro.kernels.spdmm import dense_to_ell
@@ -47,6 +48,15 @@ KERNEL_MODES = ("auto", "xla", "pallas", "measured")
 
 def select_primitives(plan: ExecutionPlan, *, target: str = "tpu",
                       enable: bool = True) -> ExecutionPlan:
+    with obs.span("pass.select", cat="compile", plan=plan.name,
+                  ops=len(plan.ops), target=target, enable=enable) as sp:
+        plan = _select_primitives(plan, target=target, enable=enable)
+        sp.set(sparse_ops=plan.meta["sparse_ops"])
+        return plan
+
+
+def _select_primitives(plan: ExecutionPlan, *, target: str,
+                       enable: bool) -> ExecutionPlan:
     n_sparse = 0
     for op in plan.ops:
         if op.kind == "conv":
@@ -164,6 +174,15 @@ def select_kernels(plan: ExecutionPlan, *, kernels: str = "auto",
     """
     assert kernels in KERNEL_MODES, \
         f"kernels must be one of {KERNEL_MODES}, got {kernels!r}"
+    with obs.span("pass.select_kernels", cat="compile", plan=plan.name,
+                  ops=len(plan.ops), mode=kernels):
+        return _select_kernels(plan, kernels=kernels,
+                               autotune_cache=autotune_cache,
+                               backend=backend)
+
+
+def _select_kernels(plan: ExecutionPlan, *, kernels: str,
+                    autotune_cache, backend: str | None) -> ExecutionPlan:
     if backend is None:
         import jax
         backend = jax.default_backend()

@@ -10,6 +10,7 @@ one accumulator block) fits the target's fast memory:
 """
 from __future__ import annotations
 
+from repro import obs
 from repro.core.plan import ExecutionPlan
 
 
@@ -36,6 +37,14 @@ def _fit_tiles(s1: int, s2: int, s3: int, *, quantum: int, budget_elems: int,
 
 def assign_tiles(plan: ExecutionPlan, *, target: str = "tpu",
                  vmem_budget_bytes: int = 8 * 2**20) -> ExecutionPlan:
+    with obs.span("pass.tiling", cat="compile", plan=plan.name,
+                  ops=len(plan.ops), target=target):
+        return _assign_tiles(plan, target=target,
+                             vmem_budget_bytes=vmem_budget_bytes)
+
+
+def _assign_tiles(plan: ExecutionPlan, *, target: str,
+                  vmem_budget_bytes: int) -> ExecutionPlan:
     quantum = 128 if target == "tpu" else 16
     start = 512 if target == "tpu" else 256
     budget = vmem_budget_bytes // 4          # fp32 accumulation elements

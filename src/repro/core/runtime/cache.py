@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import weakref
 
+from repro import obs
 from repro.core.compiler import CompileOptions, compile_graph
 from repro.core.ir import Graph
 from repro.core.plan import ExecutionPlan
@@ -19,10 +20,15 @@ _RUNNERS: "weakref.WeakKeyDictionary[Graph, dict]" = \
     weakref.WeakKeyDictionary()
 # Hit/miss counters: sizes alone say nothing about cache *effectiveness* in
 # a serving process (a cache of 5 runners serving 99% hits looks identical
-# to one serving 5% hits).  Counters survive ``clear_caches`` resets only
-# via explicit re-zeroing there, so tests can scope them.
-_STATS = {"plan_hits": 0, "plan_misses": 0,
-          "runner_hits": 0, "runner_misses": 0}
+# to one serving 5% hits).  The counters live in the process-global obs
+# metrics registry (the cache is process-global state), prefixed "cache.";
+# they survive ``clear_caches`` resets only via explicit re-zeroing there,
+# so tests can scope them.
+_STAT_KEYS = ("plan_hits", "plan_misses", "runner_hits", "runner_misses")
+
+
+def _stat(name: str) -> obs.Counter:
+    return obs.metrics().counter(f"cache.{name}")
 
 
 def cached_plan(graph: Graph,
@@ -30,10 +36,10 @@ def cached_plan(graph: Graph,
     """Compile ``graph`` once per distinct ``options``."""
     per_graph = _PLANS.setdefault(graph, {})
     if options not in per_graph:
-        _STATS["plan_misses"] += 1
+        _stat("plan_misses").inc()
         per_graph[options] = compile_graph(graph, options)
     else:
-        _STATS["plan_hits"] += 1
+        _stat("plan_hits").inc()
     return per_graph[options]
 
 
@@ -60,26 +66,26 @@ def cached_runner(graph: Graph,
     key = (options, batch, jit, free_dead, residency)
     per_graph = _RUNNERS.setdefault(graph, {})
     if key not in per_graph:
-        _STATS["runner_misses"] += 1
+        _stat("runner_misses").inc()
         per_graph[key] = build_runner(
             cached_plan(graph, options), jit=jit,
             batch=batch, free_dead=free_dead, residency=residency)
     else:
-        _STATS["runner_hits"] += 1
+        _stat("runner_hits").inc()
     return per_graph[key]
 
 
 def cache_stats() -> dict[str, int]:
     """Sizes *and* effectiveness counters (hits/misses since the last
-    ``clear_caches``)."""
+    ``clear_caches``), read from the process-global obs metrics
+    registry."""
     return {"graphs": len(_PLANS),
             "plans": sum(len(v) for v in _PLANS.values()),
             "runners": sum(len(v) for v in _RUNNERS.values()),
-            **_STATS}
+            **{k: _stat(k).value for k in _STAT_KEYS}}
 
 
 def clear_caches() -> None:
     _PLANS.clear()
     _RUNNERS.clear()
-    for k in _STATS:
-        _STATS[k] = 0
+    obs.metrics().reset("cache.")

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.plan import ELL_KERNELS, ExecutionPlan, MatOp
 
 
@@ -203,6 +204,15 @@ def collect_params(plan: ExecutionPlan, *,
     values as trace constants anyway, where uploading would hold a second,
     never-read device copy of every parameter.
     """
+    with obs.span("residency.upload", cat="runtime", plan=plan.name,
+                  device=device) as sp:
+        res = _collect_params(plan, device=device)
+        sp.set(bytes=res.nbytes(), slots=len(res.slots),
+               value_dedup_bytes=res.value_dedup_bytes)
+        return res
+
+
+def _collect_params(plan: ExecutionPlan, *, device: bool) -> ResidentParams:
     arrays: dict[str, jax.Array] = {}
     slots: dict[tuple[str, str], str] = {}
     origins: dict[tuple[str, str], int] = {}

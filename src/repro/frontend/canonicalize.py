@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.core.ir import Graph, Layer
 # The runtime's default leaky_relu slope.  A traced pattern whose slope
 # differs carries it as an 'alpha' attr, which Step-1 act fusion and
@@ -625,6 +626,14 @@ def _emit(tg: TraceGraph) -> Graph:
 
 def canonicalize(tg: TraceGraph) -> Graph:
     """Rewrite a ``TraceGraph`` into a compilable layer ``Graph``."""
+    with obs.span("frontend.canonicalize", cat="compile", model=tg.name,
+                  nodes_in=len(tg.nodes)) as sp:
+        g = _canonicalize(tg)
+        sp.set(layers_out=len(g.layers))
+        return g
+
+
+def _canonicalize(tg: TraceGraph) -> Graph:
     rw = _Rewriter(tg)
     rw.drop_reduce_guards()
     rw.fold_conv_batch1()

@@ -30,6 +30,8 @@ from typing import Any, Mapping
 import jax
 import numpy as np
 
+from repro import obs
+
 try:                                        # jax >= 0.4.34
     from jax.extend.core import ClosedJaxpr, Literal
 except ImportError:                         # pragma: no cover - older jax
@@ -496,6 +498,15 @@ def trace_model(fn, example_inputs: Mapping[str, Any], *,
     weights.  Returns the proto graph; ``frontend.canonicalize`` turns it
     into a compilable ``Graph``.
     """
+    with obs.span("frontend.trace", cat="compile", model=name,
+                  inputs=len(example_inputs)) as sp:
+        tg = _trace_model(fn, example_inputs, name=name)
+        sp.set(nodes=len(tg.nodes))
+        return tg
+
+
+def _trace_model(fn, example_inputs: Mapping[str, Any], *,
+                 name: str) -> TraceGraph:
     names = list(example_inputs)
     specs = [jax.ShapeDtypeStruct(np.shape(v), np.asarray(v).dtype)
              if not isinstance(v, jax.ShapeDtypeStruct) else v

@@ -36,13 +36,14 @@ the batch size).
 """
 from __future__ import annotations
 
-import dataclasses
+import contextlib
 from typing import Any, Callable, Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.compiler import CompileOptions
 from repro.core.executor import build_runner, random_inputs, stack_inputs
 from repro.core.ir import Graph
@@ -51,7 +52,7 @@ from repro.core.runtime.cache import cached_plan, cached_runner
 from repro.core.runtime.residency import (collect_params, plan_param_bytes,
                                           plan_slots)
 
-__all__ = ["CompiledModel", "compile", "serve", "stack_inputs"]
+__all__ = ["CompiledModel", "compile", "serve", "stack_inputs", "trace_to"]
 
 
 def _resolve_options(options, overrides) -> CompileOptions:
@@ -63,19 +64,34 @@ def _resolve_options(options, overrides) -> CompileOptions:
     return options
 
 
-def _use_pallas_shim(opts: CompileOptions,
-                     use_pallas: bool | None) -> CompileOptions:
-    """Deprecation shim (one PR): the global flag becomes a kernel mode."""
-    if use_pallas is None:
-        return opts
-    import warnings
-    warnings.warn(
-        "use_pallas= is deprecated; per-op kernel selection replaced the "
-        "global flag — pass kernels='pallas' / kernels='xla' (or keep the "
-        "default kernels='auto' and let the cost model decide per op)",
-        DeprecationWarning, stacklevel=3)
-    return dataclasses.replace(
-        opts, kernels="pallas" if use_pallas else "xla")
+@contextlib.contextmanager
+def trace_to(path: str):
+    """Record every span inside the block and write a Chrome/Perfetto
+    trace-event JSON file on exit:
+
+        with gcv.trace_to("trace.json"):
+            model = gcv.compile(task, telemetry=True)
+            model.warmup(batches=[1, 8])
+            model.run(**model.random_inputs())
+
+    The file opens in ``chrome://tracing`` / https://ui.perfetto.dev and
+    shows the compile passes, residency uploads, AOT warmups, and (for a
+    serving engine driven inside the block) per-batch dispatch/harvest
+    plus one span per request.  The tracer starts from a clean buffer and
+    is disabled again on exit, so the block is self-contained; compiles
+    that should re-run their passes inside the block (rather than hit the
+    plan cache) want ``telemetry=True``, which is also a distinct
+    plan-cache key.  The file is written even when the block raises —
+    partial traces are exactly what you want when debugging the failure.
+    """
+    tracer = obs.get_tracer()
+    obs.clear()
+    tracer.enable()
+    try:
+        yield tracer
+    finally:
+        tracer.disable()
+        tracer.export_chrome_trace(path)
 
 
 def _example_shapes(example_inputs: Mapping[str, Any]) -> dict[str, tuple]:
@@ -265,10 +281,37 @@ class CompiledModel:
                 if self.graph is None else lint(self.graph))
         return head + "\n\n" + kernel_report(self.plan)
 
+    # ----------------------------------------------------------- profiling
+    def profile(self, inputs: Mapping[str, Any] | None = None, *,
+                repeats: int = 3) -> dict:
+        """Measured wall-clock seconds per MatOp (``op_name -> row``).
+
+        Executes the plan op by op with ``jax.block_until_ready`` between
+        ops — real per-op costs, not async dispatch latencies — best of
+        ``repeats`` after a warmup pass.  Each row carries the op's
+        Step-4b kernel binding and, where the cost model scored it, the
+        analytic prediction (``plan.meta['kernel_choices']``), so measured
+        and predicted line up per op.  ``inputs=None`` profiles on random
+        inputs matching the plan's recorded shapes."""
+        return obs.profile_plan(self.plan, inputs, repeats=repeats)
+
+    def profile_report(self, inputs: Mapping[str, Any] | None = None, *,
+                       repeats: int = 3) -> dict:
+        """``profile()`` plus the predicted-vs-measured verdict: per-op
+        rows with both costs, and the **cost-model agreement rate** — on
+        ops where Step 4b had multiple candidates, how often the analytic
+        argmin matches the measured argmin (``agreement.rate`` is None
+        when no op had competing candidates).  ``result['text']`` is the
+        rendered table."""
+        return obs.profile_report(self.plan, inputs, repeats=repeats)
+
     def stats(self) -> dict:
         """One dict over the whole lifecycle: plan shape, primitive mix,
         memory planning, residency footprint (incl. bytes folded by
-        value-based dedup), and runner/trace state."""
+        value-based dedup), runner/trace state, and the process
+        plan/runner cache effectiveness counters (hits/misses from the
+        ``obs.metrics()`` registry)."""
+        from repro.core.runtime.cache import cache_stats
         resident = next((r.resident for r in self._runners.values()
                          if r.resident is not None), None)
         if resident is None and self.residency:
@@ -291,6 +334,7 @@ class CompiledModel:
         if resident is not None:
             out["resident_bytes"] = resident.nbytes()
             out["value_deduped_bytes"] = resident.value_dedup_bytes
+        out["cache"] = cache_stats()
         return out
 
     def random_inputs(self, seed: int = 0, *,
@@ -308,7 +352,7 @@ class CompiledModel:
 
 def compile(model, example_inputs: Mapping[str, Any] | None = None, *,
             batch: int | None = None, options: CompileOptions | None = None,
-            use_pallas: bool | None = None, residency: bool = True,
+            residency: bool = True,
             example_batched: bool | None = None, name: str | None = None,
             **option_overrides) -> CompiledModel:
     """Compile anything the pipeline can ingest into a ``CompiledModel``.
@@ -331,12 +375,12 @@ def compile(model, example_inputs: Mapping[str, Any] | None = None, *,
     Compile options come either as ``options=CompileOptions(...)`` or as
     keyword overrides (``gcv.compile(g, target="fpga")``).  Kernel
     realization is ``kernels=`` ("auto" | "xla" | "pallas" | "measured",
-    a ``CompileOptions`` field, so it works both ways); the old global
-    ``use_pallas=`` flag is a deprecation shim mapping to
-    kernels="pallas"/"xla".
+    a ``CompileOptions`` field, so it works both ways).
+    ``telemetry=True`` records one span per compiler pass (and is a
+    distinct plan-cache key, so the passes genuinely re-run) — pair with
+    ``gcv.trace_to(path)`` to capture them to a file.
     """
-    opts = _use_pallas_shim(_resolve_options(options, option_overrides),
-                            use_pallas)
+    opts = _resolve_options(options, option_overrides)
     if isinstance(model, ExecutionPlan):
         assert example_inputs is None, \
             "an ExecutionPlan is already compiled; example_inputs are " \
@@ -402,7 +446,7 @@ def compile(model, example_inputs: Mapping[str, Any] | None = None, *,
 
 def serve(models: Mapping[str, Any], *,
           options: CompileOptions | None = None, max_batch: int = 8,
-          use_pallas: bool | None = None, jit: bool = True,
+          jit: bool = True,
           pipeline_depth: int = 2, residency: bool = True, warmup=False,
           **option_overrides):
     """Build the micro-batching serving engine from models, not plumbing.
@@ -411,14 +455,14 @@ def serve(models: Mapping[str, Any], *,
     ``CompiledModel``, a layer ``Graph``, an ``ExecutionPlan``, or a
     ``(fn, example_inputs)`` pair for plain JAX callables).  Pre-compiled
     models keep their own kernel/residency settings; everything else is
-    compiled with this call's (``kernels=`` picks the realization mode;
-    ``use_pallas=`` is the deprecated spelling).  ``warmup=True``
-    AOT-compiles every (task, bucket) runner before returning — no live
-    request ever traces.
+    compiled with this call's (``kernels=`` picks the realization mode).
+    ``warmup=True`` AOT-compiles every (task, bucket) runner before
+    returning — no live request ever traces.  The engine's ``stats()``
+    reads from its own ``obs.MetricsRegistry``; run it inside
+    ``gcv.trace_to(path)`` to capture per-batch and per-request spans.
     """
     from repro.serve.gnncv import GNNCVServeEngine
-    opts = _use_pallas_shim(_resolve_options(options, option_overrides),
-                            use_pallas)
+    opts = _resolve_options(options, option_overrides)
     eng = GNNCVServeEngine(dict(models), options=opts, max_batch=max_batch,
                            jit=jit, pipeline_depth=pipeline_depth,
                            residency=residency)

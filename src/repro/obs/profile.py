@@ -1,0 +1,177 @@
+"""Per-op profiling — measured seconds per MatOp, against the cost model.
+
+``profile_plan`` executes an ``ExecutionPlan`` op by op with
+``jax.block_until_ready`` between ops, so each MatOp's wall time is
+attributable to *that* op (whole-program jit hides per-op cost behind XLA
+fusion and async dispatch).  ``profile_report`` then lines the measurements
+up with Step-4b's analytic predictions (``plan.meta["kernel_choices"]``)
+and — for ops whose realization family has real alternatives —
+micro-benchmarks the rival kernels to compute the **cost-model agreement
+rate**: the fraction of multi-candidate ops where the analytic argmin picks
+the same kernel the stopwatch does.  That rate is the number the ROADMAP
+asked for before sharded serving and continuous batching can be tuned, and
+``benchmarks/compile_bench.py`` records it in ``BENCH_compile.json``.
+
+Everything here is measurement-time-only: profiling never touches the
+serving hot path (the FlowGNN argument, paper §VII-D2 — selection and
+validation happen offline).
+"""
+from __future__ import annotations
+
+from repro.obs.trace import now, span
+
+__all__ = ["profile_plan", "profile_report", "render_report"]
+
+
+def profile_plan(plan, inputs=None, *, repeats: int = 3) -> dict:
+    """Measured seconds per MatOp, keyed like ``meta["kernel_choices"]``.
+
+    Runs the plan eagerly op by op (device-resident weights, no liveness
+    frees — every op's operands stay live), blocking on each op's output;
+    each op's time is the best of ``repeats`` full passes after one warmup
+    pass that pays any kernel jit compiles.  Returns ``op_name -> {"s",
+    "kernel", "kind", "primitive", "predicted_s"}``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.executor import random_inputs
+    from repro.core.runtime import run_op
+    from repro.core.runtime.residency import collect_params
+
+    assert repeats >= 1, f"repeats must be >= 1, got {repeats}"
+    if inputs is None:
+        inputs = random_inputs(plan, seed=0)
+    base = {k: jnp.asarray(v) for k, v in inputs.items()}
+    missing = [k for k in plan.input_names if k not in base]
+    assert not missing, f"missing inputs: {missing}"
+    resident = collect_params(plan)
+    params = resident.bind(resident.arrays)
+
+    def one_pass(record: dict | None) -> None:
+        env = dict(base)
+        for op in plan.ops:
+            t0 = now()
+            out = run_op(op, env, False, params)
+            jax.block_until_ready(out)
+            dt = now() - t0
+            env[op.name] = out
+            if record is not None and dt < record.get(op.name, float("inf")):
+                record[op.name] = dt
+
+    with span("profile", cat="profile", plan=plan.name, repeats=repeats,
+              ops=len(plan.ops)):
+        one_pass(None)                     # warmup: jit compiles, staging
+        best: dict[str, float] = {}
+        for _ in range(repeats):
+            one_pass(best)
+
+    choices = plan.meta.get("kernel_choices", {})
+    out = {}
+    for op in plan.ops:
+        choice = choices.get(op.name, {})
+        out[op.name] = {
+            "s": best[op.name],
+            "kernel": op.kernel,
+            "kind": op.kind,
+            "primitive": op.primitive,
+            "predicted_s": (choice.get("predicted_s") or {}).get(op.kernel),
+        }
+    return out
+
+
+def _measure_candidates(plan, names, *, repeats: int) -> dict:
+    """Standalone micro-benchmarks of every rival kernel for the named
+    multi-candidate ops (the same measurement ``kernels="measured"`` runs,
+    through a throwaway in-memory cache that is never written to disk)."""
+    import jax
+
+    from repro.core.autotune import AutotuneCache, measure_op
+
+    backend = plan.meta.get("kernels_backend") or jax.default_backend()
+    cache = AutotuneCache(path=".obs_profile_scratch.does_not_exist")
+    choices = plan.meta.get("kernel_choices", {})
+    measured = {}
+    by_name = {op.name: op for op in plan.ops}
+    for name in names:
+        op = by_name[name]
+        cands = choices[name]["candidates"]
+        timings = measure_op(op, cands, cache, backend=backend,
+                             repeats=repeats)
+        if timings:
+            measured[name] = timings
+    return measured
+
+
+def profile_report(plan, inputs=None, *, repeats: int = 3,
+                   measure_candidates: bool = True) -> dict:
+    """Predicted-vs-measured report over one plan.
+
+    Returns a dict with one row per op (bound kernel, analytic prediction,
+    in-plan measured seconds, and — for multi-candidate ops — whether the
+    analytic argmin agrees with the measured argmin over the family), plus
+    the aggregate ``agreement`` block::
+
+        {"agree": int, "considered": int, "rate": float | None}
+
+    ``rate`` is ``None`` when no op has more than one candidate (nothing
+    to validate).  ``render_report`` turns the dict into the table.
+    """
+    profiled = profile_plan(plan, inputs, repeats=repeats)
+    choices = plan.meta.get("kernel_choices", {})
+    multi = [n for n, c in choices.items() if len(c["candidates"]) > 1]
+    rivals = _measure_candidates(plan, multi, repeats=repeats) \
+        if measure_candidates and multi else {}
+
+    rows, agree, considered = [], 0, 0
+    for name, p in profiled.items():
+        choice = choices.get(name, {})
+        row = {"op": name, "kind": p["kind"], "kernel": p["kernel"],
+               "source": choice.get("source"),
+               "predicted_s": p["predicted_s"], "measured_s": p["s"],
+               "candidates_s": rivals.get(name), "agree": None}
+        meas = rivals.get(name)
+        pred = choice.get("predicted_s") or {}
+        if meas and len(meas) > 1 and all(k in pred for k in meas):
+            considered += 1
+            row["agree"] = (min(meas, key=meas.get)
+                            == min({k: pred[k] for k in meas},
+                                   key=lambda k: pred[k]))
+            agree += row["agree"]
+        rows.append(row)
+    rate = agree / considered if considered else None
+    report = {
+        "plan": plan.name,
+        "kernels_mode": plan.meta.get("kernels_mode"),
+        "backend": plan.meta.get("kernels_backend"),
+        "repeats": repeats,
+        "rows": rows,
+        "agreement": {"agree": agree, "considered": considered,
+                      "rate": rate},
+    }
+    report["text"] = render_report(report)
+    return report
+
+
+def _us(v) -> str:
+    return f"{v * 1e6:10.2f}" if v is not None else " " * 9 + "-"
+
+
+def render_report(report: dict) -> str:
+    """The human-readable predicted-vs-measured table."""
+    head = (f"per-op profile for {report['plan']!r} "
+            f"(mode={report['kernels_mode']}, backend={report['backend']}, "
+            f"best of {report['repeats']}):")
+    lines = [head,
+             f"  {'op':<28} {'kernel':<18} {'predicted_us':>12} "
+             f"{'measured_us':>12}  agree"]
+    for r in report["rows"]:
+        mark = {True: "yes", False: "NO", None: "-"}[r["agree"]]
+        lines.append(f"  {r['op']:<28} {str(r['kernel']):<18} "
+                     f"{_us(r['predicted_s']):>12} "
+                     f"{_us(r['measured_s']):>12}  {mark}")
+    ag = report["agreement"]
+    rate = "n/a (no multi-candidate ops)" if ag["rate"] is None \
+        else f"{ag['rate']:.0%} ({ag['agree']}/{ag['considered']})"
+    lines.append(f"  cost-model agreement: {rate}")
+    return "\n".join(lines)

@@ -7,7 +7,7 @@ axis is requests-per-compiled-plan, not tokens-per-slot:
 
   * requests queue per task; each dispatch serves the task whose front
     request has waited longest, draining everything queued behind it
-    through that task's batched runner (``build_runner(plan, batch=N)``);
+    through that task's batched runner (``CompiledModel.batched(N)``);
   * batch sizes are quantized to power-of-two buckets (short batches are
     padded by repeating the tail request), so the plan/runner cache
     (``core.runtime.cache``) holds at most log2(max_batch)+1 compiled
@@ -29,17 +29,26 @@ axis is requests-per-compiled-plan, not tokens-per-slot:
     the annotations mirror — is what realizes it).  Weights are
     device-resident plan state shared across every bucket of a task
     (``core.runtime.residency``), not per-bucket trace constants.
+
+The engine is observable end to end (``repro.obs``): every lifecycle
+counter, gauge and latency percentile ``stats()`` reports is read from the
+engine's own ``MetricsRegistry`` (per-task request counters, sojourn
+histogram — zero-safe: percentiles are ``None`` until a request has been
+harvested), and with tracing on (``gcv.trace_to(path)``) each dispatch and
+harvest is a span carrying batch id / bucket / pad count, plus one
+retroactive span per request from submit to harvest — a serve run opens in
+``chrome://tracing``.  Tracing is off by default and costs one attribute
+read per dispatch.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
-import warnings
 from collections import deque
 
 import numpy as np
 
+from repro import obs
 from repro.core.compiler import CompileOptions
 from repro.core.executor import stack_inputs
 from repro.core.ir import Graph
@@ -53,8 +62,20 @@ class TaskRequest:
     inputs: dict                       # per-sample input arrays, unstacked
     result: tuple | None = None        # tuple of np outputs once done
     done: bool = False
-    t_submit: float = 0.0              # perf_counter at intake
-    t_done: float = 0.0                # perf_counter when harvested
+    t_submit: float = 0.0              # obs.now() at intake
+    t_dispatch: float = 0.0            # obs.now() when its batch launched
+    t_done: float = 0.0                # obs.now() when harvested
+
+
+@dataclasses.dataclass
+class _BatchInfo:
+    """Identity of one in-flight dispatch, carried to harvest (and into
+    the trace) so per-request spans can say which batch served them."""
+    batch_id: int
+    task: str
+    bucket: int
+    pad: int
+    t_dispatch: float
 
 
 class GNNCVServeEngine:
@@ -66,25 +87,14 @@ class GNNCVServeEngine:
     pair for plain JAX callables.  Everything not already compiled is run
     through ``gcv.compile`` with this engine's options; pre-compiled
     models keep their own.  Kernel realizations are per-op compile-time
-    plan state (``options.kernels``); ``use_pallas=`` survives one PR as
-    a deprecation shim mapping to kernels="pallas"/"xla".
+    plan state (``options.kernels``).
     """
 
     def __init__(self, models=None, *,
                  options: CompileOptions = CompileOptions(),
-                 max_batch: int = 8, use_pallas: bool | None = None,
-                 jit: bool = True, pipeline_depth: int = 2,
-                 residency: bool = True):
+                 max_batch: int = 8, jit: bool = True,
+                 pipeline_depth: int = 2, residency: bool = True):
         from repro import gcv                  # late: gcv builds engines
-        if use_pallas is not None:
-            warnings.warn(
-                "GNNCVServeEngine(use_pallas=...) is deprecated; per-op "
-                "kernel selection replaced the global flag — pass "
-                "options=CompileOptions(kernels='pallas'/'xla') or keep "
-                "the default kernels='auto'", DeprecationWarning,
-                stacklevel=2)
-            options = dataclasses.replace(
-                options, kernels="pallas" if use_pallas else "xla")
         assert models, "GNNCVServeEngine needs at least one model"
         self.options = options
         # power of two keeps _bucket's doubling landing on the cap and the
@@ -119,10 +129,30 @@ class GNNCVServeEngine:
         self.graphs = {t: m.graph for t, m in self.models.items()}
         self.queues: dict[str, deque] = {t: deque() for t in self.models}
         self._rid = itertools.count()
-        self._inflight: deque[tuple[list[TaskRequest], tuple]] = deque()
+        self._inflight: deque[tuple[list[TaskRequest], tuple,
+                                    _BatchInfo]] = deque()
         self._warmed: set[tuple[str, int]] = set()
-        self.completed = 0
-        self.steps = 0
+        # Engine-owned instruments — stats() reads these, never its own
+        # tallies.  Owned (not process-global) so two engines in one
+        # process never mix their request counts.
+        self.metrics = obs.MetricsRegistry()
+        self._c_submitted = self.metrics.counter("submitted")
+        self._c_completed = self.metrics.counter("completed")
+        self._c_dispatches = self.metrics.counter("dispatches")
+        self._c_padded = self.metrics.counter("padded")
+        self._h_sojourn = self.metrics.histogram("sojourn_ms")
+        self._h_queue = self.metrics.histogram("queue_ms")
+        self._t_first_dispatch: float | None = None
+        self._t_last_harvest: float | None = None
+
+    # back-compat counter views (pre-obs engines kept plain attributes)
+    @property
+    def completed(self) -> int:
+        return self._c_completed.value
+
+    @property
+    def steps(self) -> int:
+        return self._c_dispatches.value
 
     # ------------------------------------------------------------ intake --
     def submit(self, task: str, **inputs) -> TaskRequest:
@@ -144,25 +174,57 @@ class GNNCVServeEngine:
                 f"task {task!r}, input {name!r}: expected per-sample " \
                 f"shape {want}, got {got}"
         req = TaskRequest(next(self._rid), task, inputs,
-                          t_submit=time.perf_counter())
+                          t_submit=obs.now())
         self.queues[task].append(req)
+        self._c_submitted.inc()
+        self.metrics.counter(f"task.{task}.submitted").inc()
         return req
 
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values())
 
     def inflight(self) -> int:
-        return sum(len(reqs) for reqs, _ in self._inflight)
+        return sum(len(reqs) for reqs, _, _ in self._inflight)
 
     def stats(self) -> dict:
-        """Serving counters plus the plan/runner-cache effectiveness
-        numbers (hits/misses) — after ``warmup`` a healthy engine shows
-        ``runner_hits`` growing and ``runner_misses`` frozen at one per
-        (task, bucket)."""
+        """One read over the engine's metrics registry plus the process
+        plan/runner-cache effectiveness counters.
+
+        Always safe: on an engine that has harvested zero requests the
+        percentiles and ``req_per_s`` are explicit ``None`` (never NaN,
+        never a ZeroDivisionError) and every counter is an explicit zero.
+        After ``warmup`` a healthy engine shows ``runner_hits`` growing
+        and ``runner_misses`` frozen at one per (task, bucket).
+        """
         from repro.core.runtime.cache import cache_stats
-        return {"completed": self.completed, "steps": self.steps,
+        completed = self._c_completed.value
+        elapsed = (self._t_last_harvest - self._t_first_dispatch
+                   if completed and self._t_first_dispatch is not None
+                   and self._t_last_harvest is not None else None)
+        per_task = {}
+        for task in self.models:
+            per_task[task] = {
+                "submitted": self.metrics.counter(
+                    f"task.{task}.submitted").value,
+                "completed": self.metrics.counter(
+                    f"task.{task}.completed").value,
+                "req_per_s": (self.metrics.counter(
+                    f"task.{task}.completed").value / elapsed
+                    if elapsed else None),
+            }
+        self.metrics.gauge("pending").set(self.pending())
+        self.metrics.gauge("inflight").set(self.inflight())
+        return {"completed": completed, "steps": self.steps,
+                "submitted": self._c_submitted.value,
                 "pending": self.pending(), "inflight": self.inflight(),
                 "tasks": len(self.models), "warmed": len(self._warmed),
+                "padded": self._c_padded.value,
+                "p50_sojourn_ms": self._h_sojourn.percentile(50),
+                "p95_sojourn_ms": self._h_sojourn.percentile(95),
+                "p50_queue_ms": self._h_queue.percentile(50),
+                "p95_queue_ms": self._h_queue.percentile(95),
+                "req_per_s": (completed / elapsed if elapsed else None),
+                "per_task": per_task,
                 **cache_stats()}
 
     @staticmethod
@@ -208,9 +270,11 @@ class GNNCVServeEngine:
         for task in tasks:
             assert task in self.models, f"unknown task {task!r}"
             for bucket in buckets:
-                run = self._runner(task, bucket)
-                if run.aot_compile() is not None:
-                    self._warmed.add((task, bucket))
+                with obs.span("serve.warmup", cat="serve", task=task,
+                              bucket=bucket):
+                    run = self._runner(task, bucket)
+                    if run.aot_compile() is not None:
+                        self._warmed.add((task, bucket))
         return set(self._warmed)
 
     # ---------------------------------------------------------- dispatch --
@@ -236,10 +300,20 @@ class GNNCVServeEngine:
         bucket = self._bucket(take, self.max_batch)
         reqs = [queue.popleft() for _ in range(take)]
         padded = reqs + [reqs[-1]] * (bucket - take)
-        run = self._runner(task, bucket)
-        outs = run(**self._stack([r.inputs for r in padded]))
-        self._inflight.append((reqs, outs))
-        self.steps += 1
+        info = _BatchInfo(self._c_dispatches.value, task, bucket,
+                          bucket - take, obs.now())
+        with obs.span("serve.dispatch", cat="serve", task=task,
+                      bucket=bucket, batch_id=info.batch_id, n=take,
+                      pad=info.pad):
+            run = self._runner(task, bucket)
+            outs = run(**self._stack([r.inputs for r in padded]))
+        if self._t_first_dispatch is None:
+            self._t_first_dispatch = info.t_dispatch
+        for r in reqs:
+            r.t_dispatch = info.t_dispatch
+        self._inflight.append((reqs, outs, info))
+        self._c_dispatches.inc()
+        self._c_padded.inc(info.pad)
         return len(reqs)
 
     def harvest(self) -> int:
@@ -252,13 +326,31 @@ class GNNCVServeEngine:
         O(batch) transfers per output name."""
         if not self._inflight:
             return 0
-        reqs, outs = self._inflight.popleft()
-        mats = [np.asarray(o) for o in outs]
+        reqs, outs, info = self._inflight.popleft()
+        with obs.span("serve.harvest", cat="serve", task=info.task,
+                      batch_id=info.batch_id, bucket=info.bucket,
+                      n=len(reqs)):
+            mats = [np.asarray(o) for o in outs]
+        done = obs.now()
+        traced = obs.enabled()
         for i, req in enumerate(reqs):
             req.result = tuple(np.array(m[i]) for m in mats)
             req.done = True
-            req.t_done = time.perf_counter()
-        self.completed += len(reqs)
+            req.t_done = done
+            self._h_sojourn.observe((done - req.t_submit) * 1e3)
+            self._h_queue.observe((req.t_dispatch - req.t_submit) * 1e3)
+            self.metrics.counter(f"task.{req.task}.completed").inc()
+            if traced:
+                # retroactive per-request span: the whole sojourn, from
+                # enqueue through this harvest
+                obs.complete("request", req.t_submit, done, cat="serve",
+                             rid=req.rid, task=req.task,
+                             batch_id=info.batch_id, bucket=info.bucket,
+                             pad=info.pad,
+                             queued_ms=round(
+                                 (req.t_dispatch - req.t_submit) * 1e3, 3))
+        self._c_completed.inc(len(reqs))
+        self._t_last_harvest = done
         return len(reqs)
 
     # -------------------------------------------------------------- step --

@@ -318,34 +318,20 @@ def test_pre_facade_shims_are_gone():
         GNNCVServeEngine(graphs={"b6": _graph("b6")}, options=OPTS)
 
 
-def test_use_pallas_shim_warns_and_maps_to_kernel_mode():
-    """``use_pallas=`` survives one PR as a shim over per-op kernel
-    selection: it must warn and reproduce the forced kernels= modes."""
-    g = _graph("b6")
-    with pytest.warns(DeprecationWarning, match="kernel"):
-        shim_x = gcv.compile(g, options=OPTS, use_pallas=False)
-    with pytest.warns(DeprecationWarning, match="kernel"):
-        shim_p = gcv.compile(g, options=OPTS, use_pallas=True)
-    import dataclasses
-    forced_x = gcv.compile(
-        g, options=dataclasses.replace(OPTS, kernels="xla"))
-    forced_p = gcv.compile(
-        g, options=dataclasses.replace(OPTS, kernels="pallas"))
-    assert shim_x.plan.kernel_counts() == forced_x.plan.kernel_counts()
-    assert shim_p.plan.kernel_counts() == forced_p.plan.kernel_counts()
-    ins = random_inputs(shim_x.plan, seed=0)
-    for a, b in zip(shim_x.run(**ins), forced_x.run(**ins)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-
-
-def test_engine_use_pallas_shim_warns_and_serves():
+def test_use_pallas_shim_is_gone():
+    """The one-PR ``use_pallas=`` deprecation shim is deleted: the flag is
+    now an unknown keyword on every public surface (kernels= is the only
+    spelling), caught as an unexpected CompileOptions override on the
+    facade and a TypeError on the engine."""
     from repro.serve import GNNCVServeEngine
-    with pytest.warns(DeprecationWarning, match="kernel"):
-        eng = GNNCVServeEngine({"b6": _graph("b6")}, options=OPTS,
-                               max_batch=2, use_pallas=False)
-    assert eng.options.kernels == "xla"
-    req = eng.submit("b6", **random_inputs(eng.plans["b6"], seed=0))
-    assert eng.run() == 1 and req.done
+    g = _graph("b6")
+    with pytest.raises(TypeError):
+        gcv.compile(g, use_pallas=False)     # not a CompileOptions field
+    with pytest.raises(TypeError):
+        gcv.serve({"b6": g}, use_pallas=True)
+    with pytest.raises(TypeError):
+        GNNCVServeEngine({"b6": g}, options=OPTS, max_batch=2,
+                         use_pallas=False)
 
 
 def test_no_deprecated_entry_points_in_repo():

@@ -1,0 +1,278 @@
+"""Observability layer: span nesting and Chrome-trace schema, metrics
+backing the stats() surfaces, per-op profiling against the cost model, and
+the telemetry-off zero-impact contract."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import gcv, obs
+from repro.core import CompileOptions
+from repro.core.runtime.cache import clear_caches
+from repro.gnncv.tasks import build_task, request_inputs
+from repro.serve import GNNCVServeEngine
+
+OPTS = CompileOptions(target="fpga")
+
+
+@pytest.fixture(autouse=True)
+def clean_tracer():
+    """Every test starts and ends with the tracer off and empty — the
+    default state the rest of the suite (and production) relies on."""
+    obs.get_tracer().disable()
+    obs.clear()
+    yield
+    obs.get_tracer().disable()
+    obs.clear()
+
+
+# ------------------------------------------------------------- span core --
+def test_disabled_tracer_hands_out_shared_noop():
+    assert not obs.enabled()
+    sp = obs.span("anything", cat="x", k=1)
+    assert sp is obs.NOOP_SPAN
+    with sp as s:
+        s.set(more=2)                       # absorbed, never recorded
+    assert obs.get_tracer().spans == []
+
+
+def test_span_nesting_tracks_parents():
+    t = obs.get_tracer()
+    t.enable()
+    with obs.span("outer", cat="c"):
+        with obs.span("middle", cat="c"):
+            with obs.span("inner", cat="c"):
+                pass
+    parents = {s.name: s.parent for s in t.spans}
+    assert parents == {"inner": "middle", "middle": "outer", "outer": None}
+    # spans accumulate in finish order: inner closes first
+    assert [s.name for s in t.spans] == ["inner", "middle", "outer"]
+
+
+def test_span_set_attaches_attributes_mid_flight():
+    t = obs.get_tracer()
+    t.enable()
+    with obs.span("work", cat="c", n_in=3) as sp:
+        sp.set(n_out=7)
+    (span,) = t.spans
+    assert span.args == {"n_in": 3, "n_out": 7}
+
+
+def test_chrome_trace_schema_round_trip(tmp_path):
+    t = obs.get_tracer()
+    t.enable()
+    with obs.span("outer", cat="compile", graph="g"):
+        with obs.span("inner", cat="compile"):
+            pass
+    obs.instant("marker", cat="serve", rid=1)
+    t0 = obs.now()
+    obs.complete("request", t0 - 0.010, t0, cat="serve", rid=2)
+    path = tmp_path / "trace.json"
+    obs.export_chrome_trace(path)
+    doc = json.loads(path.read_text())
+    events = doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    assert sorted(e["ph"] for e in events) == ["X", "X", "X", "i"]
+    for e in events:
+        assert {"name", "cat", "ph", "ts", "pid", "tid"} <= e.keys()
+        assert e["ts"] >= 0
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+    # events are exported in start-time order; outer started first
+    complete = [e for e in events if e["ph"] == "X"]
+    assert complete[0]["name"] == "request"          # started 10ms early
+    req = next(e for e in events if e["name"] == "request")
+    assert 9e3 < req["dur"] < 12e3                   # ~10ms in us
+    assert req["args"] == {"rid": 2}
+
+
+def test_telemetry_context_restores_prior_state():
+    with obs.telemetry(True):
+        assert obs.enabled()
+    assert not obs.enabled()
+    with obs.telemetry(False):
+        assert not obs.enabled()
+
+
+# --------------------------------------------------------------- metrics --
+def test_histogram_is_zero_safe_and_counter_monotonic():
+    reg = obs.MetricsRegistry()
+    h = reg.histogram("lat")
+    assert h.percentile(50) is None and h.percentile(95) is None
+    assert h.mean is None
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert h.percentile(50) == pytest.approx(3.0)
+    assert h.percentile(95) == pytest.approx(4.0)
+    c = reg.counter("done")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    assert reg.counter("done") is c                  # get-or-create
+
+
+def test_registry_rejects_kind_mismatch():
+    reg = obs.MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(AssertionError):
+        reg.gauge("x")
+
+
+def test_compile_pipeline_emits_pass_spans():
+    clear_caches()
+    g = build_task("b6", small=True)
+    with obs.telemetry(True):
+        gcv.compile(g, options=OPTS)
+    names = {s.name for s in obs.get_tracer().spans}
+    assert {"compile", "pass.fusion", "pass.lower", "pass.tiling",
+            "pass.select", "pass.select_kernels", "pass.schedule",
+            "pass.liveness"} <= names
+    parents = {s.name: s.parent for s in obs.get_tracer().spans}
+    assert parents["pass.fusion"] == "compile"
+    top = next(s for s in obs.get_tracer().spans if s.name == "compile")
+    assert top.args["ops"] > 0                       # set() after the passes
+
+
+# ----------------------------------------------------- engine stats/spans --
+def test_engine_stats_safe_with_zero_requests():
+    clear_caches()
+    eng = GNNCVServeEngine({"b6": build_task("b6", small=True)},
+                           options=OPTS, max_batch=2)
+    s = eng.stats()
+    assert s["completed"] == 0 and s["submitted"] == 0
+    assert s["p50_sojourn_ms"] is None
+    assert s["p95_sojourn_ms"] is None
+    assert s["req_per_s"] is None
+    assert s["per_task"]["b6"] == {"submitted": 0, "completed": 0,
+                                   "req_per_s": None}
+    # the whole dict must serialize (CI writes stats into JSON records)
+    json.dumps(s)
+
+
+def test_engine_stats_read_from_metrics_registry():
+    clear_caches()
+    eng = GNNCVServeEngine({"b6": build_task("b6", small=True)},
+                           options=OPTS, max_batch=4)
+    for s in range(5):
+        eng.submit("b6", **request_inputs(eng.plans["b6"], seed=s))
+    assert eng.run() == 5
+    st = eng.stats()
+    assert st["completed"] == 5 == eng.metrics.counter("completed").value
+    assert st["per_task"]["b6"]["completed"] == 5
+    assert st["p50_sojourn_ms"] > 0 and st["p95_sojourn_ms"] > 0
+    assert st["req_per_s"] > 0
+    assert st["padded"] == eng.metrics.counter("padded").value
+    assert eng.metrics.histogram("sojourn_ms").count == 5
+
+
+def test_two_engines_do_not_share_request_counters():
+    clear_caches()
+    g = build_task("b6", small=True)
+    a = GNNCVServeEngine({"b6": g}, options=OPTS, max_batch=2)
+    b = GNNCVServeEngine({"b6": g}, options=OPTS, max_batch=2)
+    a.submit("b6", **request_inputs(a.plans["b6"], seed=0))
+    assert a.run() == 1
+    assert a.stats()["completed"] == 1
+    assert b.stats()["completed"] == 0
+
+
+def test_serving_lifecycle_emits_batch_and_request_spans():
+    clear_caches()
+    eng = GNNCVServeEngine({"b6": build_task("b6", small=True)},
+                           options=OPTS, max_batch=4)
+    for s in range(3):
+        eng.submit("b6", **request_inputs(eng.plans["b6"], seed=s))
+    with obs.telemetry(True):
+        assert eng.run() == 3
+    doc = obs.get_tracer().to_chrome()
+    by_name = {}
+    for e in doc["traceEvents"]:
+        if e["ph"] == "X":
+            by_name.setdefault(e["name"], []).append(e)
+    assert len(by_name["serve.dispatch"]) == 1
+    assert len(by_name["serve.harvest"]) == 1
+    assert len(by_name["request"]) == 3
+    d = by_name["serve.dispatch"][0]["args"]
+    assert d["bucket"] == 4 and d["n"] == 3 and d["pad"] == 1
+    for r in by_name["request"]:
+        assert r["args"]["task"] == "b6"
+        assert r["args"]["batch_id"] == d["batch_id"]
+
+
+# ------------------------------------------------------------- profiling --
+@pytest.mark.parametrize("task", ["b1", "b6"])
+def test_profile_covers_every_plan_op(task):
+    clear_caches()
+    model = gcv.compile(build_task(task, small=True), options=OPTS)
+    prof = model.profile(repeats=1)
+    assert set(prof) == {op.name for op in model.plan.ops}
+    for op in model.plan.ops:
+        row = prof[op.name]
+        assert row["s"] > 0
+        assert row["kernel"] == op.kernel
+
+
+def test_profile_report_agreement_rate_on_b6():
+    clear_caches()
+    model = gcv.compile(build_task("b6", small=True), options=OPTS)
+    rep = model.profile_report(repeats=1)
+    ag = rep["agreement"]
+    assert ag["considered"] >= 1           # b6 has dense multi-candidate ops
+    assert 0 <= ag["agree"] <= ag["considered"]
+    assert ag["rate"] is None or 0.0 <= ag["rate"] <= 1.0
+    assert "cost-model agreement" in rep["text"]
+    # every row lines measured seconds up against the plan's kernel binding
+    by_op = {op.name: op for op in model.plan.ops}
+    for row in rep["rows"]:
+        assert row["kernel"] == by_op[row["op"]].kernel
+        assert row["measured_s"] > 0
+
+
+# -------------------------------------------------------- off-by-default --
+def test_telemetry_off_outputs_bit_identical_and_no_spans():
+    clear_caches()
+    g = build_task("b6", small=True)
+    inputs = request_inputs(gcv.compile(g, options=OPTS).plan, seed=0)
+    out_off = gcv.compile(g, options=OPTS).run(**inputs)
+    with obs.telemetry(True):
+        out_on = gcv.compile(
+            g, options=CompileOptions(target="fpga", telemetry=True)
+        ).run(**inputs)
+    for a, b in zip(out_off, out_on):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    obs.clear()
+    out_again = gcv.compile(g, options=OPTS).run(**inputs)
+    assert obs.get_tracer().spans == []    # tracing off: nothing recorded
+    for a, b in zip(out_off, out_again):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trace_to_writes_file_and_disables(tmp_path):
+    clear_caches()
+    path = tmp_path / "t.json"
+    with gcv.trace_to(path):
+        assert obs.enabled()
+        gcv.compile(build_task("b6", small=True),
+                    options=CompileOptions(target="fpga", telemetry=True))
+    assert not obs.enabled()
+    names = {e["name"]
+             for e in json.loads(path.read_text())["traceEvents"]}
+    assert {"compile", "pass.fusion", "pass.liveness"} <= names
+
+
+def test_check_trace_tool_validates_artifacts(tmp_path):
+    import sys
+    sys.path.insert(0, "tools")
+    try:
+        import check_trace
+    finally:
+        sys.path.pop(0)
+    path = tmp_path / "t.json"
+    with gcv.trace_to(path):
+        gcv.compile(build_task("b6", small=True),
+                    options=CompileOptions(target="fpga", telemetry=True))
+    assert check_trace.check(str(path), ["compile", "pass.fusion"]) == []
+    problems = check_trace.check(str(path), ["no.such.span"])
+    assert problems and "no.such.span" in problems[0]
+    assert check_trace.check(str(tmp_path / "missing.json"), ["x"]) \
+        == [f"{tmp_path / 'missing.json'}: missing"]

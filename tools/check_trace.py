@@ -1,0 +1,70 @@
+"""CI smoke: validate an emitted Chrome-trace artifact.
+
+The benchmarks write ``TRACE_compile.json`` / ``TRACE_serve_gnncv.json``
+(Chrome/Perfetto trace-event JSON).  A trace that fails to parse, or that
+silently lost its top-level spans (an instrumentation regression — a pass
+renamed, a span never closed), should fail the job rather than upload a
+useless artifact.
+
+    python tools/check_trace.py TRACE_compile.json compile pass.fusion ...
+
+Arguments: the trace path, then one or more span names that must each
+appear at least once as a complete ("ph": "X") event.  Also checks the
+trace-event schema basics every viewer relies on: a ``traceEvents`` list
+whose complete events carry name/ts/dur/pid/tid with numeric non-negative
+ts/dur.  Exit 1 with one line per problem.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def check(path: str, required: list[str]) -> list[str]:
+    problems = []
+    p = pathlib.Path(path)
+    if not p.exists():
+        return [f"{path}: missing"]
+    try:
+        doc = json.loads(p.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{path}: not valid JSON ({e})"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: no traceEvents list"]
+    complete = [e for e in events if e.get("ph") == "X"]
+    for e in complete:
+        for field in ("name", "ts", "dur", "pid", "tid"):
+            if field not in e:
+                problems.append(f"{path}: complete event missing "
+                                f"{field!r}: {e}")
+                break
+        else:
+            if not (isinstance(e["ts"], (int, float)) and e["ts"] >= 0
+                    and isinstance(e["dur"], (int, float))
+                    and e["dur"] >= 0):
+                problems.append(f"{path}: bad ts/dur on {e['name']!r}")
+    names = {e["name"] for e in complete if "name" in e}
+    for want in required:
+        if want not in names:
+            problems.append(f"{path}: required span {want!r} absent "
+                            f"(have: {sorted(names)})")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) < 2:
+        print("usage: check_trace.py TRACE.json span [span ...]")
+        return 2
+    problems = check(argv[0], argv[1:])
+    for line in problems:
+        print(line)
+    if problems:
+        return 1
+    print(f"check_trace: OK ({argv[0]}: all of {argv[1:]} present)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,21 +1,32 @@
-"""Lint gate: no new in-repo uses of the pre-façade entry points.
+"""Lint gate: no new in-repo uses of the pre-facade entry points, and no
+ad-hoc timing outside the observability layer.
 
 ``repro.gcv`` is the public API; the old surfaces (direct
 ``build_runner``/``cached_runner`` calls, hand-constructed
-``GNNCVServeEngine``, the global ``use_pallas=`` flag that per-op kernel
-selection superseded) are either gone (``frontend.compile_model``,
-``GNNCVServeEngine(graphs=...)``) or survive one PR as shims and
-internals constructed *by* the façade.  This gate keeps them from
-creeping back into library code, examples, or benchmarks:
+``GNNCVServeEngine``, and the retired global kernel flag that per-op
+selection superseded — its one-PR deprecation shims are now deleted) must
+not creep back into library code, examples, or benchmarks.  Timing joined
+the gate when ``repro.obs`` landed: ``obs.now()`` is the repo's one wall
+clock (spans, metrics, benchmarks all share it), so bare
+``time.perf_counter`` calls are confined to the module that defines
+``now()`` and to ``core/autotune.py``, whose micro-benchmark loop predates
+the obs layer and is itself measurement infrastructure.
 
-  * library code under ``src/repro`` may use them only inside the modules
-    that define or implement them (``core/``, the ``kernels/`` seam whose
+Per-rule allowances:
+
+  * facade-superseded entry points — allowed only in the modules that
+    define or implement them (``core/``, the ``kernels/`` seam whose
     jitted entry points are parameterized on the realization, ``gcv.py``,
     the engine module itself);
-  * ``examples/`` and ``benchmarks/`` must go through ``gcv`` and pick
-    kernels via ``CompileOptions(kernels=...)``;
-  * ``tests/`` are exempt — they deliberately pin the legacy path for
-    bit-for-bit parity and exercise the deprecation shims.
+  * the retired global kernel flag — allowed only in ``core/`` and
+    ``kernels/``, where it survives as the *legacy dispatch argument* for
+    kernel-less plans (hand-built plans, old pickles), never as a
+    user-facing parameter;
+  * ``time.perf_counter`` — allowed only in ``src/repro/obs/`` and
+    ``src/repro/core/autotune.py``; everything else goes through
+    ``obs.now()``;
+  * ``tests/`` are exempt from all rules — they deliberately pin legacy
+    paths for bit-for-bit parity.
 
 Run from the repo root (CI does): ``python tools/lint_deprecated.py``.
 Exit code 1 and one line per offence on failure.
@@ -28,26 +39,34 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
-# entry points the façade supersedes (call sites, not attribute mentions)
-FORBIDDEN = [
-    re.compile(r"\bbuild_runner\s*\("),
-    re.compile(r"\bcached_runner\s*\("),
-    re.compile(r"\bcompile_model\s*\("),
-    re.compile(r"\bGNNCVServeEngine\s*\("),
-    re.compile(r"\buse_pallas\s*="),     # superseded by kernels="auto"/...
+_CORE_AND_KERNELS = ("src/repro/core/", "src/repro/kernels/")
+
+# (pattern, why, allowed-exact-paths, allowed-prefixes)
+RULES = [
+    (re.compile(r"\bbuild_runner\s*\("),
+     "use repro.gcv instead",
+     {"src/repro/gcv.py"}, _CORE_AND_KERNELS),
+    (re.compile(r"\bcached_runner\s*\("),
+     "use repro.gcv instead",
+     {"src/repro/gcv.py"}, _CORE_AND_KERNELS),
+    (re.compile(r"\bcompile_model\s*\("),
+     "use repro.gcv instead",
+     set(), _CORE_AND_KERNELS),
+    (re.compile(r"\bGNNCVServeEngine\s*\("),
+     "use gcv.serve instead",
+     {"src/repro/gcv.py"}, _CORE_AND_KERNELS),
+    # The retired global kernel flag: superseded by kernels="auto"/"xla"/
+    # "pallas"/"measured"; survives only as core-internal legacy dispatch.
+    (re.compile(r"\buse_pallas\s*="),
+     'pick kernels via CompileOptions(kernels=...)',
+     set(), _CORE_AND_KERNELS),
+    # Ad-hoc timing: obs.now() is the one wall clock.
+    (re.compile(r"\bperf_counter\b"),
+     "time through repro.obs.now() (the one timing primitive)",
+     {"src/repro/core/autotune.py"}, ("src/repro/obs/",)),
 ]
 
 SCAN_DIRS = ("src/repro", "examples", "benchmarks")
-
-# modules that define, implement, or intentionally shim the entry points
-ALLOWED = {
-    "src/repro/gcv.py",                  # the façade + use_pallas shim
-    "src/repro/serve/gnncv.py",          # engine + its use_pallas shim
-}
-ALLOWED_PREFIXES = (
-    "src/repro/core/",                   # the internals the façade drives
-    "src/repro/kernels/",                # jitted seam: realization is an arg
-)
 
 
 def offences(root: pathlib.Path = ROOT) -> list[str]:
@@ -55,16 +74,15 @@ def offences(root: pathlib.Path = ROOT) -> list[str]:
     for scan in SCAN_DIRS:
         for path in sorted((root / scan).rglob("*.py")):
             rel = path.relative_to(root).as_posix()
-            if rel in ALLOWED or rel.startswith(ALLOWED_PREFIXES):
-                continue
             for lineno, line in enumerate(
                     path.read_text().splitlines(), start=1):
                 code = line.split("#", 1)[0]         # strip comments
-                for pat in FORBIDDEN:
+                for pat, why, exact, prefixes in RULES:
+                    if rel in exact or rel.startswith(prefixes):
+                        continue
                     if pat.search(code):
-                        out.append(f"{rel}:{lineno}: deprecated entry "
-                                   f"point {pat.pattern!r} — use "
-                                   f"repro.gcv instead")
+                        out.append(f"{rel}:{lineno}: deprecated pattern "
+                                   f"{pat.pattern!r} — {why}")
     return out
 
 
@@ -73,11 +91,12 @@ def main() -> int:
     for line in found:
         print(line)
     if found:
-        print(f"\n{len(found)} use(s) of deprecated entry points; "
-              f"route them through repro.gcv (see README 'Migration').")
+        print(f"\n{len(found)} use(s) of deprecated patterns; "
+              f"route them through repro.gcv / repro.obs "
+              f"(see README 'Migration').")
         return 1
-    print("lint_deprecated: OK (no in-repo uses of pre-facade "
-          "entry points outside shims)")
+    print("lint_deprecated: OK (no in-repo uses of pre-facade entry "
+          "points or ad-hoc timing)")
     return 0
 
 
