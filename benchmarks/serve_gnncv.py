@@ -29,9 +29,20 @@ passes, per-(task, bucket) warmups, per-batch dispatch/harvest, one span
 per request) — traced outside the timed passes, so telemetry cost never
 touches the reported numbers.
 
+After the mode comparison, a **batch-sharded device sweep**
+(``--devices 1,2,4,8``) serves the same stream through
+``gcv.serve(..., devices=N)`` — batch axis sharded over a 1-D data mesh,
+weights replicated per device — recording req/s, p50/p95 sojourn, pad
+overhead per device count, and per-request parity against the
+single-device engine as a ``devices`` axis in the JSON.  On a CPU host,
+force devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the curve then measures sharding overhead, not speedup — one physical
+core).  Counts the host cannot satisfy are skipped with a printed note.
+
     PYTHONPATH=src python -m benchmarks.serve_gnncv [--requests N]
                                                     [--max-batch B]
                                                     [--repeats R]
+                                                    [--devices 1,2,4,8]
                                                     [--quick]
 
 Each mode is timed over R passes of the same stream and the best pass is
@@ -85,6 +96,9 @@ class PR3BaselineEngine(GNNCVServeEngine):
         if not self._inflight:
             return 0
         reqs, outs, _ = self._inflight.popleft()
+        for dq in self._dev_inflight:
+            if dq:
+                dq.popleft()
         for i, req in enumerate(reqs):
             req.result = tuple(np.asarray(o[i]) for o in outs)
             req.done = True
@@ -185,6 +199,75 @@ def bench_kernel_modes(graphs, options, stream, max_batch, repeats):
     return best, {m: e.stats() for m, e in engines.items()}
 
 
+def bench_devices(graphs, options, stream, max_batch, counts, repeats):
+    """Batch-sharded serving sweep: one pipelined engine per device count,
+    all sharing ONE max_batch (``max(max_batch, max(counts))``) so every
+    engine sees the same request stream and comparable buckets.  Counts
+    the host cannot satisfy are skipped with a printed note — never
+    silently served at a smaller mesh.  Each count's per-request results
+    are compared against the devices=1 engine's; GSPMD partitioning can
+    reorder float accumulation at the last ulp on some tasks, so parity is
+    a recorded max|diff| under a 1e-5 gate rather than a bitwise claim.
+    """
+    import jax
+    avail = len(jax.devices())
+    usable = [c for c in counts if c <= avail]
+    for c in counts:
+        if c not in usable:
+            print(f"devices={c}: skipped, host exposes only {avail} "
+                  f"device(s) (set XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count=N to force)")
+    if not usable:
+        return [], avail
+    mb = max(max_batch, max(usable))
+    records, ref_results = [], None
+    for ndev in usable:
+        eng = gcv.serve(graphs, pipeline_depth=2, residency=True,
+                        options=options, max_batch=mb, devices=ndev)
+        warmed = eng.warmup()
+        assert warmed == {(t, b) for t in graphs for b in eng.buckets()}, \
+            "warmup left (task, bucket) runners uncompiled"
+        pre = eng.stats()
+        best, best_lats, results = float("inf"), [], None
+        for _ in range(repeats):
+            reqs = [eng.submit(task, **inputs) for task, inputs in stream]
+            t0 = obs.now()
+            served = eng.run()
+            dt = obs.now() - t0
+            assert served == len(stream)
+            results = [r.result for r in reqs]
+            if dt < best:
+                best, best_lats = dt, [r.t_done - t0 for r in reqs]
+        post = eng.stats()
+        assert post["runner_misses"] == pre["runner_misses"], \
+            "a live request paid a runner compile after warmup()"
+        parity = None
+        if ref_results is None:
+            ref_results = results
+        else:
+            parity = 0.0
+            for want, got in zip(ref_results, results):
+                for a, b in zip(want, got):
+                    parity = max(parity, float(np.max(np.abs(
+                        np.asarray(a, np.float64)
+                        - np.asarray(b, np.float64)))))
+            assert parity < 1e-5, \
+                f"devices={ndev} diverged from devices=1 by {parity:.3e}"
+        n = len(stream)
+        records.append({
+            "devices": ndev, "max_batch": mb,
+            "wall_ms": round(best * 1e3, 2),
+            "req_per_s": round(n / best, 2),
+            "p50_ms": round(percentile_ms(best_lats, 50), 3),
+            "p95_ms": round(percentile_ms(best_lats, 95), 3),
+            "padded": post["padded"],
+            "pad_per_device": post["pad_per_device"],
+            "parity_max_abs_diff_vs_1dev": (
+                None if parity is None else float(f"{parity:.3e}")),
+        })
+    return records, avail
+
+
 def mode_record(name, wall_s, lats, n, extra=None):
     return {"mode": name, "wall_ms": round(wall_s * 1e3, 2),
             "req_per_s": round(n / wall_s, 2),
@@ -193,28 +276,34 @@ def mode_record(name, wall_s, lats, n, extra=None):
             **(extra or {})}
 
 
-def trace_pass(graphs, options, stream, max_batch, path):
+def trace_pass(graphs, options, stream, max_batch, path, devices=1):
     """One fully-traced serve lifecycle, emitted as a Chrome-trace
     artifact: compile (telemetry options force a fresh plan-cache entry,
     so all six passes run inside the tracer), AOT warmup of every (task,
     bucket), then a short request stream with per-batch dispatch/harvest
-    and per-request spans.  Runs after the timed passes — the reported
-    numbers never include tracer overhead."""
+    and per-request spans.  With ``devices > 1`` the engine serves batch-
+    sharded and every dispatch/harvest/request span carries its device —
+    the exporter routes them to per-device Perfetto tracks.  Runs after
+    the timed passes — the reported numbers never include tracer
+    overhead."""
     opts = dataclasses.replace(options, telemetry=True)
     with gcv.trace_to(path):
         eng = gcv.serve(graphs, pipeline_depth=2, residency=True,
-                        options=opts, max_batch=max_batch, warmup=True)
+                        options=opts, max_batch=max(max_batch, devices),
+                        devices=devices, warmup=True)
         for task, inputs in stream:
             eng.submit(task, **inputs)
         eng.run()
     s = eng.stats()
-    print(f"traced pass: {s['completed']} requests, "
+    print(f"traced pass ({s['devices']} device(s)): "
+          f"{s['completed']} requests, "
           f"p50 {s['p50_sojourn_ms']:.2f} ms, "
           f"p95 {s['p95_sojourn_ms']:.2f} ms -> {path}")
 
 
 def run(requests: int = 96, max_batch: int = 8, repeats: int = 5,
-        trace: str = "TRACE_serve_gnncv.json"):
+        trace: str = "TRACE_serve_gnncv.json",
+        devices: tuple = (1, 2, 4, 8)):
     options = CompileOptions(target="fpga")
     all_graphs = {t: build_task(t, small=True) for t in sorted(SMALL_CONFIGS)}
     graphs = {t: all_graphs[t] for t in BUILDER_MIX}
@@ -283,12 +372,25 @@ def run(requests: int = 96, max_batch: int = 8, repeats: int = 5,
     auto_vs_xla = (requests / pipe_s) / (requests / xla_s)
     print(f"pipelined+residency vs PR-3 baseline: {speedup:.2f}x req/s")
     print(f"kernels=auto vs all-XLA pipelined:    {auto_vs_xla:.2f}x req/s")
+
+    dev_records, dev_avail = bench_devices(
+        graphs, options, stream, max_batch, sorted(set(devices)), repeats)
+    if dev_records:
+        emit([[d["devices"], d["max_batch"], d["wall_ms"], d["req_per_s"],
+               d["p50_ms"], d["p95_ms"], d["padded"],
+               d["parity_max_abs_diff_vs_1dev"]] for d in dev_records],
+             ["devices", "max_batch", "wall_ms", "req_per_s", "p50_ms",
+              "p95_ms", "padded", "parity_vs_1dev"])
+
     if trace:
+        multi = [d["devices"] for d in dev_records if d["devices"] > 1]
         trace_pass(graphs, options, stream[:min(len(stream), 2 * len(MIX))],
-                   max_batch, trace)
+                   max_batch, trace, devices=max(multi) if multi else 1)
     write_bench_json("serve_gnncv", {
         "requests": requests, "max_batch": max_batch,
         "repeats": repeats, "mix": list(MIX),
+        "jax_devices_visible": dev_avail,
+        "devices": dev_records,
         "modes": modes, "baseline_req_per_s": round(requests / base_s, 2),
         "pipelined_req_per_s": round(requests / pipe_s, 2),
         "pipelined_vs_baseline": round(speedup, 3),
@@ -311,12 +413,18 @@ def main():
                     help="CI smoke: small stream, small buckets")
     ap.add_argument("--trace", default="TRACE_serve_gnncv.json",
                     help="Chrome-trace artifact path ('' to disable)")
+    ap.add_argument("--devices", default="1,2,4,8",
+                    help="comma-separated device counts for the batch-"
+                         "sharded sweep; counts the host cannot satisfy "
+                         "are skipped with a note")
     args = ap.parse_args()
+    devices = tuple(int(d) for d in args.devices.split(",") if d)
     if args.quick:
-        run(requests=24, max_batch=2, repeats=2, trace=args.trace)
+        run(requests=24, max_batch=2, repeats=2, trace=args.trace,
+            devices=devices)
     else:
         run(requests=args.requests, max_batch=args.max_batch,
-            repeats=args.repeats, trace=args.trace)
+            repeats=args.repeats, trace=args.trace, devices=devices)
 
 
 if __name__ == "__main__":

@@ -57,7 +57,8 @@ _run_op = run_op
 def build_runner(plan: ExecutionPlan, *, use_pallas: bool = False,
                  jit: bool | None = None, batch: int | None = None,
                  free_dead: bool = True, residency: bool = True,
-                 weights_as_args: bool | None = None) -> Callable[..., tuple]:
+                 weights_as_args: bool | None = None,
+                 mesh=None) -> Callable[..., tuple]:
     """Returns ``run(**inputs) -> tuple(outputs)``.
 
     ``use_pallas`` is a legacy shim: compiled plans carry per-op kernel
@@ -100,7 +101,34 @@ def build_runner(plan: ExecutionPlan, *, use_pallas: bool = False,
                             non-None once warm — ``explicit=True`` for the
                             standalone lowered executable
       ``run.trace_count()`` how many times the program body was traced
+      ``run.mesh``          the data mesh the batch axis is sharded over
+                            (None for single-device runners)
+
+    ``mesh`` (a 1-D ``("data",)`` mesh) shards the **batch axis** across
+    the mesh's devices: inputs/outputs carry a
+    ``NamedSharding(mesh, P("data"))``, the resident weight pytree is
+    replicated (one upload per device), and the whole-program jit runs
+    SPMD.  Requires ``batch`` divisible by the device count; a one-device
+    mesh falls back to the plain single-device runner.  GSPMD partitions
+    the batch dimension without touching per-sample math, so outputs are
+    bit-for-bit identical to the single-device runner at the same batch.
     """
+    if mesh is not None and mesh.size == 1:
+        mesh = None                      # the existing single-device path
+    if mesh is not None:
+        assert batch is not None, \
+            "mesh= shards the batch axis; build with batch=N"
+        assert batch % mesh.size == 0, \
+            f"batch {batch} must be divisible by the mesh's " \
+            f"{mesh.size} devices (the serving engine's bucket rule)"
+        assert jit is not False, \
+            "sharded runners execute through whole-program jit; " \
+            "mesh= is incompatible with jit=False"
+        jit = True
+        assert weights_as_args is not False, \
+            "sharded runners thread the replicated weight store through " \
+            "jit as an argument; mesh= is incompatible with " \
+            "weights_as_args=False"
     if jit is None:
         jit = batch is None
     if weights_as_args is None:
@@ -111,8 +139,10 @@ def build_runner(plan: ExecutionPlan, *, use_pallas: bool = False,
     # refuse hot-swaps, which could only return stale results there.
     bakes_constants = jit and not weights_as_args
     with obs.span("build_runner", cat="runtime", plan=plan.name,
-                  batch=batch, jit=bool(jit), residency=residency) as sp:
-        resident = collect_params(plan, device=not bakes_constants) \
+                  batch=batch, jit=bool(jit), residency=residency,
+                  devices=(mesh.size if mesh is not None else 1)) as sp:
+        resident = collect_params(plan, device=not bakes_constants,
+                                  mesh=mesh) \
             if residency else None
         if resident is not None:
             sp.set(resident_bytes=resident.nbytes())
@@ -137,7 +167,20 @@ def build_runner(plan: ExecutionPlan, *, use_pallas: bool = False,
             return jax.vmap(run_single, in_axes=(0, None))(env, arrays)
 
     if weights_as_args:
-        staged = jax.jit(run_impl) if jit else run_impl
+        if mesh is not None:
+            # SPMD batch sharding: the resident pytree replicates (one
+            # copy per device), every input/output shards its leading
+            # batch axis over the 1-D data mesh.  Shardings are pytree
+            # prefixes over run_impl's (arrays, env) arguments.
+            replicated = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            batch_sharded = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec("data"))
+            staged = jax.jit(run_impl,
+                             in_shardings=(replicated, batch_sharded),
+                             out_shardings=batch_sharded)
+        else:
+            staged = jax.jit(run_impl) if jit else run_impl
     else:
         # Closure-bind the resident store: under jit the device arrays
         # become trace constants (the golden-pinned program); eager reads
@@ -215,6 +258,7 @@ def build_runner(plan: ExecutionPlan, *, use_pallas: bool = False,
     run.aot_compile = aot_compile
     run.trace_count = lambda: traces["n"]
     run.input_specs = input_specs
+    run.mesh = mesh
     return run
 
 

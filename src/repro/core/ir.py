@@ -106,14 +106,25 @@ class GraphBuilder:
                          out_shape=tuple(shape)))
         return n
 
-    def conv(self, x, w, b=None, *, stride=1, padding="SAME", name=None):
-        """w: (k1, k2, c_in, c_out)."""
+    def conv(self, x, w, b=None, *, stride=1, padding="SAME", groups=1,
+             dilation=1, name=None):
+        """w: (k1, k2, c_in_per_group, c_out); ``groups`` splits input and
+        output channels into that many independent convolutions (XLA's
+        ``feature_group_count``), ``dilation`` is atrous kernel dilation.
+        Trivial values stay out of the params so existing plans are
+        byte-identical."""
         n = self._name("conv", name)
         weights = {"w": np.asarray(w)}
         if b is not None:
             weights["b"] = np.asarray(b)
-        self.g.add(Layer(n, "conv", (x,), {"stride": stride,
-                                           "padding": padding}, weights))
+        params = {"stride": stride, "padding": padding}
+        if groups != 1:
+            params["groups"] = int(groups)
+        d = (dilation, dilation) if isinstance(dilation, int) \
+            else tuple(int(v) for v in dilation)
+        if d != (1, 1):
+            params["dilation"] = d
+        self.g.add(Layer(n, "conv", (x,), params, weights))
         return n
 
     def linear(self, x, w, b=None, name=None):

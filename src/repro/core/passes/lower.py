@@ -68,17 +68,30 @@ def _lower_to_matops(g: Graph) -> ExecutionPlan:
             lead = ish[0][:-3]                   # optional batch dim
             c, h, w_sp = ish[0][-3:]
             k1, k2, cin, cout = layer.weights["w"].shape
-            assert cin == c, (name, ish[0], layer.weights["w"].shape)
+            groups = int(p.get("groups", 1))
+            dil = p.get("dilation", 1)
+            dh, dw = (dil, dil) if isinstance(dil, int) else tuple(dil)
+            # weights hold *per-group* input channels
+            assert cin * groups == c, (name, ish[0], groups,
+                                       layer.weights["w"].shape)
+            assert cout % groups == 0, (name, groups, cout)
             stride = p.get("stride", 1)
             sh, sw = (stride, stride) if isinstance(stride, int) else stride
+            ke1, ke2 = (k1 - 1) * dh + 1, (k2 - 1) * dw + 1
             if p.get("padding", "SAME") == "SAME":
                 ho, wo = -(-h // sh), -(-w_sp // sw)
             else:
-                ho = (h - k1) // sh + 1
-                wo = (w_sp - k2) // sw + 1
+                ho = (h - ke1) // sh + 1
+                wo = (w_sp - ke2) // sw + 1
+            extra = {}
+            if groups != 1:
+                extra["groups"] = groups
+            if (dh, dw) != (1, 1):
+                extra["dilation"] = (dh, dw)
             emit(MatOp(name, "conv", layer.inputs, dict(layer.weights),
                        {"stride": (sh, sw),
                         "padding": p.get("padding", "SAME"),
+                        **extra,
                         **_act_attrs(p),
                         "act_pos": p.get("act_pos"),
                         "fused_residual": p.get("fused_residual"),

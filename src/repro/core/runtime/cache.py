@@ -47,7 +47,7 @@ def cached_runner(graph: Graph,
                   options: CompileOptions = CompileOptions(), *,
                   batch: int | None = None,
                   jit: bool | None = None, free_dead: bool = True,
-                  residency: bool = True):
+                  residency: bool = True, mesh=None):
     """Compiled runner for ``graph``, one per (options, batch, ...).
 
     Kernel realizations are compile-time plan state (``options.kernels``
@@ -61,15 +61,21 @@ def cached_runner(graph: Graph,
     returned runner is what amortizes tracing, so the serving engine
     quantizes ``batch`` to a few buckets and this cache holds one runner
     per bucket.
+
+    ``mesh`` (batch-axis data-parallel sharding) is part of the key: the
+    same graph served over two different meshes is two compiled programs
+    with two replicated weight stores.  ``jax.sharding.Mesh`` hashes by
+    device grid + axis names, so two equal meshes share one entry.
     """
     from repro.core.executor import build_runner   # late: avoid import cycle
-    key = (options, batch, jit, free_dead, residency)
+    key = (options, batch, jit, free_dead, residency, mesh)
     per_graph = _RUNNERS.setdefault(graph, {})
     if key not in per_graph:
         _stat("runner_misses").inc()
         per_graph[key] = build_runner(
             cached_plan(graph, options), jit=jit,
-            batch=batch, free_dead=free_dead, residency=residency)
+            batch=batch, free_dead=free_dead, residency=residency,
+            mesh=mesh)
     else:
         _stat("runner_hits").inc()
     return per_graph[key]

@@ -28,46 +28,63 @@ from repro.core.runtime.residency import weight
 from repro.kernels import ops as kops
 
 
-def _shift_gemm_conv2d(x, w, *, stride, padding):
-    """Batch-size-stable conv: shifted slices + one dense GEMM.
+def _shift_gemm_conv2d(x, w, *, stride, padding, groups=1,
+                       dilation=(1, 1)):
+    """Batch-size-stable conv: shifted slices + one dense GEMM per group.
 
-    x: (c_in, H, W), w: (k1, k2, c_in, c_out) -> (c_out, H', W').
-    SAME-padding arithmetic matches XLA's (TF convention: pad_before =
-    total // 2), so output shapes agree with the native realization.
+    x: (c_in, H, W), w: (k1, k2, c_in_per_group, c_out) ->
+    (c_out, H', W').  SAME-padding arithmetic matches XLA's (TF
+    convention: pad_before = total // 2) with the *effective* dilated
+    kernel extent, so output shapes agree with the native realization.
+    ``groups`` splits input and output channels into independent convs
+    (group-major output channels, matching XLA's feature_group_count);
+    ``dilation`` spaces the kernel taps, which here is just a stride on
+    the shift offsets.
     """
     k1, k2, cin, cout = w.shape
     c, h, wd = x.shape
     sh, sw = stride
+    dh, dw = dilation
+    ke1, ke2 = (k1 - 1) * dh + 1, (k2 - 1) * dw + 1
     if padding == "SAME":
         ho, wo = -(-h // sh), -(-wd // sw)
-        pad_h = max((ho - 1) * sh + k1 - h, 0)
-        pad_w = max((wo - 1) * sw + k2 - wd, 0)
+        pad_h = max((ho - 1) * sh + ke1 - h, 0)
+        pad_w = max((wo - 1) * sw + ke2 - wd, 0)
         pads = ((pad_h // 2, pad_h - pad_h // 2),
                 (pad_w // 2, pad_w - pad_w // 2))
     else:
-        ho = (h - k1) // sh + 1
-        wo = (wd - k2) // sw + 1
+        ho = (h - ke1) // sh + 1
+        wo = (wd - ke2) // sw + 1
         pads = ((0, 0), (0, 0))
     xp = jnp.pad(x, ((0, 0),) + pads)
-    cols = []
-    for dy in range(k1):
-        for dx in range(k2):
-            cols.append(jax.lax.slice(
-                xp, (0, dy, dx),
-                (c, dy + (ho - 1) * sh + 1, dx + (wo - 1) * sw + 1),
-                (1, sh, sw)))                        # (c, ho, wo)
-    patches = jnp.stack(cols, 0).reshape(k1 * k2 * cin, ho * wo)
-    wm = w.reshape(k1 * k2 * cin, cout)              # same (dy, dx, c) order
-    if ho * wo == 1:
-        # Degenerate spatial output: under vmap the GEMM's M collapses to
-        # the batch size, and XLA's M=1 (GEMV) path accumulates K in a
-        # different order than M>1 — multiply+reduce keeps the K order
-        # independent of batch size.
-        return (patches * wm).sum(0).reshape(cout, ho, wo)
-    # Batched operand on the GEMM's left: under vmap this keeps the batch
-    # axis in the output rows, where XLA's row partitioning leaves each
-    # row's K-accumulation order independent of the batch size.
-    return (patches.T @ wm).T.reshape(cout, ho, wo)
+    og = cout // groups
+    outs = []
+    for g in range(groups):
+        xg = xp[g * cin:(g + 1) * cin]
+        cols = []
+        for dy in range(k1):
+            for dx in range(k2):
+                cols.append(jax.lax.slice(
+                    xg, (0, dy * dh, dx * dw),
+                    (cin, dy * dh + (ho - 1) * sh + 1,
+                     dx * dw + (wo - 1) * sw + 1),
+                    (1, sh, sw)))                    # (cin, ho, wo)
+        patches = jnp.stack(cols, 0).reshape(k1 * k2 * cin, ho * wo)
+        wm = w[..., g * og:(g + 1) * og] \
+            .reshape(k1 * k2 * cin, og)              # same (dy, dx, c) order
+        if ho * wo == 1:
+            # Degenerate spatial output: under vmap the GEMM's M collapses
+            # to the batch size, and XLA's M=1 (GEMV) path accumulates K
+            # in a different order than M>1 — multiply+reduce keeps the K
+            # order independent of batch size.
+            outs.append((patches * wm).sum(0).reshape(og, ho, wo))
+        else:
+            # Batched operand on the GEMM's left: under vmap this keeps
+            # the batch axis in the output rows, where XLA's row
+            # partitioning leaves each row's K-accumulation order
+            # independent of the batch size.
+            outs.append((patches.T @ wm).T.reshape(og, ho, wo))
+    return outs[0] if groups == 1 else jnp.concatenate(outs, 0)
 
 
 @register_op("conv")
@@ -75,14 +92,18 @@ def run_conv(op: MatOp, env, use_pallas: bool, params=None):
     kern = op_kernel(op, use_pallas)
     x = env[op.inputs[0]]
     w = weight(op, "w", params)
+    groups = op.attrs.get("groups", 1)
+    dilation = tuple(op.attrs.get("dilation", (1, 1)))
     if in_batched_execution() and kern != "pallas_ddmm":
         fn = lambda xi: _shift_gemm_conv2d(  # noqa: E731
             xi, w, stride=op.attrs["stride"],
-            padding=op.attrs["padding"])
+            padding=op.attrs["padding"], groups=groups,
+            dilation=dilation)
         out = fn(x) if x.ndim == 3 else jax.vmap(fn)(x)
     else:
         out = kops.conv2d(x, w,
                           stride=op.attrs["stride"],
                           padding=op.attrs["padding"],
+                          groups=groups, dilation=dilation,
                           use_pallas=kern == "pallas_ddmm")
     return apply_epilogue(out, op, env, params)

@@ -99,6 +99,12 @@ class ResidentParams:
                 jit argument pytree).
     ``slots``   (op.name, slot) -> ref (static indexing metadata, never
                 traced).
+    ``replicas`` how many devices hold a full copy: 1 for the
+                single-device store, the mesh size for a store collected
+                with ``mesh=`` (every array is ``device_put`` with a
+                replicated ``NamedSharding`` — one upload per device, the
+                paper's weights-resident-on-chip story times N chips).
+                ``nbytes()`` reports the total across replicas.
 
     ``bind`` produces a view over a *different* arrays dict with the same
     slot map — inside a traced function the executor binds the incoming
@@ -121,6 +127,8 @@ class ResidentParams:
     # slots with different labels mapped to one ref were folded by
     # content, and ``swap`` un-aliases them before replacing.
     origins: dict[tuple[str, str], int] | None = None
+    # Devices holding a full copy (see class docstring).
+    replicas: int = 1
 
     def bind(self, arrays) -> "ResidentParams":
         return ResidentParams(arrays, self.slots)
@@ -132,8 +140,11 @@ class ResidentParams:
         return self.arrays[self.slots[(op.name, slot)]]
 
     def nbytes(self) -> int:
-        return sum(int(a.size) * a.dtype.itemsize
-                   for a in self.arrays.values())
+        """Total resident bytes across every device replica (per-replica
+        footprint times ``replicas``)."""
+        per_replica = sum(int(a.size) * a.dtype.itemsize
+                          for a in self.arrays.values())
+        return per_replica * self.replicas
 
     def swap(self, op_name: str, slot: str, value, *,
              _pre_trace: bool = False) -> None:
@@ -164,8 +175,14 @@ class ResidentParams:
         key = (op_name, slot)
         ref = self.slots[key]
         old = self.arrays[ref]
-        new = np.asarray(value, dtype=old.dtype) if _pre_trace \
-            else jax.device_put(jnp.asarray(value, dtype=old.dtype))
+        if _pre_trace:
+            new = np.asarray(value, dtype=old.dtype)
+        else:
+            # match the old buffer's placement: a replicated (mesh) store
+            # re-uploads the swap to every device, a single-device store
+            # stays on its device
+            new = jax.device_put(jnp.asarray(value, dtype=old.dtype),
+                                 getattr(old, "sharding", None))
         assert new.shape == old.shape, \
             f"swap {op_name!r}/{slot!r}: shape {new.shape} != {old.shape}"
         group = self.origins.get(key) if self.origins else None
@@ -182,8 +199,8 @@ class ResidentParams:
         self.arrays[ref] = new
 
 
-def collect_params(plan: ExecutionPlan, *,
-                   device: bool = True) -> ResidentParams:
+def collect_params(plan: ExecutionPlan, *, device: bool = True,
+                   mesh=None) -> ResidentParams:
     """One pass over the plan: upload every compile-time ndarray once.
 
     Dedup is two-level.  First by host-array identity (``id``) — the
@@ -203,22 +220,34 @@ def collect_params(plan: ExecutionPlan, *,
     ``device_put``) — for runners whose jitted program will embed the
     values as trace constants anyway, where uploading would hold a second,
     never-read device copy of every parameter.
+
+    ``mesh`` (a 1-D data mesh) replicates every array across the mesh's
+    devices with a ``NamedSharding(mesh, P())`` — one upload per device,
+    so batch-sharded runners read their weights locally instead of
+    broadcasting per call.  ``replicas`` records the multiplier and
+    ``nbytes()`` reports the total.
     """
     with obs.span("residency.upload", cat="runtime", plan=plan.name,
-                  device=device) as sp:
-        res = _collect_params(plan, device=device)
+                  device=device,
+                  devices=(mesh.size if mesh is not None else 1)) as sp:
+        res = _collect_params(plan, device=device, mesh=mesh)
         sp.set(bytes=res.nbytes(), slots=len(res.slots),
                value_dedup_bytes=res.value_dedup_bytes)
         return res
 
 
-def _collect_params(plan: ExecutionPlan, *, device: bool) -> ResidentParams:
+def _collect_params(plan: ExecutionPlan, *, device: bool,
+                    mesh=None) -> ResidentParams:
     arrays: dict[str, jax.Array] = {}
     slots: dict[tuple[str, str], str] = {}
     origins: dict[tuple[str, str], int] = {}
     by_id: dict[int, str] = {}
     by_content: dict[tuple, str] = {}
     folded = {"bytes": 0}
+    replicated = None
+    if mesh is not None and device:
+        replicated = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
 
     def ref_for(host_array) -> str:
         key = id(host_array)
@@ -231,8 +260,9 @@ def _collect_params(plan: ExecutionPlan, *, device: bool) -> ResidentParams:
             else:
                 ref = f"p{len(arrays)}"
                 by_content[ckey] = ref
-                arrays[ref] = jax.device_put(jnp.asarray(host_array)) \
-                    if device else arr
+                arrays[ref] = (jax.device_put(jnp.asarray(host_array),
+                                              replicated)
+                               if device else arr)
             by_id[key] = ref
         return by_id[key]
 
@@ -242,7 +272,8 @@ def _collect_params(plan: ExecutionPlan, *, device: bool) -> ResidentParams:
             origins[(op.name, name)] = id(value)
     return ResidentParams(arrays, slots,
                           value_dedup_bytes=folded["bytes"],
-                          origins=origins)
+                          origins=origins,
+                          replicas=(mesh.size if mesh is not None else 1))
 
 
 # ---------------------------------------------------------- handler seam --

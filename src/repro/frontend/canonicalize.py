@@ -561,8 +561,12 @@ def _emit(tg: TraceGraph) -> Graph:
                                 "dtype": np.dtype(node.dtype).name},
                 out_shape=node.shape)
         elif node.op == "conv":
-            add(node, "conv", {"stride": node.params["stride"],
-                               "padding": node.params["padding"]})
+            cp = {"stride": node.params["stride"],
+                  "padding": node.params["padding"]}
+            for key in ("groups", "dilation"):   # only present when != 1
+                if key in node.params:
+                    cp[key] = node.params[key]
+            add(node, "conv", cp)
         elif node.op == "linear":
             add(node, "linear", {})
         elif node.op == "mp":

@@ -299,25 +299,30 @@ class _Interpreter:
                 "(kernels must be compile-time weights)")
         if isinstance(x, np.ndarray):
             raise UnsupportedOpError("conv over constant input")
-        if (p["feature_group_count"] != 1 or p["batch_group_count"] != 1
-                or tuple(p["lhs_dilation"]) != (1, 1)
-                or tuple(p["rhs_dilation"]) != (1, 1)):
+        if (p["batch_group_count"] != 1
+                or tuple(p["lhs_dilation"]) != (1, 1)):
             raise UnsupportedOpError(
-                "conv_general_dilated with grouping or dilation is not "
-                "supported")
+                "conv_general_dilated with batch grouping or input "
+                "(transposed-conv) dilation is not supported")
+        groups = int(p["feature_group_count"])
+        dilation = tuple(int(d) for d in p["rhs_dilation"])
         dn = p["dimension_numbers"]
         if tuple(dn.lhs_spec) != (0, 1, 2, 3) or \
                 tuple(dn.out_spec) != (0, 1, 2, 3):
             raise UnsupportedOpError(
                 "conv_general_dilated requires NCHW activations")
-        # kernel -> HWIO (the builder's (k1, k2, c_in, c_out) convention)
+        # kernel -> HWIO (the builder's (k1, k2, c_in, c_out) convention;
+        # grouped convs keep c_in as the *per-group* input channels)
         o, i, kh, kw = dn.rhs_spec
         w = np.asarray(w).transpose(kh, kw, i, o)
         k1, k2 = w.shape[:2]
+        # effective kernel extent under atrous dilation — what SAME/VALID
+        # padding arithmetic sees
+        ke = ((k1 - 1) * dilation[0] + 1, (k2 - 1) * dilation[1] + 1)
         stride = tuple(int(s) for s in p["window_strides"])
         sizes = tuple(eqn.invars[0].aval.shape[-2:])
         pads = _norm_pads(p["padding"])
-        if pads == _same_padding(sizes, (k1, k2), stride):
+        if pads == _same_padding(sizes, ke, stride):
             padding = "SAME"
         elif pads == ((0, 0), (0, 0)):
             padding = "VALID"
@@ -325,9 +330,15 @@ class _Interpreter:
             raise UnsupportedOpError(
                 f"conv_general_dilated with explicit padding {pads} maps to "
                 f"neither SAME nor VALID")
+        params = {"stride": stride, "padding": padding}
+        # only non-trivial values enter the node params, so plans for
+        # ordinary convs are unchanged byte for byte
+        if groups != 1:
+            params["groups"] = groups
+        if dilation != (1, 1):
+            params["dilation"] = dilation
         env[eqn.outvars[0]] = self.node(
-            "conv", "conv", [x], {"stride": stride, "padding": padding},
-            {"w": w}, eqn.outvars[0])
+            "conv", "conv", [x], params, {"w": w}, eqn.outvars[0])
 
     def p_dot_general(self, eqn, atoms, env):
         (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]

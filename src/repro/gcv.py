@@ -64,6 +64,21 @@ def _resolve_options(options, overrides) -> CompileOptions:
     return options
 
 
+def _resolve_mesh(devices, mesh):
+    """``devices=``/``mesh=`` -> a 1-D data mesh, or None for the
+    single-device path (including the one-device-mesh fallback)."""
+    if mesh is not None:
+        assert devices is None, "pass devices= or mesh=, not both"
+        from repro.launch.mesh import as_data_mesh
+        mesh = as_data_mesh(mesh)
+    elif devices is not None:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(devices)
+    if mesh is not None and mesh.size == 1:
+        return None          # one device: the existing runner is optimal
+    return mesh
+
+
 @contextlib.contextmanager
 def trace_to(path: str):
     """Record every span inside the block and write a Chrome/Perfetto
@@ -124,12 +139,16 @@ class CompiledModel:
 
     def __init__(self, plan: ExecutionPlan, *, graph: Graph | None = None,
                  options: CompileOptions, residency: bool = True,
-                 batch: int | None = None):
+                 batch: int | None = None, mesh=None):
         self.plan = plan
         self.graph = graph
         self.options = options
         self.residency = residency
         self.batch = batch                   # default batch for .run()
+        # 1-D data mesh for batch-axis sharding (gcv.compile(devices=));
+        # None = single-device. Batched runners shard their leading axis
+        # over it; per-sample runners always stay single-device.
+        self.mesh = mesh
         self._runners: dict[tuple, Callable] = {}
         # Runners come from the shared cache until weights diverge from the
         # plan's (swap_weights): from then on this model builds private
@@ -146,7 +165,24 @@ class CompiledModel:
 
         ``jit=None`` keeps ``build_runner``'s batch-aware default
         (whole-program jit per-sample, bit-stable per-op dispatch batched);
-        the serving engine passes ``jit=True`` for throughput."""
+        the serving engine passes ``jit=True`` for throughput.
+
+        On a model compiled with ``devices=``/``mesh=``, batched runners
+        shard the batch axis over the mesh (``jit`` resolves to True —
+        SPMD executes through whole-program jit) and ``batch`` must be
+        divisible by the device count; per-sample runners stay
+        single-device."""
+        mesh = self.mesh if batch is not None else None
+        if mesh is not None:
+            if jit is None:
+                jit = True
+            assert jit, \
+                "a mesh-sharded batched runner executes through " \
+                "whole-program jit; jit=False is single-device only"
+            assert batch % mesh.size == 0, \
+                f"batch {batch} must be divisible by the mesh's " \
+                f"{mesh.size} devices (buckets stay powers of two and " \
+                f"divisible by the device count)"
         key = (batch, jit)
         if not self._private:
             # Always resolve through the process-wide cache so its
@@ -154,13 +190,14 @@ class CompiledModel:
             # (the lookup is two dict probes); the local record only
             # feeds introspection and swap bookkeeping.
             run = cached_runner(self.graph, self.options, batch=batch,
-                                jit=jit, residency=self.residency)
+                                jit=jit, residency=self.residency,
+                                mesh=mesh)
             self._runners[key] = run
             return run
         run = self._runners.get(key)
         if run is None:
             run = build_runner(self.plan, jit=jit, batch=batch,
-                               residency=self.residency)
+                               residency=self.residency, mesh=mesh)
             self._apply_swaps(run)
             self._runners[key] = run
         return run
@@ -312,11 +349,18 @@ class CompiledModel:
         plan/runner cache effectiveness counters (hits/misses from the
         ``obs.metrics()`` registry)."""
         from repro.core.runtime.cache import cache_stats
-        resident = next((r.resident for r in self._runners.values()
-                         if r.resident is not None), None)
+        stores = [r.resident for r in self._runners.values()
+                  if r.resident is not None]
+        # prefer the store whose replication matches the model's mesh
+        # (a devices=N model may also hold a per-sample single-device
+        # runner; resident_bytes should report the N-replica footprint)
+        want = self.mesh.size if self.mesh is not None else 1
+        resident = next((s for s in stores if s.replicas == want),
+                        stores[0] if stores else None)
         if resident is None and self.residency:
             if self._sizing is None:      # hash once, not per stats() call
-                self._sizing = collect_params(self.plan, device=False)
+                self._sizing = collect_params(self.plan, device=False,
+                                              mesh=self.mesh)
             resident = self._sizing
         out = {
             "name": self.plan.name,
@@ -330,9 +374,14 @@ class CompiledModel:
             "runners_built": len(self._runners),
             "default_batch": self.batch,
             "swapped_slots": len(self._swaps),
+            "devices": want,
         }
         if resident is not None:
+            # total across replicas ("one upload per device"); the
+            # per-device figure is the single-chip footprint
             out["resident_bytes"] = resident.nbytes()
+            out["resident_bytes_per_device"] = \
+                resident.nbytes() // resident.replicas
             out["value_deduped_bytes"] = resident.value_dedup_bytes
         out["cache"] = cache_stats()
         return out
@@ -354,6 +403,7 @@ def compile(model, example_inputs: Mapping[str, Any] | None = None, *,
             batch: int | None = None, options: CompileOptions | None = None,
             residency: bool = True,
             example_batched: bool | None = None, name: str | None = None,
+            devices=None, mesh=None,
             **option_overrides) -> CompiledModel:
     """Compile anything the pipeline can ingest into a ``CompiledModel``.
 
@@ -379,8 +429,18 @@ def compile(model, example_inputs: Mapping[str, Any] | None = None, *,
     ``telemetry=True`` records one span per compiler pass (and is a
     distinct plan-cache key, so the passes genuinely re-run) — pair with
     ``gcv.trace_to(path)`` to capture them to a file.
+
+    ``devices=``/``mesh=`` turn on batch-axis data parallelism:
+    ``devices`` is an int (the first N ``jax.devices()``) or a device
+    sequence, ``mesh`` a pre-built 1-D ``("data",)`` mesh.  Every
+    ``.batched(n)`` runner then shards its leading axis over the mesh
+    (``n`` divisible by the device count) with the resident weights
+    replicated once per device; a one-device mesh falls back to the
+    existing single-device runner.  Outputs are bit-for-bit identical to
+    the single-device runner at the same batch size.
     """
     opts = _resolve_options(options, option_overrides)
+    dmesh = _resolve_mesh(devices, mesh)
     if isinstance(model, ExecutionPlan):
         assert example_inputs is None, \
             "an ExecutionPlan is already compiled; example_inputs are " \
@@ -392,14 +452,14 @@ def compile(model, example_inputs: Mapping[str, Any] | None = None, *,
             select_kernels(model, kernels=opts.kernels,
                            autotune_cache=opts.autotune_cache)
         return CompiledModel(model, graph=None, options=opts,
-                             residency=residency, batch=batch)
+                             residency=residency, batch=batch, mesh=dmesh)
     if isinstance(model, Graph):
         assert example_inputs is None, \
             "a layer Graph declares its own inputs; example_inputs are " \
             "only for tracing a callable"
         plan = cached_plan(model, opts)
         return CompiledModel(plan, graph=model, options=opts,
-                             residency=residency, batch=batch)
+                             residency=residency, batch=batch, mesh=dmesh)
     assert callable(model), \
         f"cannot compile {type(model).__name__}: expected a JAX " \
         f"callable, a Graph, or an ExecutionPlan"
@@ -441,13 +501,14 @@ def compile(model, example_inputs: Mapping[str, Any] | None = None, *,
         name=name or getattr(model, "__name__", None) or "traced")
     plan = cached_plan(graph, opts)
     return CompiledModel(plan, graph=graph, options=opts,
-                         residency=residency, batch=batch)
+                         residency=residency, batch=batch, mesh=dmesh)
 
 
 def serve(models: Mapping[str, Any], *,
           options: CompileOptions | None = None, max_batch: int = 8,
           jit: bool = True,
           pipeline_depth: int = 2, residency: bool = True, warmup=False,
+          devices=None, mesh=None,
           **option_overrides):
     """Build the micro-batching serving engine from models, not plumbing.
 
@@ -460,12 +521,21 @@ def serve(models: Mapping[str, Any], *,
     returning — no live request ever traces.  The engine's ``stats()``
     reads from its own ``obs.MetricsRegistry``; run it inside
     ``gcv.trace_to(path)`` to capture per-batch and per-request spans.
+
+    ``devices=``/``mesh=`` serve over a device mesh: every bucketed
+    runner shards its batch axis across the 1-D data mesh (weights
+    replicated once per device), buckets stay powers of two but must be
+    divisible by the device count, and the engine keeps its pipeline
+    accounting per device.  Migration: ``gcv.serve(models, devices=N)``
+    is the whole change — submit/dispatch/harvest/stats keep their
+    single-device contract, and a one-device mesh falls back to exactly
+    the old engine.
     """
     from repro.serve.gnncv import GNNCVServeEngine
     opts = _resolve_options(options, option_overrides)
     eng = GNNCVServeEngine(dict(models), options=opts, max_batch=max_batch,
                            jit=jit, pipeline_depth=pipeline_depth,
-                           residency=residency)
+                           residency=residency, devices=devices, mesh=mesh)
     if warmup:
         eng.warmup()
     return eng

@@ -62,12 +62,22 @@ def sampled_matmul(x, y, mask, *, elementwise=True, use_pallas=True):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("stride", "padding", "use_pallas"))
-def conv2d(x, w, *, stride=1, padding="SAME", use_pallas=True):
-    """Batched conv. x: (B, c_in, H, W) or (c_in, H, W)."""
+                   static_argnames=("stride", "padding", "groups",
+                                    "dilation", "use_pallas"))
+def conv2d(x, w, *, stride=1, padding="SAME", groups=1, dilation=(1, 1),
+           use_pallas=True):
+    """Batched conv. x: (B, c_in, H, W) or (c_in, H, W).
+
+    ``groups``/``dilation`` (feature grouping, atrous kernels) only exist
+    on the XLA-native path — Step 4b's ``_candidates`` never offers
+    Pallas for them, and this seam enforces that contract."""
+    grouped = groups != 1 or tuple(dilation) != (1, 1)
+    assert not (use_pallas and grouped), \
+        "grouped/dilated conv has no Pallas shift-GEMM realization"
     fn = (functools.partial(shift_conv2d, stride=stride, padding=padding)
           if use_pallas else
-          functools.partial(ref.conv2d_ref, stride=stride, padding=padding))
+          functools.partial(ref.conv2d_ref, stride=stride, padding=padding,
+                            groups=groups, dilation=tuple(dilation)))
     if x.ndim == 3:
         return fn(x, w)
     return jax.vmap(lambda xi: fn(xi, w))(x)

@@ -39,13 +39,17 @@ def sddmm_ref(x, y, mask, *, elementwise=True, out_dtype=None):
     return out.astype(out_dtype or x.dtype)
 
 
-def conv2d_ref(x, w, *, stride=1, padding="SAME"):
-    """x: (c_in, H, W), w: (k1, k2, c_in, c_out) -> (c_out, H', W')."""
+def conv2d_ref(x, w, *, stride=1, padding="SAME", groups=1,
+               dilation=(1, 1)):
+    """x: (c_in, H, W), w: (k1, k2, c_in_per_group, c_out) ->
+    (c_out, H', W').  ``groups`` = XLA's feature_group_count, ``dilation``
+    = rhs (kernel/atrous) dilation."""
     strides = (stride, stride) if isinstance(stride, int) else tuple(stride)
     lhs = x[None].astype(jnp.float32)                    # NCHW
     rhs = jnp.transpose(w, (3, 2, 0, 1)).astype(jnp.float32)  # OIHW
     out = jax.lax.conv_general_dilated(
         lhs, rhs, window_strides=strides, padding=padding,
+        rhs_dilation=tuple(dilation), feature_group_count=groups,
         dimension_numbers=("NCHW", "OIHW", "NCHW"))
     return out[0].astype(x.dtype)
 

@@ -183,6 +183,12 @@ class Tracer:
             self.events.append(ev)
 
     # -------------------------------------------------------------- export --
+    # Events carrying an integer ``device`` attribute (sharded serving:
+    # serve.dispatch / serve.harvest / request) are routed to a synthetic
+    # per-device track so Perfetto shows one swim-lane per device; offset
+    # keeps the tracks clear of real thread tids.
+    DEVICE_TID_BASE = 1000
+
     def to_chrome(self) -> dict:
         """The trace as a Chrome/Perfetto trace-event object."""
         pid = os.getpid()
@@ -192,6 +198,13 @@ class Tracer:
                    "args": dict(sp.args)}
                   for sp in self.spans]
         events.extend(self.events)
+        devices = set()
+        for e in events:
+            dev = e.get("args", {}).get("device")
+            if isinstance(dev, int) and not isinstance(dev, bool) \
+                    and dev >= 0:
+                e["tid"] = self.DEVICE_TID_BASE + dev
+                devices.add(dev)
         events.sort(key=lambda e: e["ts"])
         if events and events[0]["ts"] < 0:
             # a retroactive event can predate the epoch (a request
@@ -201,7 +214,13 @@ class Tracer:
             shift = -events[0]["ts"]
             for e in events:
                 e["ts"] += shift
-        return {"traceEvents": events, "displayTimeUnit": "ms",
+        # name the device tracks (metadata "M" events carry no ts and sort
+        # first in viewers regardless of position)
+        meta = [{"name": "thread_name", "ph": "M", "pid": pid,
+                 "tid": self.DEVICE_TID_BASE + d,
+                 "args": {"name": f"device {d}"}}
+                for d in sorted(devices)]
+        return {"traceEvents": meta + events, "displayTimeUnit": "ms",
                 "otherData": {"producer": "repro.obs", "pid": pid}}
 
     def export_chrome_trace(self, path) -> pathlib.Path:

@@ -23,6 +23,16 @@ axis is requests-per-compiled-plan, not tokens-per-slot:
     blocks on the oldest in-flight batch and materializes results.
     ``pipeline_depth`` bounds in-flight batches (depth 1 = the old
     synchronous step);
+  * with ``devices=``/``mesh=`` the engine serves over a 1-D ``data``
+    mesh: every bucketed runner shards its batch axis across the devices
+    (weights replicated once per device by the residency layer), buckets
+    stay powers of two but never drop below the device count, and padded
+    positions are placed round-robin (position j -> device j % ndev) so
+    pad waste spreads evenly — ``stats()['pad_per_device']`` accounts for
+    it per device.  Each SPMD batch occupies a row-block on every device,
+    so the per-device in-flight queues advance in lockstep and
+    ``pipeline_depth`` bounds each device's queue.  A one-device mesh
+    falls back to exactly the single-device engine;
   * the Step-6 liveness annotations bound the per-sample activation
     working set; ``plan.peak_live_bytes() x batch`` is the planner's
     sizing model for a server (under jit, XLA's own buffer reuse — which
@@ -76,6 +86,12 @@ class _BatchInfo:
     bucket: int
     pad: int
     t_dispatch: float
+    devices: int = 1
+    # row placement under sharding: padded position j sits at stacked row
+    # rows[j]; empty tuple = identity (single device)
+    rows: tuple = ()
+    shard_n: tuple = ()                # real requests per device
+    pad_per_dev: tuple = ()            # pad rows per device
 
 
 class GNNCVServeEngine:
@@ -88,20 +104,38 @@ class GNNCVServeEngine:
     through ``gcv.compile`` with this engine's options; pre-compiled
     models keep their own.  Kernel realizations are per-op compile-time
     plan state (``options.kernels``).
+
+    ``devices=``/``mesh=`` select the batch-sharded serving path (see the
+    module docstring); models the engine compiles itself inherit the
+    mesh, and pre-compiled models must have been compiled over the *same*
+    mesh — a model sharded differently from the engine's dispatch
+    placement would silently misattribute rows to devices.
     """
 
     def __init__(self, models=None, *,
                  options: CompileOptions = CompileOptions(),
                  max_batch: int = 8, jit: bool = True,
-                 pipeline_depth: int = 2, residency: bool = True):
+                 pipeline_depth: int = 2, residency: bool = True,
+                 devices=None, mesh=None):
         from repro import gcv                  # late: gcv builds engines
         assert models, "GNNCVServeEngine needs at least one model"
         self.options = options
+        self.mesh = gcv._resolve_mesh(devices, mesh)
+        ndev = self.mesh.size if self.mesh is not None else 1
+        self._ndev = ndev
         # power of two keeps _bucket's doubling landing on the cap and the
         # runner cache on its log2(max_batch)+1 contract; rejecting other
         # values beats silently serving at a different capacity
         assert max_batch >= 1 and max_batch & (max_batch - 1) == 0, \
             f"max_batch must be a power of two, got {max_batch}"
+        # every bucket must shard evenly; divisors of a power of two are
+        # powers of two, so this also pins the device count to 1, 2, 4, ...
+        assert max_batch % ndev == 0, \
+            f"max_batch={max_batch} must be divisible by the device " \
+            f"count ({ndev}) so every bucket shards evenly"
+        assert jit or ndev == 1, \
+            "multi-device serving shards through jitted programs — " \
+            "jit=False is single-device only"
         assert pipeline_depth >= 1, \
             f"pipeline_depth must be >= 1, got {pipeline_depth}"
         self.max_batch = max_batch
@@ -111,6 +145,11 @@ class GNNCVServeEngine:
         self.models: dict[str, gcv.CompiledModel] = {}
         for task, model in dict(models).items():
             if isinstance(model, gcv.CompiledModel):
+                assert model.mesh == self.mesh, \
+                    f"task {task!r}: pre-compiled model mesh " \
+                    f"{model.mesh} does not match the engine's " \
+                    f"{self.mesh} — compile it with the same devices=/" \
+                    f"mesh=, or hand the engine its graph/plan instead"
                 self.models[task] = model
             else:
                 fn, example = model if isinstance(model, tuple) \
@@ -122,7 +161,7 @@ class GNNCVServeEngine:
                     f"pre-compiled model"
                 self.models[task] = gcv.compile(
                     fn, example, options=options,
-                    residency=residency, name=task)
+                    residency=residency, name=task, mesh=self.mesh)
         self.plans = {t: m.plan for t, m in self.models.items()}
         # Back-compat view (pre-façade engines were keyed on raw graphs);
         # plan-only models have no graph to expose.
@@ -131,6 +170,10 @@ class GNNCVServeEngine:
         self._rid = itertools.count()
         self._inflight: deque[tuple[list[TaskRequest], tuple,
                                     _BatchInfo]] = deque()
+        # per-device dispatch queues: every SPMD batch occupies a row-block
+        # on every device, so each deque mirrors the master _inflight and
+        # pipeline_depth bounds each device's queue (== the master's depth)
+        self._dev_inflight: list[deque] = [deque() for _ in range(ndev)]
         self._warmed: set[tuple[str, int]] = set()
         # Engine-owned instruments — stats() reads these, never its own
         # tallies.  Owned (not process-global) so two engines in one
@@ -140,6 +183,8 @@ class GNNCVServeEngine:
         self._c_completed = self.metrics.counter("completed")
         self._c_dispatches = self.metrics.counter("dispatches")
         self._c_padded = self.metrics.counter("padded")
+        self._c_pad_dev = [self.metrics.counter(f"padded.device{d}")
+                           for d in range(ndev)]
         self._h_sojourn = self.metrics.histogram("sojourn_ms")
         self._h_queue = self.metrics.histogram("queue_ms")
         self._t_first_dispatch: float | None = None
@@ -186,6 +231,11 @@ class GNNCVServeEngine:
     def inflight(self) -> int:
         return sum(len(reqs) for reqs, _, _ in self._inflight)
 
+    def inflight_per_device(self) -> list[int]:
+        """In-flight batches per device track (lockstep under SPMD — each
+        batch occupies every device — so these only differ transiently)."""
+        return [len(dq) for dq in self._dev_inflight]
+
     def stats(self) -> dict:
         """One read over the engine's metrics registry plus the process
         plan/runner-cache effectiveness counters.
@@ -219,6 +269,9 @@ class GNNCVServeEngine:
                 "pending": self.pending(), "inflight": self.inflight(),
                 "tasks": len(self.models), "warmed": len(self._warmed),
                 "padded": self._c_padded.value,
+                "devices": self._ndev,
+                "pad_per_device": [c.value for c in self._c_pad_dev],
+                "inflight_per_device": self.inflight_per_device(),
                 "p50_sojourn_ms": self._h_sojourn.percentile(50),
                 "p95_sojourn_ms": self._h_sojourn.percentile(95),
                 "p50_queue_ms": self._h_queue.percentile(50),
@@ -227,17 +280,17 @@ class GNNCVServeEngine:
                 "per_task": per_task,
                 **cache_stats()}
 
-    @staticmethod
-    def _bucket(n: int, cap: int) -> int:
-        b = 1
+    def _bucket(self, n: int, cap: int) -> int:
+        b = self._ndev            # floor: at least one row per device
         while b < n and b < cap:
             b *= 2
         return min(b, cap)
 
     def buckets(self) -> list[int]:
-        """Every batch size the engine can dispatch: powers of two up to
+        """Every batch size the engine can dispatch: powers of two from
+        the device count (each device needs at least one row) up to
         ``max_batch``."""
-        out, b = [], 1
+        out, b = [], self._ndev
         while b <= self.max_batch:
             out.append(b)
             b *= 2
@@ -290,7 +343,15 @@ class GNNCVServeEngine:
 
         Outputs stay as in-flight device arrays — JAX's async dispatch
         means the host returns here immediately and can assemble the next
-        batch while the device executes this one."""
+        batch while the device executes this one.
+
+        Under a mesh, requests are placed round-robin across the device
+        shards: padded position ``j`` lands on device ``j % ndev``, and
+        since ``NamedSharding(P("data"))`` splits dim 0 into contiguous
+        blocks of ``bucket // ndev`` rows, ``j``'s stacked row is
+        ``(j % ndev) * (bucket // ndev) + j // ndev``.  Pad positions
+        (``take..bucket-1``) thereby spread (near-)evenly across devices
+        instead of piling onto the last shard."""
         ready = [t for t, q in self.queues.items() if q]
         if not ready:
             return 0
@@ -300,20 +361,45 @@ class GNNCVServeEngine:
         bucket = self._bucket(take, self.max_batch)
         reqs = [queue.popleft() for _ in range(take)]
         padded = reqs + [reqs[-1]] * (bucket - take)
+        ndev = self._ndev
+        rows = tuple((j % ndev) * (bucket // ndev) + j // ndev
+                     for j in range(bucket))      # identity when ndev == 1
+        samples: list = [None] * bucket
+        for j, r in enumerate(rows):
+            samples[r] = padded[j].inputs
+        shard_n = tuple(sum(1 for j in range(take) if j % ndev == d)
+                        for d in range(ndev))
+        pad_per_dev = tuple(sum(1 for j in range(take, bucket)
+                                if j % ndev == d) for d in range(ndev))
+        t0 = obs.now()
         info = _BatchInfo(self._c_dispatches.value, task, bucket,
-                          bucket - take, obs.now())
-        with obs.span("serve.dispatch", cat="serve", task=task,
-                      bucket=bucket, batch_id=info.batch_id, n=take,
-                      pad=info.pad):
-            run = self._runner(task, bucket)
-            outs = run(**self._stack([r.inputs for r in padded]))
+                          bucket - take, t0, devices=ndev, rows=rows,
+                          shard_n=shard_n, pad_per_dev=pad_per_dev)
+        run = self._runner(task, bucket)
+        outs = run(**self._stack(samples))
+        t1 = obs.now()
+        if obs.enabled():
+            # one retroactive dispatch span per device track (exactly one
+            # on a single-device engine): the global batch identity plus
+            # this shard's real-row/pad split
+            for d in range(ndev):
+                obs.complete("serve.dispatch", t0, t1, cat="serve",
+                             task=task, bucket=bucket,
+                             batch_id=info.batch_id, n=take, pad=info.pad,
+                             device=d, shard_n=shard_n[d],
+                             shard_pad=pad_per_dev[d])
         if self._t_first_dispatch is None:
             self._t_first_dispatch = info.t_dispatch
         for r in reqs:
             r.t_dispatch = info.t_dispatch
         self._inflight.append((reqs, outs, info))
+        for dq in self._dev_inflight:
+            dq.append(info)
         self._c_dispatches.inc()
         self._c_padded.inc(info.pad)
+        for d in range(ndev):
+            if pad_per_dev[d]:
+                self._c_pad_dev[d].inc(pad_per_dev[d])
         return len(reqs)
 
     def harvest(self) -> int:
@@ -327,14 +413,26 @@ class GNNCVServeEngine:
         if not self._inflight:
             return 0
         reqs, outs, info = self._inflight.popleft()
-        with obs.span("serve.harvest", cat="serve", task=info.task,
-                      batch_id=info.batch_id, bucket=info.bucket,
-                      n=len(reqs)):
-            mats = [np.asarray(o) for o in outs]
+        for dq in self._dev_inflight:
+            if dq:
+                dq.popleft()
+        t0 = obs.now()
+        mats = [np.asarray(o) for o in outs]
         done = obs.now()
         traced = obs.enabled()
+        if traced:
+            # one retroactive harvest span per device track (exactly one
+            # on a single-device engine)
+            for d in range(info.devices):
+                obs.complete("serve.harvest", t0, done, cat="serve",
+                             task=info.task, batch_id=info.batch_id,
+                             bucket=info.bucket, n=len(reqs), device=d,
+                             shard_n=(info.shard_n[d] if info.shard_n
+                                      else len(reqs)))
+        rows = info.rows
         for i, req in enumerate(reqs):
-            req.result = tuple(np.array(m[i]) for m in mats)
+            row = rows[i] if rows else i    # undo the shard placement
+            req.result = tuple(np.array(m[row]) for m in mats)
             req.done = True
             req.t_done = done
             self._h_sojourn.observe((done - req.t_submit) * 1e3)
@@ -346,7 +444,7 @@ class GNNCVServeEngine:
                 obs.complete("request", req.t_submit, done, cat="serve",
                              rid=req.rid, task=req.task,
                              batch_id=info.batch_id, bucket=info.bucket,
-                             pad=info.pad,
+                             pad=info.pad, device=i % info.devices,
                              queued_ms=round(
                                  (req.t_dispatch - req.t_submit) * 1e3, 3))
         self._c_completed.inc(len(reqs))
@@ -375,7 +473,8 @@ class GNNCVServeEngine:
             n = self.dispatch()
             if n == 0 and not self._inflight:
                 break          # dispatch()==0 means every queue is empty
-            if n == 0 or len(self._inflight) >= self.pipeline_depth:
+            if n == 0 or max(len(dq) for dq in self._dev_inflight) \
+                    >= self.pipeline_depth:
                 served += self.harvest()
         while self._inflight:
             served += self.harvest()

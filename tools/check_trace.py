@@ -7,21 +7,34 @@ renamed, a span never closed), should fail the job rather than upload a
 useless artifact.
 
     python tools/check_trace.py TRACE_compile.json compile pass.fusion ...
+    python tools/check_trace.py TRACE_serve_gnncv.json \
+        serve.dispatch serve.harvest request \
+        --device-spans serve.dispatch,serve.harvest,request --min-devices 2
 
-Arguments: the trace path, then one or more span names that must each
-appear at least once as a complete ("ph": "X") event.  Also checks the
+Positional arguments: the trace path, then one or more span names that must
+each appear at least once as a complete ("ph": "X") event.  Also checks the
 trace-event schema basics every viewer relies on: a ``traceEvents`` list
 whose complete events carry name/ts/dur/pid/tid with numeric non-negative
-ts/dur.  Exit 1 with one line per problem.
+ts/dur (metadata "M" and instant "i" events are exempt).
+
+``--device-spans`` names spans from the sharded serving path: every
+complete event with one of those names must carry an integer
+``args.device >= 0`` (the per-device trace track the exporter routes it
+to).  ``--min-devices N`` additionally requires at least N distinct
+device ids across those events — the multi-device CI job uses it to catch
+a sweep that silently ran single-device.  Exit 1 with one line per
+problem.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 import sys
 
 
-def check(path: str, required: list[str]) -> list[str]:
+def check(path: str, required: list[str], *,
+          device_spans: list[str] = (), min_devices: int = 0) -> list[str]:
     problems = []
     p = pathlib.Path(path)
     if not p.exists():
@@ -50,19 +63,48 @@ def check(path: str, required: list[str]) -> list[str]:
         if want not in names:
             problems.append(f"{path}: required span {want!r} absent "
                             f"(have: {sorted(names)})")
+    if device_spans:
+        devices: set[int] = set()
+        for e in complete:
+            if e.get("name") not in device_spans:
+                continue
+            dev = e.get("args", {}).get("device")
+            if not (isinstance(dev, int) and not isinstance(dev, bool)
+                    and dev >= 0):
+                problems.append(
+                    f"{path}: {e['name']!r} event lacks an integer "
+                    f"args.device >= 0 (got {dev!r})")
+            else:
+                devices.add(dev)
+        if len(devices) < min_devices:
+            problems.append(
+                f"{path}: device spans cover {len(devices)} device(s) "
+                f"{sorted(devices)}, need >= {min_devices}")
     return problems
 
 
 def main(argv: list[str]) -> int:
-    if len(argv) < 2:
-        print("usage: check_trace.py TRACE.json span [span ...]")
-        return 2
-    problems = check(argv[0], argv[1:])
+    ap = argparse.ArgumentParser(prog="check_trace.py")
+    ap.add_argument("trace", help="Chrome trace-event JSON to validate")
+    ap.add_argument("spans", nargs="+",
+                    help="span names that must appear as complete events")
+    ap.add_argument("--device-spans", default="",
+                    help="comma-separated span names that must each carry "
+                         "an integer args.device")
+    ap.add_argument("--min-devices", type=int, default=0,
+                    help="minimum distinct args.device ids across "
+                         "--device-spans events")
+    ns = ap.parse_args(argv)
+    device_spans = [s for s in ns.device_spans.split(",") if s]
+    problems = check(ns.trace, ns.spans, device_spans=device_spans,
+                     min_devices=ns.min_devices)
     for line in problems:
         print(line)
     if problems:
         return 1
-    print(f"check_trace: OK ({argv[0]}: all of {argv[1:]} present)")
+    extra = (f", device tracks on {device_spans}" if device_spans else "")
+    print(f"check_trace: OK ({ns.trace}: all of {ns.spans} "
+          f"present{extra})")
     return 0
 
 
