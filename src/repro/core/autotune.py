@@ -28,6 +28,7 @@ import json
 import math
 import os
 import pathlib
+import tempfile
 import time
 
 import numpy as np
@@ -51,6 +52,13 @@ def op_signature(op, backend: str) -> str:
         w = op.weights["w"]
         dims = "x".join(str(d) for d in (*w.shape, *op.out_shape))
         dims += f"|st{a.get('stride')}|{a.get('padding')}"
+        groups = a.get("groups", 1)
+        dil = a.get("dilation", (1, 1))
+        dil = (dil, dil) if isinstance(dil, int) else tuple(dil)
+        if groups != 1 or dil != (1, 1):
+            # appended only when non-trivial: ordinary convs keep their
+            # pre-grouping signatures (warm caches stay warm)
+            dims += f"|g{groups}|d{dil[0]}x{dil[1]}"
     facet = a.get("weight_side", a.get("exec", ""))
     ell_l = op.ell[0].shape[1] if op.ell is not None else 0
     return "|".join([op.kind, str(facet), dims, f"L{ell_l}",
@@ -62,6 +70,13 @@ class AutotuneCache:
 
     ``measured_now`` counts signatures measured by *this* process — a warm
     cache round-trips with it at zero (the round-trip test's contract).
+
+    Writes are concurrency-safe for the CI / multi-engine case: ``save``
+    re-reads the file, merges disk entries under this process's (per
+    signature, this process's kernel timings win, foreign signatures are
+    kept), and publishes via tempfile + ``os.replace`` — atomic on POSIX,
+    so a reader never sees a torn JSON and two writers lose nothing but a
+    re-measurement.
     """
 
     def __init__(self, path: str | os.PathLike | None = None):
@@ -72,7 +87,10 @@ class AutotuneCache:
         self.measured_now = 0
         self.hits = 0
         if self.path.exists():
-            blob = json.loads(self.path.read_text())
+            try:
+                blob = json.loads(self.path.read_text())
+            except (OSError, json.JSONDecodeError):
+                blob = {}              # torn/corrupt file: start cold
             if blob.get("version") == _VERSION:
                 self.entries = blob.get("entries", {})
 
@@ -86,9 +104,32 @@ class AutotuneCache:
     def save(self) -> None:
         if not self.dirty:
             return
-        self.path.write_text(json.dumps(
-            {"version": _VERSION, "entries": self.entries},
-            indent=1, sort_keys=True))
+        if self.path.exists():
+            try:
+                blob = json.loads(self.path.read_text())
+            except (OSError, json.JSONDecodeError):
+                blob = {}
+            if blob.get("version") == _VERSION:
+                # merge-on-save: keep signatures another writer added; on
+                # shared signatures our timings win per kernel
+                for sig, timings in blob.get("entries", {}).items():
+                    mine = self.entries.get(sig)
+                    self.entries[sig] = dict(timings) if mine is None \
+                        else {**timings, **mine}
+        payload = json.dumps({"version": _VERSION, "entries": self.entries},
+                             indent=1, sort_keys=True)
+        tmp = None
+        try:
+            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                       prefix=self.path.name + ".",
+                                       suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                f.write(payload)
+            os.replace(tmp, self.path)    # atomic publish
+            tmp = None
+        finally:
+            if tmp is not None and os.path.exists(tmp):
+                os.unlink(tmp)
         self.dirty = False
 
 
@@ -115,19 +156,25 @@ def _realization(op, kernel: str, rng):
     a = op.attrs
     f32 = np.float32
     if op.kind == "conv":
-        k1, k2, cin, cout = op.weights["w"].shape
+        k1, k2, cin_g, cout = op.weights["w"].shape
+        groups = a.get("groups", 1)
+        dil = a.get("dilation", (1, 1))
+        dil = (dil, dil) if isinstance(dil, int) else tuple(dil)
+        ke1, ke2 = (k1 - 1) * dil[0] + 1, (k2 - 1) * dil[1] + 1
         ho, wo = op.out_shape[-2:]
         st = a["stride"]
         sh, sw = (st, st) if isinstance(st, int) else st
         if a["padding"] == "SAME":
             h, w = ho * sh, wo * sw
         else:
-            h, w = (ho - 1) * sh + k1, (wo - 1) * sw + k2
-        x = jnp.asarray(rng.standard_normal((cin, h, w)), dtype=f32)
+            h, w = (ho - 1) * sh + ke1, (wo - 1) * sw + ke2
+        x = jnp.asarray(rng.standard_normal((cin_g * groups, h, w)),
+                        dtype=f32)
         wgt = jnp.asarray(op.weights["w"], dtype=f32)
         pall = kernel == "pallas_ddmm"
         return (lambda xi, wi: kops.conv2d(
-            xi, wi, stride=st, padding=a["padding"], use_pallas=pall),
+            xi, wi, stride=st, padding=a["padding"], groups=groups,
+            dilation=dil, use_pallas=pall),
             (x, wgt))
     s1, s2, s3 = a.get("s1", 1), a.get("s2", 1), a.get("s3", 1)
     if kernel in ("xla_ell_spdmm", "pallas_ell_spdmm"):

@@ -126,11 +126,8 @@ def _candidates(op: MatOp) -> tuple[list[str], str | None]:
     """The realization family of one op (XLA member first), plus the
     reason when the family is a singleton."""
     if op.kind == "conv":
-        if op.attrs.get("groups", 1) != 1 \
-                or tuple(op.attrs.get("dilation", (1, 1))) != (1, 1):
-            return ["xla_dense"], ("grouped/dilated conv has no Pallas "
-                                   "shift-GEMM realization — XLA native "
-                                   "only")
+        # grouped/dilated convs included: the shift-GEMM kernel runs one
+        # per-group pass with dilation-scaled tap offsets
         return ["xla_dense", "pallas_ddmm"], None
     if op.kind == "mm":
         side = op.attrs["weight_side"]

@@ -508,7 +508,8 @@ def serve(models: Mapping[str, Any], *,
           options: CompileOptions | None = None, max_batch: int = 8,
           jit: bool = True,
           pipeline_depth: int = 2, residency: bool = True, warmup=False,
-          devices=None, mesh=None,
+          devices=None, mesh=None, slo_ms: float | None = None,
+          scheduler=None, max_pipeline_depth: int | None = None,
           **option_overrides):
     """Build the micro-batching serving engine from models, not plumbing.
 
@@ -530,12 +531,26 @@ def serve(models: Mapping[str, Any], *,
     is the whole change — submit/dispatch/harvest/stats keep their
     single-device contract, and a one-device mesh falls back to exactly
     the old engine.
+
+    ``slo_ms=`` configures continuous batching for deadline goodput: it
+    is the default per-request deadline (``submit`` may override with
+    ``deadline_ms=``/``priority=``), switches the default scheduling
+    policy to the SLO-aware one (``scheduler=`` names ``"fifo"``/
+    ``"slo"`` or passes a custom ``serve.Scheduler``), and turns on
+    adaptive pipeline depth within ``[1, max_pipeline_depth]`` — deepen
+    under queue growth, shrink when recent p95 sojourn nears the SLO.
+    Drive an open-loop arrival schedule with ``engine.stream(...)`` or
+    pump ``engine.poll()`` yourself.  Migration: ``engine.run()`` on a
+    pre-submitted list without ``slo_ms`` is unchanged — the FIFO policy
+    at fixed depth is bit-for-bit the closed-batch engine.
     """
     from repro.serve.gnncv import GNNCVServeEngine
     opts = _resolve_options(options, option_overrides)
     eng = GNNCVServeEngine(dict(models), options=opts, max_batch=max_batch,
                            jit=jit, pipeline_depth=pipeline_depth,
-                           residency=residency, devices=devices, mesh=mesh)
+                           residency=residency, devices=devices, mesh=mesh,
+                           slo_ms=slo_ms, scheduler=scheduler,
+                           max_pipeline_depth=max_pipeline_depth)
     if warmup:
         eng.warmup()
     return eng

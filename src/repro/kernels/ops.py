@@ -68,13 +68,12 @@ def conv2d(x, w, *, stride=1, padding="SAME", groups=1, dilation=(1, 1),
            use_pallas=True):
     """Batched conv. x: (B, c_in, H, W) or (c_in, H, W).
 
-    ``groups``/``dilation`` (feature grouping, atrous kernels) only exist
-    on the XLA-native path — Step 4b's ``_candidates`` never offers
-    Pallas for them, and this seam enforces that contract."""
-    grouped = groups != 1 or tuple(dilation) != (1, 1)
-    assert not (use_pallas and grouped), \
-        "grouped/dilated conv has no Pallas shift-GEMM realization"
-    fn = (functools.partial(shift_conv2d, stride=stride, padding=padding)
+    ``groups``/``dilation`` (feature grouping, atrous kernels) exist on
+    both realizations: the Pallas path runs one shift-GEMM per group with
+    dilation-scaled tap offsets (``shift_conv2d``), so Step 4b's
+    ``_candidates`` offers the full conv family either way."""
+    fn = (functools.partial(shift_conv2d, stride=stride, padding=padding,
+                            groups=groups, dilation=tuple(dilation))
           if use_pallas else
           functools.partial(ref.conv2d_ref, stride=stride, padding=padding,
                             groups=groups, dilation=tuple(dilation)))

@@ -32,7 +32,7 @@ from repro.kernels._util import CompilerParams, default_interpret, pad_to, unpad
 
 
 def _shift_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int,
-                       k1: int, k2: int):
+                       k1: int, k2: int, dh: int, dw: int):
     @pl.when(pl.program_id(1) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -44,9 +44,12 @@ def _shift_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int,
     bm = acc_ref.shape[0]
     for dy in range(k1):                # statically unrolled taps
         for dx in range(k2):
-            shifted = x if (dy == 0 and dx == 0) else jnp.roll(
-                x, (-dy, -dx), (1, 2))
-            shifted = jnp.where((yy < H - dy) & (xx < W - dx), shifted, 0.0)
+            # atrous taps: tap (dy, dx) reads dy*dh rows / dx*dw cols away
+            # — same shift-add merge, offsets scaled by the dilation
+            oy, ox = dy * dh, dx * dw
+            shifted = x if (oy == 0 and ox == 0) else jnp.roll(
+                x, (-oy, -ox), (1, 2))
+            shifted = jnp.where((yy < H - oy) & (xx < W - ox), shifted, 0.0)
             km = w_ref[dy, dx]          # (bk, bm)
             part = jnp.dot(km.T, shifted.reshape(x.shape[0], H * W),
                            preferred_element_type=jnp.float32)
@@ -58,10 +61,14 @@ def _shift_conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int,
 
 
 def _shift_conv_valid(x: jax.Array, w: jax.Array, *, bm: int, bk: int,
-                      out_dtype, interpret: bool) -> jax.Array:
-    """VALID correlation, x: (c_in, H, W), w: (k1, k2, c_in, c_out)."""
+                      out_dtype, interpret: bool,
+                      dilation: tuple = (1, 1)) -> jax.Array:
+    """VALID correlation, x: (c_in, H, W), w: (k1, k2, c_in, c_out);
+    ``dilation`` scales the tap offsets (effective extent (k-1)*d+1)."""
     c_in, H, W = x.shape
     k1, k2, _, c_out = w.shape
+    dh, dw = dilation
+    ke1, ke2 = (k1 - 1) * dh + 1, (k2 - 1) * dw + 1
     bm = min(bm, max(8, pl.next_power_of_2(c_out)))
     bk = min(bk, max(8, pl.next_power_of_2(c_in)))
     xp = pad_to(x, (bk, 1, 1))
@@ -69,7 +76,8 @@ def _shift_conv_valid(x: jax.Array, w: jax.Array, *, bm: int, bk: int,
     nk = xp.shape[0] // bk
     grid = (wp.shape[3] // bm, nk)
     out = pl.pallas_call(
-        functools.partial(_shift_conv_kernel, nk=nk, k1=k1, k2=k2),
+        functools.partial(_shift_conv_kernel, nk=nk, k1=k1, k2=k2,
+                          dh=dh, dw=dw),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bk, H, W), lambda i, k: (k, 0, 0)),
@@ -82,32 +90,55 @@ def _shift_conv_valid(x: jax.Array, w: jax.Array, *, bm: int, bk: int,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(xp, wp)
-    return unpad(out, (c_out, H, W))[:, : H - k1 + 1, : W - k2 + 1]
+    return unpad(out, (c_out, H, W))[:, : H - ke1 + 1, : W - ke2 + 1]
 
 
 def shift_conv2d(x: jax.Array, w: jax.Array, *, stride=1,
-                 padding: str = "SAME", bm: int = 128, bk: int = 128,
+                 padding: str = "SAME", groups: int = 1, dilation=(1, 1),
+                 bm: int = 128, bk: int = 128,
                  out_dtype=None, interpret: bool | None = None) -> jax.Array:
     """2-D convolution via the Fig. 7 shift-add mapping.
 
-    x: (c_in, H, W) single image (vmap for batch), w: (k1, k2, c_in, c_out).
-    ``stride`` may be an int or (sh, sw). Returns (c_out, H_out, W_out).
+    x: (c_in, H, W) single image (vmap for batch),
+    w: (k1, k2, c_in // groups, c_out).  ``stride``/``dilation`` may be an
+    int or a pair.  Returns (c_out, H_out, W_out).
+
+    ``dilation`` needs no new data movement: the statically-unrolled tap
+    loop just shifts by (dy*dh, dx*dw) instead of (dy, dx).  ``groups``
+    runs one shift-GEMM per group over its channel slices — each group is
+    an independent (c_in/g -> c_out/g) conv, merged by channel concat.
     """
     interpret = default_interpret(interpret)
     out_dtype = out_dtype or x.dtype
     k1, k2 = w.shape[0], w.shape[1]
     sh, sw = (stride, stride) if isinstance(stride, int) else stride
+    dh, dw = (dilation, dilation) if isinstance(dilation, int) \
+        else tuple(dilation)
+    ke1, ke2 = (k1 - 1) * dh + 1, (k2 - 1) * dw + 1
+    c_in, c_out = x.shape[0], w.shape[3]
+    assert c_in == w.shape[2] * groups and c_out % groups == 0, \
+        f"groups={groups} must divide c_in={c_in} (w expects " \
+        f"{w.shape[2]} per group) and c_out={c_out}"
     if padding == "SAME":
         H, W = x.shape[1:]
-        # SAME for stride s: total pad = max((ceil(H/s)-1)*s + k - H, 0)
-        ph = max((-(-H // sh) - 1) * sh + k1 - H, 0)
-        pw = max((-(-W // sw) - 1) * sw + k2 - W, 0)
+        # SAME for stride s: total pad = max((ceil(H/s)-1)*s + ke - H, 0),
+        # with ke the effective (dilated) kernel extent
+        ph = max((-(-H // sh) - 1) * sh + ke1 - H, 0)
+        pw = max((-(-W // sw) - 1) * sw + ke2 - W, 0)
         x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
                         (pw // 2, pw - pw // 2)))
     elif padding != "VALID":
         raise ValueError(padding)
-    out = _shift_conv_valid(x, w, bm=bm, bk=bk, out_dtype=out_dtype,
-                            interpret=interpret)
+    kw = dict(bm=bm, bk=bk, out_dtype=out_dtype, interpret=interpret,
+              dilation=(dh, dw))
+    if groups == 1:
+        out = _shift_conv_valid(x, w, **kw)
+    else:
+        cg, og = c_in // groups, c_out // groups
+        out = jnp.concatenate(
+            [_shift_conv_valid(x[g * cg:(g + 1) * cg],
+                               w[..., g * og:(g + 1) * og], **kw)
+             for g in range(groups)], axis=0)
     if sh > 1 or sw > 1:
         out = out[:, ::sh, ::sw]
     return out

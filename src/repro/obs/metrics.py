@@ -78,6 +78,19 @@ class Histogram:
     def mean(self) -> float | None:
         return self.total / self.count if self.count else None
 
+    def recent_mean(self, n: int = 32) -> float | None:
+        """Mean of the newest ``n`` observations (``None`` when empty) —
+        a live estimate that tracks drift instead of averaging over a
+        process lifetime; O(n), never O(maxlen).  The serving scheduler's
+        warm per-bucket service-time estimate."""
+        total, k = 0.0, 0
+        for v in reversed(self.values):
+            total += v
+            k += 1
+            if k >= n:
+                break
+        return total / k if k else None
+
     def snapshot(self) -> dict:
         return {"count": self.count, "sum": self.total, "mean": self.mean,
                 "p50": self.percentile(50), "p95": self.percentile(95)}

@@ -1,4 +1,7 @@
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.gnncv import GNNCVServeEngine, TaskRequest
+from repro.serve.scheduler import (Decision, FIFOScheduler, Scheduler,
+                                   SLOScheduler)
 
-__all__ = ["ServeEngine", "Request", "GNNCVServeEngine", "TaskRequest"]
+__all__ = ["ServeEngine", "Request", "GNNCVServeEngine", "TaskRequest",
+           "Scheduler", "Decision", "FIFOScheduler", "SLOScheduler"]

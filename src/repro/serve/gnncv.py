@@ -40,6 +40,26 @@ axis is requests-per-compiled-plan, not tokens-per-slot:
     device-resident plan state shared across every bucket of a task
     (``core.runtime.residency``), not per-bucket trace constants.
 
+Serving is **continuous**, not closed-batch: ``submit()`` timestamps
+arrivals and accepts ``deadline_ms=``/``priority=``; a pluggable scheduler
+(``repro.serve.scheduler`` — the management plane, split from the
+dispatch/harvest execution backend) picks each next ``(task, bucket)``
+dispatch, by arrival order (``"fifo"``) or by service-corrected deadline
+slack built from the Step-4b cost model plus live per-(task, bucket)
+service-time histograms (``"slo"``); ``poll()`` is the non-blocking pump
+(opportunistic harvest of finished batches via ``jax.Array.is_ready``,
+dispatch up to the current depth) and ``stream()`` replays an open-loop
+arrival schedule against the wall clock.  Under a configured ``slo_ms``
+the pipeline depth adapts: it deepens while the queue outgrows the
+in-flight window and shrinks when recent p95 sojourn approaches the SLO
+(deep pipelines buy throughput at the price of sojourn — exactly the
+wrong trade near a deadline).  Expired requests are rejected at submit
+and shed from the queues before they can waste a dispatch; ``stats()``
+reports goodput (completions within deadline) and deadline-miss rate next
+to raw req/s.  The legacy closed-batch path is a degenerate schedule:
+``run()`` on a pre-submitted list under the default FIFO policy is
+bit-for-bit the pre-stream engine.
+
 The engine is observable end to end (``repro.obs``): every lifecycle
 counter, gauge and latency percentile ``stats()`` reports is read from the
 engine's own ``MetricsRegistry`` (per-task request counters, sojourn
@@ -75,6 +95,10 @@ class TaskRequest:
     t_submit: float = 0.0              # obs.now() at intake
     t_dispatch: float = 0.0            # obs.now() when its batch launched
     t_done: float = 0.0                # obs.now() when harvested
+    deadline_s: float | None = None    # absolute obs.now() deadline
+    priority: int = 0                  # higher dispatches first (SLO policy)
+    missed_deadline: bool = False      # finished after deadline_s (or shed)
+    shed: bool = False                 # dropped unserved (result stays None)
 
 
 @dataclasses.dataclass
@@ -116,8 +140,10 @@ class GNNCVServeEngine:
                  options: CompileOptions = CompileOptions(),
                  max_batch: int = 8, jit: bool = True,
                  pipeline_depth: int = 2, residency: bool = True,
-                 devices=None, mesh=None):
+                 devices=None, mesh=None, slo_ms: float | None = None,
+                 scheduler=None, max_pipeline_depth: int | None = None):
         from repro import gcv                  # late: gcv builds engines
+        from repro.serve.scheduler import resolve_scheduler
         assert models, "GNNCVServeEngine needs at least one model"
         self.options = options
         self.mesh = gcv._resolve_mesh(devices, mesh)
@@ -138,9 +164,24 @@ class GNNCVServeEngine:
             "jit=False is single-device only"
         assert pipeline_depth >= 1, \
             f"pipeline_depth must be >= 1, got {pipeline_depth}"
+        assert slo_ms is None or slo_ms > 0, \
+            f"slo_ms must be positive, got {slo_ms}"
         self.max_batch = max_batch
         self.jit = jit
-        self.pipeline_depth = pipeline_depth
+        self.pipeline_depth = pipeline_depth   # configured starting depth
+        self.slo_ms = slo_ms
+        self.scheduler = resolve_scheduler(scheduler, slo_ms=slo_ms)
+        # adaptive-depth ceiling: a fixed-depth engine by default (the
+        # closed-batch contract), headroom to deepen once an SLO makes the
+        # throughput/sojourn trade measurable
+        if max_pipeline_depth is None:
+            max_pipeline_depth = pipeline_depth if slo_ms is None \
+                else max(pipeline_depth, 4)
+        assert max_pipeline_depth >= pipeline_depth, \
+            f"max_pipeline_depth={max_pipeline_depth} must be >= " \
+            f"pipeline_depth={pipeline_depth}"
+        self.max_pipeline_depth = max_pipeline_depth
+        self._depth = pipeline_depth           # current adaptive depth
         self.residency = residency
         self.models: dict[str, gcv.CompiledModel] = {}
         for task, model in dict(models).items():
@@ -187,6 +228,17 @@ class GNNCVServeEngine:
                            for d in range(ndev)]
         self._h_sojourn = self.metrics.histogram("sojourn_ms")
         self._h_queue = self.metrics.histogram("queue_ms")
+        # short window for depth adaptation: the all-history histogram is
+        # sticky (an early overload would depress p95 reactions forever)
+        self._h_sojourn_recent = self.metrics.histogram(
+            "sojourn_recent_ms", maxlen=256)
+        self._c_goodput = self.metrics.counter("goodput")
+        self._c_misses = self.metrics.counter("deadline_misses")
+        self._c_shed = self.metrics.counter("shed")
+        self._c_expired = self.metrics.counter("expired_at_submit")
+        self._g_queue = self.metrics.gauge("queue_depth")
+        self.metrics.gauge("pipeline_depth").set(self._depth)
+        self._plan_cost: dict[str, float] = {}
         self._t_first_dispatch: float | None = None
         self._t_last_harvest: float | None = None
 
@@ -200,10 +252,19 @@ class GNNCVServeEngine:
         return self._c_dispatches.value
 
     # ------------------------------------------------------------ intake --
-    def submit(self, task: str, **inputs) -> TaskRequest:
+    def submit(self, task: str, *, deadline_ms: float | None = None,
+               priority: int = 0, **inputs) -> TaskRequest:
         """Validated intake: a malformed request is rejected here, where it
         can only hurt its own caller — inside ``dispatch`` it would take a
-        whole popped batch down with it."""
+        whole popped batch down with it.
+
+        ``deadline_ms`` is relative to now (defaulting to the engine's
+        ``slo_ms`` when one is configured); ``priority`` breaks scheduling
+        ties under the SLO policy (higher first).  A request whose
+        deadline has already passed at submit is *admission-rejected*:
+        returned ``done`` with ``result=None``, ``missed_deadline`` set,
+        counted under ``expired_at_submit`` — it never enters a queue, so
+        a flood of hopeless work cannot displace servable requests."""
         assert task in self.models, f"unknown task {task!r}"
         plan = self.plans[task]
         missing = set(plan.input_names) - inputs.keys()
@@ -218,12 +279,57 @@ class GNNCVServeEngine:
             assert got == want, \
                 f"task {task!r}, input {name!r}: expected per-sample " \
                 f"shape {want}, got {got}"
-        req = TaskRequest(next(self._rid), task, inputs,
-                          t_submit=obs.now())
-        self.queues[task].append(req)
+        t = obs.now()
+        if deadline_ms is None:
+            deadline_ms = self.slo_ms
+        deadline_s = None if deadline_ms is None else t + deadline_ms / 1e3
+        req = TaskRequest(next(self._rid), task, inputs, t_submit=t,
+                          deadline_s=deadline_s, priority=priority)
         self._c_submitted.inc()
         self.metrics.counter(f"task.{task}.submitted").inc()
+        if deadline_s is not None and deadline_s <= t:
+            self._c_expired.inc()
+            self._finish_unserved(req, t)
+            return req
+        self.queues[task].append(req)
+        self._g_queue.set(self.pending())
+        self.metrics.gauge(f"queue_depth.{task}").set(len(self.queues[task]))
         return req
+
+    def _finish_unserved(self, req: TaskRequest, now: float) -> None:
+        """Terminal state for a request dropped without execution (expired
+        at submit, or shed from a queue): done, no result, a miss."""
+        req.done = True
+        req.shed = True
+        req.missed_deadline = True
+        req.t_done = now
+        self._c_misses.inc()
+        self.metrics.counter(f"task.{req.task}.deadline_misses").inc()
+
+    def shed_expired(self, now: float | None = None) -> int:
+        """Drop queued requests whose deadline has already passed — they
+        would consume a dispatch slot only to be counted late.  Called by
+        the SLO scheduler before each pick; a no-op on deadline-free
+        queues.  Returns the number shed."""
+        now = obs.now() if now is None else now
+        shed = 0
+        for task, q in self.queues.items():
+            if not q or not any(r.deadline_s is not None
+                                and r.deadline_s <= now for r in q):
+                continue
+            keep: deque = deque()
+            for r in q:
+                if r.deadline_s is not None and r.deadline_s <= now:
+                    self._finish_unserved(r, now)
+                    self._c_shed.inc()
+                    shed += 1
+                else:
+                    keep.append(r)
+            self.queues[task] = keep
+            self.metrics.gauge(f"queue_depth.{task}").set(len(keep))
+        if shed:
+            self._g_queue.set(self.pending())
+        return shed
 
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values())
@@ -258,12 +364,21 @@ class GNNCVServeEngine:
                     f"task.{task}.submitted").value,
                 "completed": self.metrics.counter(
                     f"task.{task}.completed").value,
+                "deadline_misses": self.metrics.counter(
+                    f"task.{task}.deadline_misses").value,
                 "req_per_s": (self.metrics.counter(
                     f"task.{task}.completed").value / elapsed
                     if elapsed else None),
             }
         self.metrics.gauge("pending").set(self.pending())
         self.metrics.gauge("inflight").set(self.inflight())
+        self._g_queue.set(self.pending())
+        goodput = self._c_goodput.value
+        misses = self._c_misses.value
+        # every terminal request lands in exactly one of goodput/misses
+        # (shed and expired-at-submit requests are misses), so the miss
+        # rate denominator is all finished work
+        finished = goodput + misses
         return {"completed": completed, "steps": self.steps,
                 "submitted": self._c_submitted.value,
                 "pending": self.pending(), "inflight": self.inflight(),
@@ -272,6 +387,18 @@ class GNNCVServeEngine:
                 "devices": self._ndev,
                 "pad_per_device": [c.value for c in self._c_pad_dev],
                 "inflight_per_device": self.inflight_per_device(),
+                "scheduler": self.scheduler.name,
+                "slo_ms": self.slo_ms,
+                "pipeline_depth": self._depth,
+                "max_pipeline_depth": self.max_pipeline_depth,
+                "goodput": goodput,
+                "deadline_misses": misses,
+                "shed": self._c_shed.value,
+                "expired_at_submit": self._c_expired.value,
+                "deadline_miss_rate": (misses / finished if finished
+                                       else None),
+                "goodput_req_per_s": (goodput / elapsed if elapsed
+                                      else None),
                 "p50_sojourn_ms": self._h_sojourn.percentile(50),
                 "p95_sojourn_ms": self._h_sojourn.percentile(95),
                 "p50_queue_ms": self._h_queue.percentile(50),
@@ -295,6 +422,55 @@ class GNNCVServeEngine:
             out.append(b)
             b *= 2
         return out
+
+    # --------------------------------------------------------- estimation --
+    def _plan_cost_seconds(self, task: str) -> float:
+        """Per-sample analytic cost of one task: the Step-4b predicted
+        seconds of every op's *chosen* kernel, summed over the plan
+        (``plan.meta['kernel_choices']``, measured timing when the plan was
+        compiled in measured mode).  The scheduler's cold-start estimate;
+        clamped positive so ranking never divides through zero."""
+        cached = self._plan_cost.get(task)
+        if cached is None:
+            total = 0.0
+            for c in self.plans[task].meta.get("kernel_choices",
+                                               {}).values():
+                src = c.get("measured_s") or c.get("predicted_s") or {}
+                total += src.get(c.get("kernel"), 0.0)
+            cached = self._plan_cost[task] = max(total, 1e-9)
+        return cached
+
+    def estimate_batch_seconds(self, task: str, bucket: int) -> float:
+        """Marginal-latency estimate for one (task, bucket) dispatch: the
+        recent mean of that bucket's *measured* service times once it has
+        served traffic, the analytic plan cost scaled by the bucket before
+        that.  This is what the SLO scheduler corrects deadlines by."""
+        h = self.metrics.histogram(f"service_ms.{task}.b{bucket}")
+        recent = h.recent_mean(32)
+        if recent is not None:
+            return recent / 1e3
+        return self._plan_cost_seconds(task) * bucket
+
+    def _adapt_depth(self) -> int:
+        """One adaptive-depth step, bounded to [1, max_pipeline_depth]:
+        deepen while the backlog outgrows the in-flight window (queue
+        growth means the device is the bottleneck — more overlap helps);
+        under an SLO, shrink when *recent* p95 sojourn nears it (in-flight
+        batches are latency a new arrival must wait out) and refuse to
+        deepen once past half of it.  Fixed-depth engines
+        (``max_pipeline_depth == pipeline_depth``, the default without an
+        SLO) never move."""
+        if self.max_pipeline_depth > 1:
+            grow = self.pending() > self._depth * self.max_batch
+            p95 = self._h_sojourn_recent.percentile(95)
+            if self.slo_ms is not None and p95 is not None \
+                    and p95 >= 0.8 * self.slo_ms:
+                self._depth = max(1, self._depth - 1)
+            elif grow and (self.slo_ms is None or p95 is None
+                           or p95 < 0.5 * self.slo_ms):
+                self._depth = min(self.max_pipeline_depth, self._depth + 1)
+            self.metrics.gauge("pipeline_depth").set(self._depth)
+        return self._depth
 
     def _runner(self, task: str, bucket: int):
         return self.models[task].batched(bucket, jit=self.jit)
@@ -331,15 +507,18 @@ class GNNCVServeEngine:
         return set(self._warmed)
 
     # ---------------------------------------------------------- dispatch --
-    def dispatch(self) -> int:
+    def dispatch(self, *, draining: bool = False) -> int:
         """Launch one batch without blocking on its results; returns the
-        number of requests dispatched (0 when every queue is empty).
+        number of requests dispatched (0 when the scheduler has nothing to
+        run — every queue empty, or a deferring policy waiting).
 
-        Scheduling is oldest-head-first: the task whose front request has
-        waited longest is served, taking everything queued behind it up to
-        ``max_batch``.  Same-task requests still coalesce into one batched
-        launch, but no task can be starved by sustained load on another
-        (a deepest-queue-first policy would defer a minority task forever).
+        *What* to launch is the scheduler's decision (one ``Decision`` per
+        call, traced as a ``serve.schedule`` span): oldest-head-first
+        under the default FIFO policy — same-task requests coalesce into
+        one batched launch, no task starves under sustained load on
+        another — or service-corrected earliest-deadline-first under the
+        SLO policy.  ``draining=True`` tells a deferring policy no more
+        arrivals are coming.
 
         Outputs stay as in-flight device arrays — JAX's async dispatch
         means the host returns here immediately and can assemble the next
@@ -352,14 +531,25 @@ class GNNCVServeEngine:
         ``(j % ndev) * (bucket // ndev) + j // ndev``.  Pad positions
         (``take..bucket-1``) thereby spread (near-)evenly across devices
         instead of piling onto the last shard."""
-        ready = [t for t, q in self.queues.items() if q]
-        if not ready:
+        with obs.span("serve.schedule", cat="serve",
+                      policy=self.scheduler.name, pending=self.pending(),
+                      inflight=len(self._inflight),
+                      depth=self._depth) as sp:
+            d = self.scheduler.pick(self, draining=draining)
+            if d is not None:
+                sp.set(task=d.task, take=d.take, bucket=d.bucket,
+                       reason=d.reason)
+                if d.slack_ms is not None:
+                    sp.set(slack_ms=round(d.slack_ms, 3))
+        if d is None:
             return 0
-        task = min(ready, key=lambda t: self.queues[t][0].rid)
+        task, take, bucket = d.task, d.take, d.bucket
         queue = self.queues[task]
-        take = min(len(queue), self.max_batch)
-        bucket = self._bucket(take, self.max_batch)
+        assert 1 <= take <= len(queue) and take <= bucket <= self.max_batch, \
+            f"scheduler decision {d} invalid for queue of {len(queue)}"
         reqs = [queue.popleft() for _ in range(take)]
+        self._g_queue.set(self.pending())
+        self.metrics.gauge(f"queue_depth.{task}").set(len(queue))
         padded = reqs + [reqs[-1]] * (bucket - take)
         ndev = self._ndev
         rows = tuple((j % ndev) * (bucket // ndev) + j // ndev
@@ -429,15 +619,29 @@ class GNNCVServeEngine:
                              bucket=info.bucket, n=len(reqs), device=d,
                              shard_n=(info.shard_n[d] if info.shard_n
                                       else len(reqs)))
+        # measured service time of this (task, bucket) — the scheduler's
+        # warm estimate (estimate_batch_seconds) reads its recent mean
+        self.metrics.histogram(
+            f"service_ms.{info.task}.b{info.bucket}").observe(
+            (done - info.t_dispatch) * 1e3)
         rows = info.rows
         for i, req in enumerate(reqs):
             row = rows[i] if rows else i    # undo the shard placement
             req.result = tuple(np.array(m[row]) for m in mats)
             req.done = True
             req.t_done = done
-            self._h_sojourn.observe((done - req.t_submit) * 1e3)
+            sojourn_ms = (done - req.t_submit) * 1e3
+            self._h_sojourn.observe(sojourn_ms)
+            self._h_sojourn_recent.observe(sojourn_ms)
             self._h_queue.observe((req.t_dispatch - req.t_submit) * 1e3)
             self.metrics.counter(f"task.{req.task}.completed").inc()
+            if req.deadline_s is not None and done > req.deadline_s:
+                req.missed_deadline = True
+                self._c_misses.inc()
+                self.metrics.counter(
+                    f"task.{req.task}.deadline_misses").inc()
+            else:
+                self._c_goodput.inc()   # deadline-free completions count
             if traced:
                 # retroactive per-request span: the whole sojourn, from
                 # enqueue through this harvest
@@ -463,19 +667,104 @@ class GNNCVServeEngine:
         return n
 
     def run(self, max_steps: int = 10_000) -> int:
-        """Drive until every queue drains; returns requests served.
+        """Drain every queue (the closed-batch path); returns requests
+        served.  Under the default FIFO policy this is bit-for-bit the
+        pre-stream engine — continuous batching degenerates to batch
+        draining; under the SLO policy the scheduler reorders (and sheds)
+        within the same loop.
 
-        Pipelined: keeps up to ``pipeline_depth`` batches in flight, so
-        host-side batch assembly (queue pops, padding, host stacking)
-        overlaps device execution of the previous batch."""
+        Pipelined: keeps up to the current adaptive depth of batches in
+        flight (``== pipeline_depth`` unless ``max_pipeline_depth``/SLO
+        configured otherwise), so host-side batch assembly overlaps device
+        execution of the previous batch."""
         served = 0
         for _ in range(max_steps):
-            n = self.dispatch()
+            n = self.dispatch(draining=True)
             if n == 0 and not self._inflight:
                 break          # dispatch()==0 means every queue is empty
             if n == 0 or max(len(dq) for dq in self._dev_inflight) \
-                    >= self.pipeline_depth:
+                    >= self._depth:
                 served += self.harvest()
+                self._adapt_depth()
         while self._inflight:
             served += self.harvest()
         return served
+
+    # -------------------------------------------------------- stream pump --
+    def _oldest_ready(self) -> bool:
+        """True when the oldest in-flight batch has finished on device —
+        harvesting it will not block.  ``jax.Array.is_ready`` is the async
+        completion probe; outputs without it (jit=False numpy paths) count
+        as ready, which only costs an early materialize."""
+        if not self._inflight:
+            return False
+        _, outs, _ = self._inflight[0]
+        return all(getattr(o, "is_ready", lambda: True)() for o in outs)
+
+    def poll(self, *, draining: bool = False) -> tuple[int, int]:
+        """One non-blocking pump of the continuous-batching loop; returns
+        ``(dispatched, harvested)`` request counts.
+
+        Opportunistically harvests every in-flight batch the device has
+        already finished, dispatches while the scheduler has work and the
+        in-flight window has room (the current adaptive depth), and only
+        blocks on the oldest batch when the window is full (or the stream
+        is draining) with nothing else to do — exactly when blocking is
+        the only way to make progress.  One ``_adapt_depth`` step per
+        call keeps the window tracking queue growth and SLO headroom."""
+        harvested = 0
+        while self._oldest_ready():
+            harvested += self.harvest()
+        dispatched = 0
+        while max(len(dq) for dq in self._dev_inflight) < self._depth:
+            n = self.dispatch(draining=draining)
+            if n == 0:
+                break
+            dispatched += n
+        if not dispatched and not harvested and self._inflight \
+                and (draining or
+                     max(len(dq) for dq in self._dev_inflight)
+                     >= self._depth):
+            harvested += self.harvest()
+        self._adapt_depth()
+        return dispatched, harvested
+
+    def stream(self, arrivals, *, max_wall_s: float | None = None) -> list:
+        """Replay an open-loop arrival schedule against the wall clock;
+        returns one ``TaskRequest`` per arrival (all terminal: served, or
+        shed with ``result=None``).
+
+        ``arrivals`` is an iterable of ``(at_s, task, inputs)`` tuples —
+        optionally ``(at_s, task, inputs, deadline_ms)`` or
+        ``(..., deadline_ms, priority)`` — with ``at_s`` relative to the
+        stream start.  Open-loop means arrivals are not gated on service
+        (the generator keeps its schedule even when the engine falls
+        behind — the honest way to measure an overloaded server);
+        ``submit`` happens when the wall clock reaches ``at_s``, the loop
+        pumps ``poll()`` between arrivals, and returns once every request
+        is terminal (or ``max_wall_s`` elapses, a hang stop for tests)."""
+        import time
+        sched = sorted(arrivals, key=lambda a: a[0])
+        reqs: list[TaskRequest] = []
+        t0 = obs.now()
+        i, n = 0, len(sched)
+        while True:
+            rel = obs.now() - t0
+            while i < n and sched[i][0] <= rel:
+                at, task, inputs, *rest = sched[i]
+                deadline_ms = rest[0] if len(rest) >= 1 else None
+                priority = rest[1] if len(rest) >= 2 else 0
+                reqs.append(self.submit(task, deadline_ms=deadline_ms,
+                                        priority=priority, **inputs))
+                i += 1
+            draining = i >= n
+            dispatched, harvested = self.poll(draining=draining)
+            if draining and not self.pending() and not self._inflight:
+                break
+            if max_wall_s is not None and obs.now() - t0 > max_wall_s:
+                break
+            if not dispatched and not harvested and i < n:
+                wait = sched[i][0] - (obs.now() - t0)
+                if wait > 0:           # idle until the next arrival
+                    time.sleep(min(wait, 1e-3))
+        return reqs

@@ -56,9 +56,10 @@ def test_traced_grouped_dilated_conv_matches_lax(groups, dilation,
     np.testing.assert_allclose(outs[1], wantb, rtol=1e-5, atol=1e-6)
 
 
-def test_grouped_dilated_conv_selects_xla_only():
-    """Step 4b must not offer the Pallas shift-GEMM for grouped/dilated
-    convs — the realization family is a documented singleton."""
+def test_grouped_dilated_conv_offers_both_realizations():
+    """Step 4b offers the full conv family for grouped/dilated convs —
+    the per-group shift-GEMM Pallas kernel is a real candidate, recorded
+    in the plan's kernel_choices next to the XLA-native realization."""
     from repro.core.passes.select import _candidates
     cin, cout = 8, 8
     w = RNG.standard_normal((3, 3, cin // 2, cout)).astype(np.float32)
@@ -70,8 +71,10 @@ def test_grouped_dilated_conv_selects_xla_only():
     assert conv.attrs["groups"] == 2
     assert conv.attrs["dilation"] == (2, 2)
     kinds, reason = _candidates(conv)
-    assert kinds == ["xla_dense"] and reason
-    assert conv.kernel == "xla_dense"
+    assert kinds == ["xla_dense", "pallas_ddmm"] and reason is None
+    choice = plan.meta["kernel_choices"][conv.name]
+    assert set(choice["candidates"]) == {"xla_dense", "pallas_ddmm"}
+    assert conv.kernel in kinds
 
 
 def test_builder_conv_trivial_params_stay_absent():
@@ -109,9 +112,66 @@ def test_builder_grouped_conv_output_shape_and_value():
                                rtol=1e-5, atol=1e-6)
 
 
-def test_pallas_seam_rejects_grouped_dilated():
+@pytest.mark.parametrize("groups,dilation,padding,stride", [
+    (2, 1, "SAME", 1),
+    (4, 1, "VALID", 2),
+    (1, 2, "SAME", 1),
+    (1, 2, "VALID", 1),
+    (2, 2, "SAME", 2),
+    (1, 1, "SAME", 1),          # trivial params keep the original path
+])
+def test_pallas_shift_gemm_matches_lax_grouped_dilated(groups, dilation,
+                                                       padding, stride):
+    """The per-group shift-GEMM Pallas realization against
+    ``lax.conv_general_dilated`` directly (float tolerance: the kernel
+    accumulates taps in a different order than XLA's conv)."""
     from repro.kernels import ops as kops
-    x = jnp.zeros((4, 8, 8), jnp.float32)
-    w = jnp.zeros((3, 3, 2, 4), jnp.float32)
-    with pytest.raises(AssertionError, match="Pallas"):
-        kops.conv2d(x, w, groups=2, use_pallas=True)
+    cin, cout, k = 8, 8, 3
+    w = RNG.standard_normal((k, k, cin // groups, cout)
+                            ).astype(np.float32) * 0.3
+    x = RNG.standard_normal((cin, 12, 12)).astype(np.float32)
+    got = kops.conv2d(jnp.asarray(x), jnp.asarray(w), stride=stride,
+                      padding=padding, groups=groups,
+                      dilation=(dilation, dilation), use_pallas=True)
+    want = jax.lax.conv_general_dilated(
+        jnp.asarray(x)[None], jnp.asarray(w),
+        window_strides=(stride, stride), padding=padding,
+        rhs_dilation=(dilation, dilation), feature_group_count=groups,
+        dimension_numbers=("NCHW", "HWIO", "NCHW"))[0]
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # batched seam: vmap over the same kernel
+    xb = jnp.stack([jnp.asarray(x), jnp.asarray(-x)])
+    gotb = kops.conv2d(xb, jnp.asarray(w), stride=stride, padding=padding,
+                       groups=groups, dilation=(dilation, dilation),
+                       use_pallas=True)
+    np.testing.assert_allclose(np.asarray(gotb[0]), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_measured_mode_times_grouped_conv_candidates(tmp_path):
+    """kernels="measured" now has a real choice for grouped/dilated convs:
+    both realizations get timed through the autotune cache, and the
+    signature carries the group/dilation tokens (ordinary convs keep
+    their pre-grouping signatures)."""
+    import dataclasses
+
+    from repro.core.autotune import AutotuneCache, op_signature
+    cin, cout = 8, 8
+    w = RNG.standard_normal((3, 3, cin // 2, cout)).astype(np.float32)
+    b = GraphBuilder("g")
+    x = b.input((cin, 8, 8), name="x")
+    g = b.output(b.conv(x, w, groups=2, dilation=2))
+    opts = dataclasses.replace(
+        OPTS, kernels="measured",
+        autotune_cache=str(tmp_path / "cache.json"))
+    plan = gcv.compile(g, options=opts).plan
+    conv = next(op for op in plan.ops if op.kind == "conv")
+    choice = plan.meta["kernel_choices"][conv.name]
+    assert choice["source"] == "measured"
+    assert set(choice["measured_s"]) == {"xla_dense", "pallas_ddmm"}
+    sig = op_signature(conv, plan.meta["kernels_backend"])
+    assert "|g2|d2x2" in sig
+    cache = AutotuneCache(tmp_path / "cache.json")
+    assert set(cache.lookup(sig)) == {"xla_dense", "pallas_ddmm"}

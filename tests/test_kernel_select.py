@@ -178,6 +178,41 @@ def test_autotune_cache_file_versioned(tmp_path):
     assert fresh.lookup("sig") == {"xla_dense": 1e-6}
 
 
+def test_autotune_cache_two_writers_merge_not_clobber(tmp_path):
+    """Two caches opened against one file (the concurrent CI-job /
+    multi-engine shape): the second save must merge with what the first
+    published, not overwrite it — both writers' signatures survive, and
+    on a shared signature the later writer only wins per kernel."""
+    path = tmp_path / "at.json"
+    a = AutotuneCache(path)
+    b = AutotuneCache(path)            # opened before a writes anything
+    a.store("sig_a", {"xla_dense": 1e-6})
+    a.store("shared", {"xla_dense": 3e-6, "pallas_ddmm": 9e-6})
+    a.save()
+    b.store("sig_b", {"pallas_ddmm": 2e-6})
+    b.store("shared", {"xla_dense": 4e-6})
+    b.save()                           # merges a's entries from disk
+    merged = AutotuneCache(path)
+    assert merged.lookup("sig_a") == {"xla_dense": 1e-6}
+    assert merged.lookup("sig_b") == {"pallas_ddmm": 2e-6}
+    # b's timing wins the shared kernel; a's other kernel is kept
+    assert merged.lookup("shared") == {"xla_dense": 4e-6,
+                                       "pallas_ddmm": 9e-6}
+    # no stray tempfiles left behind by the atomic publish
+    assert [p.name for p in tmp_path.iterdir()] == ["at.json"]
+
+
+def test_autotune_cache_save_survives_corrupt_file(tmp_path):
+    """A torn/garbage cache file (pre-atomic-write artifact, disk-full
+    leftovers) must not take down save() — the writer replaces it."""
+    path = tmp_path / "at.json"
+    path.write_text("{not json")
+    cache = AutotuneCache(path)        # constructor path: version gate
+    cache.store("sig", {"xla_dense": 1e-6})
+    cache.save()
+    assert AutotuneCache(path).lookup("sig") == {"xla_dense": 1e-6}
+
+
 # --------------------------------------------------- TPU-side cost model --
 def test_tpu_backend_crossovers():
     """The analytic model's designed crossovers: on TPU the fused Pallas

@@ -144,7 +144,10 @@ def test_engine_stats_safe_with_zero_requests():
     assert s["p95_sojourn_ms"] is None
     assert s["req_per_s"] is None
     assert s["per_task"]["b6"] == {"submitted": 0, "completed": 0,
+                                   "deadline_misses": 0,
                                    "req_per_s": None}
+    assert s["deadline_miss_rate"] is None
+    assert s["goodput_req_per_s"] is None
     # the whole dict must serialize (CI writes stats into JSON records)
     json.dumps(s)
 

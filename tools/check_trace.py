@@ -9,10 +9,14 @@ useless artifact.
     python tools/check_trace.py TRACE_compile.json compile pass.fusion ...
     python tools/check_trace.py TRACE_serve_gnncv.json \
         serve.dispatch serve.harvest request \
+        --required-spans serve.schedule \
         --device-spans serve.dispatch,serve.harvest,request --min-devices 2
 
 Positional arguments: the trace path, then one or more span names that must
-each appear at least once as a complete ("ph": "X") event.  Also checks the
+each appear at least once as a complete ("ph": "X") event;
+``--required-spans a,b`` appends more names to the same gate (a flag form,
+so CI steps can grow the required set without reshuffling positional
+lists).  Also checks the
 trace-event schema basics every viewer relies on: a ``traceEvents`` list
 whose complete events carry name/ts/dur/pid/tid with numeric non-negative
 ts/dur (metadata "M" and instant "i" events are exempt).
@@ -88,6 +92,9 @@ def main(argv: list[str]) -> int:
     ap.add_argument("trace", help="Chrome trace-event JSON to validate")
     ap.add_argument("spans", nargs="+",
                     help="span names that must appear as complete events")
+    ap.add_argument("--required-spans", default="",
+                    help="comma-separated additional span names, merged "
+                         "into the positional required list")
     ap.add_argument("--device-spans", default="",
                     help="comma-separated span names that must each carry "
                          "an integer args.device")
@@ -95,15 +102,16 @@ def main(argv: list[str]) -> int:
                     help="minimum distinct args.device ids across "
                          "--device-spans events")
     ns = ap.parse_args(argv)
+    required = ns.spans + [s for s in ns.required_spans.split(",") if s]
     device_spans = [s for s in ns.device_spans.split(",") if s]
-    problems = check(ns.trace, ns.spans, device_spans=device_spans,
+    problems = check(ns.trace, required, device_spans=device_spans,
                      min_devices=ns.min_devices)
     for line in problems:
         print(line)
     if problems:
         return 1
     extra = (f", device tracks on {device_spans}" if device_spans else "")
-    print(f"check_trace: OK ({ns.trace}: all of {ns.spans} "
+    print(f"check_trace: OK ({ns.trace}: all of {required} "
           f"present{extra})")
     return 0
 
