@@ -184,6 +184,13 @@ def _realization(op, kernel: str, rng):
         pall = kernel == "pallas_ell_spdmm"
         return (lambda i, v, yi: kops.sparse_matmul(
             i, v, yi, use_pallas=pall), (idx, val, y))
+    if kernel in ("xla_knn", "pallas_knn"):
+        x = jnp.asarray(rng.standard_normal((s1, s2)), dtype=f32)
+        pall = kernel == "pallas_knn"
+        kk = int(a.get("k", 1))
+        sl = bool(a.get("self_loops", False))
+        return (lambda xi: kops.knn_graph(xi, k=kk, self_loops=sl,
+                                          use_pallas=pall), (x,))
     if kernel in ("xla_dense", "pallas_ddmm"):
         x = jnp.asarray(rng.standard_normal((s1, s2)), dtype=f32)
         y = jnp.asarray(rng.standard_normal((s2, s3)), dtype=f32)

@@ -22,7 +22,8 @@ import numpy as np
 
 LAYER_KINDS = frozenset({
     "input", "conv", "mp", "linear", "vip", "dm", "pool", "norm", "act",
-    "add", "matmul", "concat", "reshape", "softmax", "globalpool", "flatten",
+    "add", "mul", "matmul", "concat", "reshape", "softmax", "globalpool",
+    "flatten", "knn_graph",
 })
 
 
@@ -84,7 +85,8 @@ class GraphBuilder:
 
         def _tagged_add(layer: Layer) -> str:
             default = {"conv": "cnn", "pool": "cnn", "mp": "gnn",
-                       "vip": "gnn", "dm": "dm"}.get(layer.kind, self.portion)
+                       "vip": "gnn", "knn_graph": "gnn",
+                       "dm": "dm"}.get(layer.kind, self.portion)
             layer.params.setdefault("portion",
                                     self.portion if self.portion != "other"
                                     else default)
@@ -137,7 +139,7 @@ class GraphBuilder:
         return n
 
     def mp(self, x, adj=None, *, adj_input=None, adj_coo=None,
-           edge_input=None, reduce="sum", name=None):
+           edge_input=None, knn_input=None, reduce="sum", name=None):
         """Message passing: ``rho({e_uv * h_u})``.
 
         ``adj``: compile-time dense adjacency (small graphs that are model
@@ -146,7 +148,10 @@ class GraphBuilder:
         graphs (b5, g1-g3) where densifying is infeasible. ``adj_input``:
         runtime dense adjacency tensor name (b1's learned affinity) — forces
         the DDMM mapping. ``edge_input``: runtime per-edge values over static
-        COO connectivity (GAT attention weights).
+        COO connectivity (GAT attention weights). ``knn_input``: runtime
+        (N, k) neighbor-index tensor name (a ``knn_graph`` layer's output)
+        — the whole connectivity is a runtime value, unweighted gather +
+        reduce over each row's k neighbors.
         """
         n = self._name("mp", name)
         weights, params = {}, {"reduce": reduce}
@@ -165,9 +170,30 @@ class GraphBuilder:
         elif adj_input is not None:
             params["runtime_adj"] = True
             inputs += (adj_input,)
+        elif knn_input is not None:
+            params["runtime_knn"] = True
+            inputs += (knn_input,)
         else:
-            raise ValueError("mp needs adj, adj_coo or adj_input")
+            raise ValueError("mp needs adj, adj_coo, adj_input or knn_input")
         self.g.add(Layer(n, "mp", inputs, params, weights))
+        return n
+
+    def knn_graph(self, x, *, k, self_loops=False, mask=None, name=None):
+        """Dynamic graph construction: ``(N, F)`` points/features -> int32
+        ``(N, k)`` nearest-neighbor indices, rebuilt per request (selection
+        semantics pinned in ``kernels/knn.py``).  ``mask``: optional
+        runtime ``(N,)``/``(N, 1)`` validity input name — zero entries are
+        never selected (serving pads variable-size graphs with masked
+        nodes).  Feed the result to ``mp(..., knn_input=)``."""
+        n = self._name("knn_graph", name)
+        params: dict = {"k": int(k)}
+        if self_loops:
+            params["self_loops"] = True
+        inputs: tuple[str, ...] = (x,)
+        if mask is not None:
+            params["masked"] = True
+            inputs += (mask,)
+        self.g.add(Layer(n, "knn_graph", inputs, params))
         return n
 
     def vip(self, x, *, mask=None, edges=None, name=None):
@@ -231,6 +257,13 @@ class GraphBuilder:
     def add(self, x, y, name=None):
         n = self._name("add", name)
         self.g.add(Layer(n, "add", (x, y)))
+        return n
+
+    def mul(self, x, y, name=None):
+        """Elementwise (broadcasting) product of two runtime tensors —
+        e.g. masking padded-node features before a global pool."""
+        n = self._name("mul", name)
+        self.g.add(Layer(n, "mul", (x, y)))
         return n
 
     def matmul(self, x, y, name=None):

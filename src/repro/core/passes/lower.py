@@ -114,7 +114,22 @@ def _lower_to_matops(g: Graph) -> ExecutionPlan:
 
         elif kind == "mp":
             x_shape = ish[0]
-            if "coo_rows" in layer.weights:
+            if p.get("runtime_knn"):
+                # connectivity itself is a runtime value: inputs are
+                # (features (N, F), neighbor indices (N, k)); unweighted
+                # gather + reduce over each row's k neighbors
+                nv, feat = x_shape
+                kk = ish[1][1]
+                emit(MatOp(name, "mm", layer.inputs, {},
+                           {"weight_side": "left_knn",
+                            "runtime_knn": True,
+                            **_act_attrs(p),
+                            "reduce": p.get("reduce", "sum"),
+                            "n": nv, "nnz": nv * kk, "k": kk,
+                            "s1": nv, "s2": nv, "s3": feat,
+                            "density": kk / float(nv)},
+                           x_shape, portion))
+            elif "coo_rows" in layer.weights:
                 nv = p["n"]
                 nnz = layer.weights["coo_rows"].size
                 emit(MatOp(name, "mm", layer.inputs, dict(layer.weights),
@@ -159,6 +174,17 @@ def _lower_to_matops(g: Graph) -> ExecutionPlan:
                                 "s1": c * t, "s2": v, "s3": v,
                                 "density": _density(adj)},
                                x_shape, portion))
+
+        elif kind == "knn_graph":
+            n_pts, feat = ish[0]
+            emit(MatOp(name, "knn_graph", layer.inputs, {},
+                       {"k": int(p["k"]),
+                        "self_loops": bool(p.get("self_loops")),
+                        "masked": bool(p.get("masked")),
+                        "s1": n_pts, "s2": feat, "s3": n_pts,
+                        "nnz": n_pts * int(p["k"]),
+                        "density": int(p["k"]) / float(n_pts)},
+                       (n_pts, int(p["k"])), portion))
 
         elif kind == "vip":
             n, f = ish[0]
@@ -253,6 +279,10 @@ def _lower_to_matops(g: Graph) -> ExecutionPlan:
         elif kind == "add":
             emit(MatOp(name, "ew", layer.inputs, {}, {"fn": "add"},
                        ish[0], portion))
+
+        elif kind == "mul":
+            emit(MatOp(name, "ew", layer.inputs, {}, {"fn": "mul"},
+                       tuple(np.broadcast_shapes(ish[0], ish[1])), portion))
 
         elif kind == "softmax":
             if "segments" in layer.weights:

@@ -48,6 +48,13 @@ def _op_cost(op: MatOp) -> tuple[float, float, float]:
             flops = 2.0 * s1 * s2 * s3
             bts = bpe * (s1 * s2 + s2 * s3 + s1 * s3)
         return cycles, flops, bts
+    if op.kind == "knn_graph":
+        # distance DDMM off the computation array + k selection sweeps on
+        # the vector units; only points in and int32 indices out move.
+        s1, s2, s3 = op.attrs["s1"], op.attrs["s2"], op.attrs["s3"]
+        cycles = (FPGA.ddmm_cycles(s1, s2, s3)
+                  + FPGA.psvm_cycles(op.attrs["k"] * s1 * s3))
+        return cycles, 2.0 * s1 * s2 * s3, bpe * s1 * s2 + 4.0 * out_elems
     if op.kind == "sddmm":
         s1, s2, s3 = op.attrs["s1"], op.attrs["s2"], op.attrs["s3"]
         nnz = op.attrs["nnz"]

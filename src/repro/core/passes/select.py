@@ -79,6 +79,14 @@ def _select_primitives(plan: ExecutionPlan, *, target: str,
                 if enable:
                     n_sparse += 1
                 continue
+            if side == "left_knn":
+                # gather over runtime neighbor indices — execution is fixed
+                # by data availability (connectivity is a runtime value);
+                # Step 4 only sets the costing primitive for the ablation.
+                op.primitive = "SpDMM" if enable else "DDMM"
+                if enable:
+                    n_sparse += 1
+                continue
             static = op.weights.get("adj", op.weights.get("w"))
             op.primitive = "DDMM"
             # Only operands with real sparsity are candidates (the paper
@@ -100,6 +108,10 @@ def _select_primitives(plan: ExecutionPlan, *, target: str,
                     op.primitive = "SpDMM"
                     op.attrs["nnz"] = nnz
                     n_sparse += 1
+        elif op.kind == "knn_graph":
+            # the (N, N) distance scores come off the MXU — a DDMM for
+            # costing purposes; the top-k selection rides the VPU either way
+            op.primitive = "DDMM"
         elif op.kind == "sddmm":
             op.primitive = "SDDMM"
         elif op.kind == "maxagg":
@@ -135,6 +147,10 @@ def _candidates(op: MatOp) -> tuple[list[str], str | None]:
             return ["coo_scatter"], ("COO scatter is the only realization "
                                      "(dataset-scale adjacency is never "
                                      "densified)")
+        if side == "left_knn":
+            return ["coo_scatter"], ("runtime-KNN aggregation is inherently "
+                                     "gather (connectivity is a runtime "
+                                     "value)")
         if op.ell is not None and op.primitive == "SpDMM":
             return ["xla_ell_spdmm", "pallas_ell_spdmm"], None
         return ["xla_dense", "pallas_ddmm"], None
@@ -146,6 +162,8 @@ def _candidates(op: MatOp) -> tuple[list[str], str | None]:
     if op.kind == "maxagg":
         return ["xla_ell_spdmm"], ("max-reduce aggregation is inherently "
                                    "gather (no dense or Pallas path)")
+    if op.kind == "knn_graph":
+        return ["xla_knn", "pallas_knn"], None
     return ["xla_ew"], "elementwise/layout op — single jnp realization"
 
 

@@ -51,7 +51,7 @@ def _assign_tiles(plan: ExecutionPlan, *, target: str,
     if target == "fpga":
         budget = (45 * 2**20 // 8) // 2      # per-PE fp16 buffer share
     for op in plan.ops:
-        if op.kind == "mm" or op.kind == "sddmm":
+        if op.kind in {"mm", "sddmm", "knn_graph"}:
             op.tiles = _fit_tiles(op.attrs["s1"], op.attrs["s2"],
                                   op.attrs["s3"], quantum=quantum,
                                   budget_elems=budget, start=start)

@@ -157,6 +157,16 @@ def predict_kernel_seconds(kernel: str, *, s1: int = 1, s2: int = 1,
         if kernel == "xla_sddmm":
             # unfused mask multiply: one extra HBM round-trip of the output
             base += 3.0 * s1 * s3 * bpe / t.hbm_bw
+    elif kernel in ("xla_knn", "pallas_knn"):
+        # KNN graph build over (s1, s2) points: both realizations pay the
+        # (s1, s3) distance matmul on the MXU and k min-sweeps on the VPU;
+        # only the materialized xla path round-trips the N^2 scores via HBM.
+        kk = max(1, math.ceil((nnz if nnz else s1) / max(s1, 1)))
+        select = 8.0 * kk * s1 * s3 / t.peak_flops
+        io = bpe * s1 * s2 + 4.0 * s1 * kk          # points in, int32 idx out
+        if kernel == "xla_knn":
+            io += 2.0 * bpe * s1 * s3               # distance write + re-read
+        base = max(2.0 * s1 * s2 * s3 / t.peak_flops, io / t.hbm_bw) + select
     elif kernel == "coo_scatter":
         n = nnz if nnz is not None else s1 * s2
         flops = 2.0 * n * s3

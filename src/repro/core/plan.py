@@ -20,6 +20,7 @@ MATOP_KINDS = frozenset({
     "sddmm",       # sampled dense-dense
     "ew",          # elementwise (PSVM/PVVA family: act, scale, add, softmax)
     "pool2d", "globalpool", "maxagg",
+    "knn_graph",   # dynamic graph construction: points -> neighbor indices
     "transpose", "reshape", "concat", "identity",
 })
 
@@ -37,6 +38,8 @@ KERNELS = frozenset({
     "coo_scatter",      # COO segment scatter/gather (only realization)
     "xla_sddmm",        # masked dense product in jnp
     "pallas_sddmm",     # Pallas blockwise sampled-dense-dense kernel
+    "xla_knn",          # materialized (N,N) distances + lax.top_k
+    "pallas_knn",       # fused tiled distance + online top-k kernel
     "xla_ew",           # everything non-matrix (ew/pool/layout)
 })
 
@@ -44,6 +47,7 @@ KERNELS = frozenset({
 DENSE_KERNELS = frozenset({"xla_dense", "pallas_ddmm"})
 ELL_KERNELS = frozenset({"xla_ell_spdmm", "pallas_ell_spdmm"})
 SDDMM_KERNELS = frozenset({"xla_sddmm", "pallas_sddmm"})
+KNN_KERNELS = frozenset({"xla_knn", "pallas_knn"})
 
 
 @dataclasses.dataclass

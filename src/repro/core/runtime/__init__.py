@@ -9,6 +9,7 @@ or a handler for a kind nothing emits — fails at import time.
     residency.py    device-resident weight planning (collect once, dedup
                     by identity, thread through jit as an argument)
     matmul.py       mm (all weight sides) + sddmm
+    graph_build.py  knn_graph dynamic graph construction
     conv.py         Fig. 7 shift-add convolution
     elementwise.py  PSVM/PVVA family + the shared fused epilogue
     pooling.py      pool2d / globalpool / ELL maxagg
@@ -19,8 +20,8 @@ from repro.core.plan import MATOP_KINDS
 from repro.core.runtime.registry import (OpHandler, get_handler,  # noqa
                                          register_op, registered_kinds,
                                          run_op, validate_registry)
-from repro.core.runtime import (conv, elementwise, matmul,  # noqa: F401
-                                pooling, shape)
+from repro.core.runtime import (conv, elementwise, graph_build,  # noqa: F401
+                                matmul, pooling, shape)
 
 validate_registry(MATOP_KINDS)
 

@@ -63,6 +63,8 @@ def run_ew(op: MatOp, env, use_pallas: bool, params=None):
     x = env[op.inputs[0]]
     if fn == "add":
         return x + env[op.inputs[1]]
+    if fn == "mul" and len(op.inputs) == 2:
+        return x * env[op.inputs[1]]
     if fn == "softmax":
         if op.attrs.get("masked"):
             mask = weight(op, "mask", params) != 0

@@ -1,0 +1,25 @@
+"""Dynamic graph construction — the ``knn_graph`` MatOp handler.
+
+The op consumes the points/features tensor (plus an optional validity
+mask for padded variable-size graphs) and emits the int32 ``(N, k)``
+neighbor-index matrix that downstream ``mp`` ops with
+``weight_side="left_knn"`` gather over.  Selection semantics (ordering,
+ties, self-loops, masking) are pinned in ``kernels/knn.py``; both
+realizations — ``pallas_knn`` (fused tiled distance + online top-k) and
+``xla_knn`` (materialized distances + ``lax.top_k``) — agree bit-for-bit.
+"""
+from __future__ import annotations
+
+from repro.core.plan import MatOp
+from repro.core.runtime.registry import op_kernel, register_op
+from repro.kernels import ops as kops
+
+
+@register_op("knn_graph")
+def run_knn_graph(op: MatOp, env, use_pallas: bool, params=None):
+    kern = op_kernel(op, use_pallas)
+    x = env[op.inputs[0]]
+    mask = env[op.inputs[1]] if op.attrs.get("masked") else None
+    return kops.knn_graph(x, mask, k=op.attrs["k"],
+                          self_loops=bool(op.attrs.get("self_loops")),
+                          use_pallas=kern == "pallas_knn")

@@ -84,6 +84,19 @@ def run_mm(op: MatOp, env, use_pallas: bool, params=None):
             out = _dense(kern, weight(op, "adj", params), x)
     elif side == "left_coo":
         out = _coo_aggregate(op, env, x, params)
+    elif side == "left_knn":
+        # runtime (N, k) neighbor indices from a knn_graph op: unweighted
+        # gather + reduce over each row's k neighbors.  max matches the COO
+        # segment_max path bit-for-bit (order-independent reduction).
+        idx = env[op.inputs[1]]
+        msg = x[idx]                                     # (N, k, F)
+        red = op.attrs.get("reduce", "sum")
+        if red == "max":
+            out = msg.max(axis=1)
+        elif red == "mean":
+            out = msg.mean(axis=1)
+        else:
+            out = msg.sum(axis=1)
     elif side == "left_runtime":
         out = _dense(kern, env[op.inputs[1]], x)
     elif side == "both_runtime":

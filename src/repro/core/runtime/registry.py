@@ -40,8 +40,10 @@ def op_kernel(op: MatOp, use_pallas: bool = False) -> str:
     if kern is not None:
         assert kern in KERNELS, f"{op.name}: unknown kernel {kern!r}"
         return kern
+    if op.kind == "knn_graph":
+        return "pallas_knn" if use_pallas else "xla_knn"
     if op.kind == "mm":
-        if op.attrs.get("weight_side") == "left_coo":
+        if op.attrs.get("weight_side") in ("left_coo", "left_knn"):
             return "coo_scatter"
         if op.primitive == "SpDMM":
             return "pallas_ell_spdmm" if use_pallas else "xla_ell_spdmm"

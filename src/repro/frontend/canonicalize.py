@@ -40,7 +40,7 @@ from repro.frontend.trace import TraceGraph, TraceNode, UnsupportedOpError
 
 _VIEW_OPS = frozenset({"bcast", "reshape"})
 _PORTION_DEFAULT = {"conv": "cnn", "pool": "cnn", "mp": "gnn",
-                    "vip": "gnn", "dm": "dm"}
+                    "vip": "gnn", "knn_graph": "gnn", "dm": "dm"}
 
 
 def _is_const(atom) -> bool:
@@ -488,6 +488,148 @@ class _Rewriter:
                     self.dead.add(node.name)
         self.flush()
 
+    def _peel_all_views(self, ref):
+        """Follow bcast/reshape nodes upward regardless of fan-out;
+        -> (root ref, peeled names)."""
+        names = []
+        node = self.node(ref)
+        while node is not None and node.op in _VIEW_OPS:
+            names.append(node.name)
+            ref = node.inputs[0]
+            node = self.node(ref)
+        return ref, names
+
+    def _knn_terms(self, ref, seen: list) -> list:
+        """Flatten a +/- expression tree into ``(coefficient, ref)``
+        leaves, folding scalar multiplies and negations into the
+        coefficient.  ``seen`` collects the traversed node names."""
+        out: list = []
+
+        def walk(r, coeff):
+            n = self.node(r)
+            if n is not None and n.op == "ew" \
+                    and n.params["fn"] in ("add", "sub") \
+                    and all(isinstance(i, str) for i in n.inputs):
+                seen.append(n.name)
+                walk(n.inputs[0], coeff)
+                walk(n.inputs[1],
+                     coeff if n.params["fn"] == "add" else -coeff)
+                return
+            if n is not None and n.op == "ew1" and n.params["fn"] == "neg":
+                seen.append(n.name)
+                walk(n.inputs[0], -coeff)
+                return
+            if n is not None and n.op == "ew" and n.params["fn"] == "mul":
+                consts = [a for a in n.inputs if _is_const(a)]
+                refs = n.refs()
+                c = _scalar(consts[0]) if len(consts) == 1 else None
+                if c is not None and len(refs) == 1:
+                    seen.append(n.name)
+                    out.append((coeff * c, refs[0]))
+                    return
+            out.append((coeff, r))
+
+        walk(ref, 1.0)
+        return out
+
+    def _match_distance(self, ref):
+        """-> ``(x, traversed names)`` when ``ref`` computes pairwise
+        squared-L2 distances ``|xi|^2 - 2 xi.xj + |xj|^2`` over one traced
+        point set ``x``, else None."""
+        seen: list[str] = []
+        terms = self._knn_terms(ref, seen)
+        if len(terms) != 3:
+            return None
+        xs: set[str] = set()
+        rowsq, dot_x = 0, None
+        for coeff, r in terms:
+            root, names = self._peel_all_views(r)
+            n = self.node(root)
+            if n is None:
+                return None
+            if n.op == "vip" and n.params.get("mode") == "dense":
+                if coeff != -2.0:
+                    return None
+                dot_x = n.inputs[0]
+                seen.extend([*names, n.name])
+            elif n.op == "reduce" and n.params["op"] == "sum" \
+                    and tuple(n.params["axes"]) == (1,):
+                if coeff != 1.0:
+                    return None
+                sq = self.node(n.inputs[0])
+                if sq is None or sq.op != "ew" \
+                        or sq.params["fn"] != "mul" \
+                        or not all(isinstance(i, str) for i in sq.inputs) \
+                        or len(set(sq.inputs)) != 1:
+                    return None
+                xs.add(sq.inputs[0])
+                rowsq += 1
+                seen.extend([*names, n.name, sq.name])
+            else:
+                return None
+        if rowsq != 2 or dot_x is None or xs != {dot_x}:
+            return None
+        return dot_x, seen
+
+    def match_knn_graph(self) -> None:
+        """The raw-jnp dynamic-graph idiom: pairwise squared-L2 distances
+        ``|xi|^2 - 2 xi.xj + |xj|^2`` consumed by ``lax.top_k(-d, k)``
+        (k nearest, self included — the diagonal's zero distance wins) or
+        a stable ``argsort(d, axis=1)[:, 1:k+1]`` (self excluded) becomes
+        one ``knn_graph`` layer — the selection semantics pinned in
+        ``kernels/knn.py``.  The distance expression itself dies by DCE
+        once its selection consumer is rewritten (runs after
+        ``match_dots``, which turns ``x @ x.T`` into the ``vip`` node the
+        distance matcher anchors on)."""
+        for node in list(self.tg.nodes.values()):
+            if node.op == "top_k" and node.params["out"] == "indices":
+                neg = self.node(node.inputs[0])
+                if neg is None or neg.op != "ew1" \
+                        or neg.params["fn"] != "neg":
+                    continue
+                dist, partners = neg.inputs[0], [neg.name]
+                k, self_loops = node.params["k"], True
+            elif node.op == "slice":
+                src = self.node(node.inputs[0])
+                if src is None or src.op != "sort" \
+                        or src.params["out"] != "perm" \
+                        or src.params["dimension"] != 1:
+                    continue
+                start, limit = node.params["start"], node.params["limit"]
+                if node.params["strides"] not in (None, (1, 1)) \
+                        or len(start) != 2 \
+                        or (start[0], limit[0]) != (0, src.shape[0]) \
+                        or start[1] not in (0, 1):
+                    continue
+                dist, partners = src.inputs[0], [src.name]
+                k, self_loops = limit[1] - start[1], start[1] == 0
+            else:
+                continue
+            m = self._match_distance(dist)
+            if m is None:
+                continue
+            x, seen = m
+            node.op, node.inputs = "knn_graph", [x]
+            node.params = {"k": int(k), "self_loops": self_loops,
+                           "masked": False}
+            self.absorb(node, *partners, *seen)
+        self.flush()
+        self.prune_dead()
+
+    def prune_dead(self) -> None:
+        """Drop non-input nodes no consumer or output references —
+        pattern remnants whose heads were rewritten away (e.g. the
+        distance expression once a ``knn_graph`` layer replaces its
+        selection consumer)."""
+        changed = True
+        while changed:
+            changed = False
+            cons = self.consumers()
+            for name, node in list(self.tg.nodes.items()):
+                if node.op != "input" and not cons[name]:
+                    self.tg.nodes.pop(name)
+                    changed = True
+
     def match_globalpool(self) -> None:
         spatial = {4: (2, 3), 3: (1, 2), 2: (0,)}
         for node in list(self.tg.nodes.values()):
@@ -509,10 +651,18 @@ class _Rewriter:
             if node.op != "bcast":
                 continue
             src = self.node(node.inputs[0])
-            if src is not None and src.shape == node.params["shape"]:
+            if src is None:
+                continue
+            if src.shape == node.params["shape"]:
                 self.absorb(src, node.name)
                 self.alias[node.name] = node.inputs[0]
                 self.dead.add(node.name)
+            elif int(np.prod(node.params["shape"])) == \
+                    int(np.prod(src.shape)):
+                # size-preserving broadcast (axis insertion, e.g. a
+                # ``mask[:, None]``) is just a reshape
+                node.op = "reshape"
+                node.params = {"shape": node.params["shape"]}
         self.flush()
 
 
@@ -532,6 +682,12 @@ _EMIT_UNSUPPORTED = {
                      f"and masked-softmax select patterns are recognized)",
     "select": lambda n: "'select_n' (a where/select that is neither the "
                         "leaky_relu nor the masked-softmax pattern)",
+    "top_k": lambda n: "'top_k' (not consuming the pairwise-distance "
+                       "KNN-graph idiom)",
+    "sort": lambda n: "'sort' (only the argsort KNN-graph idiom is "
+                      "recognized)",
+    "slice": lambda n: "'slice' (only the argsort-slice KNN selection is "
+                       "recognized)",
 }
 
 
@@ -579,8 +735,18 @@ def _emit(tg: TraceGraph) -> Graph:
                 add(node, "mp", p)
             elif mode == "dense_runtime":
                 add(node, "mp", {"runtime_adj": True, "reduce": "sum"})
+            elif mode == "knn":
+                add(node, "mp", {"runtime_knn": True,
+                                 "reduce": node.params["reduce"]})
             else:
                 add(node, "mp", {"reduce": node.params["reduce"]})
+        elif node.op == "knn_graph":
+            p = {"k": node.params["k"]}
+            if node.params.get("self_loops"):
+                p["self_loops"] = True
+            if node.params.get("masked"):
+                p["masked"] = True
+            add(node, "knn_graph", p)
         elif node.op == "vip":
             add(node, "vip", {})
         elif node.op == "norm":
@@ -615,6 +781,9 @@ def _emit(tg: TraceGraph) -> Graph:
         elif node.op == "ew" and node.params["fn"] == "add" \
                 and len(node.refs()) == 2:
             add(node, "add", {})
+        elif node.op == "ew" and node.params["fn"] == "mul" \
+                and len(node.refs()) == 2:
+            add(node, "mul", {})
         elif node.op == "matmul":
             add(node, "matmul", {})
         else:
@@ -648,6 +817,7 @@ def _canonicalize(tg: TraceGraph) -> Graph:
     rw.match_acts()
     rw.match_adj_right_mp()       # must win over match_dots' linear case
     rw.match_dots()
+    rw.match_knn_graph()          # needs match_dots' vip anchor
     rw.fold_biases()
     rw.match_dm()
     rw.match_globalpool()

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 try:                                       # jax >= 0.4.34
     from jax.extend.core import Primitive
@@ -31,6 +32,7 @@ mp_p = Primitive("gcv_mp")
 vip_p = Primitive("gcv_vip")
 batch_norm_p = Primitive("gcv_batch_norm")
 segment_softmax_p = Primitive("gcv_segment_softmax")
+knn_graph_p = Primitive("gcv_knn_graph")
 
 
 # ------------------------------------------------------------------ mp ----
@@ -40,8 +42,11 @@ def message_passing(adj, x, *, reduce: str = "sum"):
     ``adj`` is either a dense ``(N, N)`` adjacency — a numpy constant for
     model-structure graphs, or a traced array for learned affinities (b1) —
     or a COO 4-tuple ``(rows, cols, vals, num_nodes)`` for dataset-scale
-    connectivity.  ``x``: node features ``(N, F)`` (dense also supports the
-    ST-GCN ``(C, T, V)`` layout).  ``reduce``: ``'sum'`` or ``'max'``.
+    connectivity.  An *integer* ``(N, k)`` array is treated as per-node
+    neighbor indices (a ``knn_graph`` output): unweighted gather + reduce
+    over each row's k neighbors.  ``x``: node features ``(N, F)`` (dense
+    also supports the ST-GCN ``(C, T, V)`` layout).  ``reduce``: ``'sum'``
+    or ``'max'``.
     """
     assert reduce in ("sum", "max"), reduce
     if isinstance(adj, tuple):
@@ -49,11 +54,19 @@ def message_passing(adj, x, *, reduce: str = "sum"):
         return mp_p.bind(x, jnp.asarray(rows), jnp.asarray(cols),
                          jnp.asarray(vals), mode="coo", n=int(n),
                          reduce=reduce)
-    return mp_p.bind(x, jnp.asarray(adj), mode="dense", n=None,
-                     reduce=reduce)
+    a = jnp.asarray(adj)
+    if jnp.issubdtype(a.dtype, jnp.integer):
+        assert a.ndim == 2, f"neighbor indices must be (N, k), got {a.shape}"
+        return mp_p.bind(x, a, mode="knn", n=None, reduce=reduce)
+    return mp_p.bind(x, a, mode="dense", n=None, reduce=reduce)
 
 
 def _mp_impl(x, *adj, mode, n, reduce):
+    if mode == "knn":
+        msg = x[adj[0]]                                # (N, k, F)
+        if reduce == "max":
+            return msg.max(axis=1)
+        return msg.sum(axis=1)
     if mode == "coo":
         rows, cols, vals = adj
         msg = vals[:, None] * x[cols]
@@ -71,6 +84,30 @@ def _mp_impl(x, *adj, mode, n, reduce):
         c, t, v = x.shape
         return (x.reshape(c * t, v) @ a.T).reshape(c, t, v)
     return a @ x
+
+
+# ----------------------------------------------------------- knn graph ----
+def knn_graph(x, *, k: int, self_loops: bool = False, mask=None):
+    """Dynamic graph construction: ``(N, F)`` points -> int32 ``(N, k)``
+    nearest-neighbor indices under squared-L2 distance, rebuilt per input
+    (selection semantics pinned in ``kernels/knn.py``).  ``mask``: optional
+    ``(N,)``/``(N, 1)`` validity array — zero entries are never selected
+    (serving pads variable-size graphs with masked nodes).  Feed the
+    result to ``message_passing`` for neighbor aggregation.  Raw-jnp
+    spellings of the same idiom (``|xi|^2 - 2 xi.xj + |xj|^2`` consumed by
+    ``lax.top_k`` or a stable argsort-slice) are also recognized by the
+    tracer — this primitive is the explicit, mask-capable form."""
+    if mask is not None:
+        return knn_graph_p.bind(x, jnp.asarray(mask), k=int(k),
+                                self_loops=bool(self_loops), masked=True)
+    return knn_graph_p.bind(x, k=int(k), self_loops=bool(self_loops),
+                            masked=False)
+
+
+def _knn_graph_impl(x, *mask, k, self_loops, masked):
+    from repro.kernels.knn import knn_ref
+    return knn_ref(x, k=k, mask=mask[0] if masked else None,
+                   self_loops=self_loops)
 
 
 # ----------------------------------------------------------------- vip ----
@@ -169,10 +206,16 @@ def _segment_softmax_aval(x, seg, *, n):
     return x
 
 
+def _knn_graph_aval(x, *mask, k, self_loops, masked):
+    return x.update(shape=(x.shape[0], k), dtype=np.dtype("int32"))
+
+
 _register(mp_p, _mp_impl, _mp_aval)
 _register(vip_p, _vip_impl, _vip_aval)
 _register(batch_norm_p, _batch_norm_impl, _bn_aval)
 _register(segment_softmax_p, _segment_softmax_impl, _segment_softmax_aval)
+_register(knn_graph_p, _knn_graph_impl, _knn_graph_aval)
 
 FRONTEND_PRIMITIVES = {p.name: p for p in
-                       (mp_p, vip_p, batch_norm_p, segment_softmax_p)}
+                       (mp_p, vip_p, batch_norm_p, segment_softmax_p,
+                        knn_graph_p)}

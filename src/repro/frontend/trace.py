@@ -211,6 +211,26 @@ class _Interpreter:
         if not isinstance(x, str):
             raise UnsupportedOpError(
                 "gcv_mp over constant node features is not supported")
+        if p["mode"] == "knn":
+            idx = adj[0]
+            if _is_const(idx):
+                # indices traced from static points folded to a constant:
+                # equivalent unweighted COO connectivity (same numerics)
+                ia = np.asarray(idx, np.int32)
+                nv, kk = ia.shape
+                env[eqn.outvars[0]] = self.node(
+                    "mp", "mp", [x],
+                    {"mode": "coo", "n": nv, "reduce": p["reduce"]},
+                    {"coo_rows": np.repeat(np.arange(nv, dtype=np.int32),
+                                           kk),
+                     "coo_cols": ia.reshape(-1),
+                     "coo_vals": np.ones(nv * kk, np.float32)},
+                    eqn.outvars[0])
+                return
+            env[eqn.outvars[0]] = self.node(
+                "mp", "mp", [x, idx],
+                {"mode": "knn", "reduce": p["reduce"]}, {}, eqn.outvars[0])
+            return
         if p["mode"] == "coo":
             rows, cols, vals = adj
             if _is_const(rows) and _is_const(cols):
@@ -274,6 +294,23 @@ class _Interpreter:
             "norm", "norm", [x], {"eps": float(eqn.params["eps"])},
             {"scale": scale, "bias": bias, "mean": mean, "var": var},
             eqn.outvars[0])
+
+    def p_gcv_knn_graph(self, eqn, atoms, env):
+        x, rest = atoms[0], atoms[1:]
+        p = eqn.params
+        if not isinstance(x, str):
+            raise UnsupportedOpError("gcv_knn_graph over constant points")
+        inputs = [x]
+        if p["masked"]:
+            if not isinstance(rest[0], str):
+                raise UnsupportedOpError(
+                    "gcv_knn_graph with a constant mask is not supported "
+                    "(the mask is a runtime validity input)")
+            inputs.append(rest[0])
+        env[eqn.outvars[0]] = self.node(
+            "knn", "knn_graph", inputs,
+            {"k": int(p["k"]), "self_loops": bool(p["self_loops"]),
+             "masked": bool(p["masked"])}, {}, eqn.outvars[0])
 
     def p_gcv_segment_softmax(self, eqn, atoms, env):
         x, seg = atoms
@@ -433,6 +470,51 @@ class _Interpreter:
 
     def p_exp(self, eqn, atoms, env):
         self._unop("exp")(eqn, atoms, env)
+
+    def p_neg(self, eqn, atoms, env):
+        self._unop("neg")(eqn, atoms, env)
+
+    # ---- selection (the KNN-graph idiom members) ---------------------------
+    def p_top_k(self, eqn, atoms, env):
+        # two results; unused outputs (jaxpr DropVars — e.g. the values of
+        # ``lax.top_k(-d, k)[1]``) produce no node
+        k = int(eqn.params["k"])
+        for ov, out in zip(eqn.outvars, ("values", "indices")):
+            if type(ov).__name__ == "DropVar":
+                continue
+            env[ov] = self.node("topk", "top_k", [atoms[0]],
+                                {"k": k, "out": out}, {}, ov)
+
+    def p_sort(self, eqn, atoms, env):
+        p = eqn.params
+        dim = int(p["dimension"])
+        shape = tuple(eqn.invars[0].aval.shape)
+        iota = np.broadcast_to(
+            np.arange(shape[dim]).reshape(
+                tuple(-1 if i == dim else 1 for i in range(len(shape)))),
+            shape)
+        if not (len(atoms) == 2 and isinstance(atoms[0], str)
+                and _is_const(atoms[1])
+                and np.array_equal(np.asarray(atoms[1]), iota)
+                and int(p.get("num_keys", 1)) == 1):
+            raise UnsupportedOpError(
+                "jaxpr primitive 'sort' is only supported as the argsort "
+                "idiom (one traced key + an iota payload)")
+        for ov, out in zip(eqn.outvars, ("keys", "perm")):
+            if type(ov).__name__ == "DropVar":
+                continue
+            env[ov] = self.node("sort", "sort", [atoms[0]],
+                                {"dimension": dim, "out": out}, {}, ov)
+
+    def p_slice(self, eqn, atoms, env):
+        p = eqn.params
+        strides = p.get("strides")
+        env[eqn.outvars[0]] = self.node(
+            "slice", "slice", [atoms[0]],
+            {"start": tuple(int(i) for i in p["start_indices"]),
+             "limit": tuple(int(i) for i in p["limit_indices"]),
+             "strides": tuple(int(s) for s in strides) if strides
+             else None}, {}, eqn.outvars[0])
 
     # Comparisons + select surface only as *pattern members*: canonicalize
     # reassembles select(ge(x, 0), a*x, x) into a leaky_relu act layer and

@@ -510,6 +510,7 @@ def serve(models: Mapping[str, Any], *,
           pipeline_depth: int = 2, residency: bool = True, warmup=False,
           devices=None, mesh=None, slo_ms: float | None = None,
           scheduler=None, max_pipeline_depth: int | None = None,
+          graph_buckets: Mapping[str, Any] | None = None,
           **option_overrides):
     """Build the micro-batching serving engine from models, not plumbing.
 
@@ -543,6 +544,15 @@ def serve(models: Mapping[str, Any], *,
     pump ``engine.poll()`` yourself.  Migration: ``engine.run()`` on a
     pre-submitted list without ``slo_ms`` is unchanged — the FIFO policy
     at fixed depth is bit-for-bit the closed-batch engine.
+
+    ``graph_buckets=`` serves *variable-topology* tasks (dynamic graph
+    construction): map a task name to the node counts it should serve at
+    and make its ``models`` entry a factory ``n_nodes -> model spec``
+    (e.g. ``lambda n: TRACED_TASKS["b6-dyn"](n_points=n)``).  The engine
+    compiles one plan per size, ``submit`` routes each request to the
+    smallest bucket that fits (zero-padding the node-indexed inputs —
+    the model's validity mask keeps padded nodes inert) and raises
+    ``ValueError`` at admission for requests over the largest bucket.
     """
     from repro.serve.gnncv import GNNCVServeEngine
     opts = _resolve_options(options, option_overrides)
@@ -550,7 +560,8 @@ def serve(models: Mapping[str, Any], *,
                            jit=jit, pipeline_depth=pipeline_depth,
                            residency=residency, devices=devices, mesh=mesh,
                            slo_ms=slo_ms, scheduler=scheduler,
-                           max_pipeline_depth=max_pipeline_depth)
+                           max_pipeline_depth=max_pipeline_depth,
+                           graph_buckets=graph_buckets)
     if warmup:
         eng.warmup()
     return eng

@@ -76,11 +76,53 @@ def grid_coo(h: int, w: int, *, neighbors: int = 8, sym_norm: bool = True):
     return (rows.astype(np.int32), cols.astype(np.int32), vals, n)
 
 
-def knn_coo(n: int, k: int, *, seed: int = 0):
-    """Random k-NN connectivity (b6 point clouds: 1024 pts, 10k-30k edges)."""
-    rng = np.random.default_rng(seed)
+def knn_indices(points: np.ndarray, k: int, *, self_loops: bool = False,
+                mask: np.ndarray | None = None) -> np.ndarray:
+    """Numpy reference oracle for k-nearest-neighbor selection.
+
+    Implements the pinned KNN semantics (``repro.kernels.knn`` docstring —
+    every realization, including this oracle, must agree):
+
+      * neighbors are the ``k`` *smallest* squared-L2 distances;
+      * ties break toward the **lower candidate index** (stable argsort);
+      * a point is never its own neighbor unless ``self_loops=True``;
+      * candidates with ``mask == 0`` are never selected (their distance
+        is +inf); rows with ``mask == 0`` still emit indices — callers
+        mask the downstream features, not the index matrix.
+
+    Returns an int32 ``(n, k)`` neighbor-index matrix (ELL layout: row i
+    aggregates from ``points[idx[i]]``).
+    """
+    pts = np.asarray(points, dtype=np.float64)   # exact oracle: fp64 dists
+    n = pts.shape[0]
+    assert 1 <= k <= n, f"k={k} out of range for {n} points"
+    d = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    if not self_loops:
+        np.fill_diagonal(d, np.inf)
+    if mask is not None:
+        m = np.asarray(mask, dtype=np.float64).reshape(-1)
+        d = np.where(m[None, :] > 0, d, np.inf)
+    return np.argsort(d, axis=1, kind="stable")[:, :k].astype(np.int32)
+
+
+def knn_coo(n: int, k: int, *, seed: int = 0, points=None,
+            self_loops: bool = False):
+    """k-NN connectivity (b6 point clouds: 1024 pts, 10k-30k edges).
+
+    With ``points`` (an ``(n, dim)`` array), the graph is the *true*
+    geometric KNN of those coordinates via the ``knn_indices`` oracle;
+    ``n`` must match ``len(points)``.  Without ``points`` the historic
+    behavior is kept: random neighbors with the published edge count
+    (latency-only benchmarks never cared about edge identity)."""
     rows = np.repeat(np.arange(n, dtype=np.int32), k)
-    cols = rng.integers(0, n, n * k).astype(np.int32)
+    if points is not None:
+        points = np.asarray(points)
+        assert points.shape[0] == n, \
+            f"n={n} does not match {points.shape[0]} points"
+        cols = knn_indices(points, k, self_loops=self_loops).reshape(-1)
+    else:
+        rng = np.random.default_rng(seed)
+        cols = rng.integers(0, n, n * k).astype(np.int32)
     vals = np.ones(rows.size, np.float32)
     return (rows, cols, vals, n)
 

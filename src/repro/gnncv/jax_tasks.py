@@ -397,6 +397,100 @@ def b7_vig_jax(*, input_hw: int = 224, patch: int = 16, dim: int = 192,
     return model, example
 
 
+# ------------------------------------------- b6-dyn: dynamic point cloud --
+def b6_pointcloud_dynamic_jax(*, n_points: int = 1024, knn: int = 20,
+                              classes: int = 40, dims=(64, 64, 128, 256),
+                              feat_out: int = 1024, seed: int = 0):
+    """Variable-topology b6 — the KNN graph is *built per request* from the
+    runtime point coordinates via the explicit ``nn.knn_graph`` primitive
+    instead of being baked in as a compile-time COO.  A runtime ``(N,)``
+    validity mask supports serving's graph-size bucketing: padded nodes are
+    never selected as neighbors (``knn_graph(mask=)``) and their features
+    are zeroed before the global max pool, so a request padded up to a
+    bucket size produces the same logits as its unpadded trace."""
+    rng = np.random.default_rng(seed)
+    lins, fin = [], 3
+    for d in dims:
+        lins.append((_lin_w(rng, fin, d), np.zeros(d, np.float32)))
+        fin = d
+    w_feat = _lin_w(rng, fin, feat_out)
+    b_feat = np.zeros(feat_out, np.float32)
+    w_cls = _fc_w(rng, feat_out, classes)
+    b_cls = np.zeros(classes, np.float32)
+
+    def model(points, mask):
+        idx = nn.knn_graph(points, k=knn, mask=mask)   # (N, k) int32
+        h = points
+        for w, b in lins:
+            h = jax.nn.relu(h @ w + b)
+            h = nn.message_passing(idx, h, reduce="max")
+        h = jax.nn.relu(h @ w_feat + b_feat)
+        h = h * mask[:, None]                     # zero padded nodes
+        h = h.max(axis=0)                         # (feat_out,)
+        return h @ w_cls + b_cls
+
+    example = {
+        "points": jax.ShapeDtypeStruct((n_points, 3), np.float32),
+        "mask": jax.ShapeDtypeStruct((n_points,), np.float32)}
+    return model, example
+
+
+# ------------------------------------------------ b7-dyn: dynamic ViG -----
+def b7_vig_dynamic_jax(*, input_hw: int = 224, patch: int = 16,
+                       dim: int = 192, blocks: int = 12, knn: int = 9,
+                       classes: int = 1000, seed: int = 0,
+                       precomputed_graph=None):
+    """ViG with *dynamic* graph construction (the actual Vision-GNN design):
+    the patch graph is the k-NN graph of the patch embeddings, written as
+    the raw jnp pairwise-distance + argsort idiom — no ``nn`` graph helper.
+    The canonicalizer recovers a ``knn_graph`` layer from the traced
+    ``mul/reduce_sum/dot_general/sort/slice`` equations, so the fused
+    distance+top-k kernel runs without the model mentioning it.
+
+    ``argsort(d)[:, 1:k+1]`` excludes the self match, matching ViG's
+    dilated-KNN-free baseline; weights replay ``b7_vig_jax``'s draw
+    sequence exactly so the two variants differ only in connectivity.
+
+    ``precomputed_graph``: an ``(n_patch, k)`` int32 index matrix baked
+    in as the connectivity instead of the traced distance computation —
+    the offline-graph twin the dynamic path must match bit for bit (max
+    aggregation is order-independent, so the runtime-KNN gather and the
+    constant-COO scatter agree exactly)."""
+    assert input_hw % patch == 0, (input_hw, patch)
+    rng = np.random.default_rng(seed)
+    w_embed = _conv_w(rng, 3, dim, patch)
+    b_embed = np.zeros(dim, np.float32)
+    blks = [(_lin_w(rng, dim, dim), _lin_w(rng, dim, dim),
+             _lin_w(rng, dim, 2 * dim), _lin_w(rng, 2 * dim, dim))
+            for _ in range(blocks)]
+    w_cls = _fc_w(rng, dim, classes)
+    b_cls = np.zeros(classes, np.float32)
+
+    def model(image):
+        h = _conv2d_single(image, w_embed, (patch, patch), "VALID")
+        h = h + b_embed[:, None, None]
+        h = h.reshape(dim, -1).T                  # (n_patch, dim) nodes
+        if precomputed_graph is not None:
+            idx = np.asarray(precomputed_graph, np.int32)
+        else:
+            sq = (h * h).sum(axis=1)              # raw distance idiom
+            d = sq[:, None] + sq[None, :] - 2.0 * (h @ h.T)
+            idx = jnp.argsort(d, axis=1)[:, 1:knn + 1]
+        for w_in, w_out, w_up, w_down in blks:
+            y = h @ w_in                          # grapher
+            y = nn.message_passing(idx, y, reduce="max")
+            y = jax.nn.relu(y @ w_out)
+            h = h + y
+            z = jax.nn.relu(h @ w_up)             # FFN
+            h = h + z @ w_down
+        h = h.mean(0)                             # (dim,)
+        return h @ w_cls + b_cls
+
+    example = {"image": jax.ShapeDtypeStruct((3, input_hw, input_hw),
+                                             np.float32)}
+    return model, example
+
+
 TRACED_TASKS = {
     "b1": b1_fewshot_jax,
     "b2": b2_mlgcn_jax,
@@ -405,7 +499,9 @@ TRACED_TASKS = {
     "b4": b4_stgcn_jax,
     "b5": b5_sar_jax,
     "b6": b6_pointcloud_jax,
+    "b6-dyn": b6_pointcloud_dynamic_jax,
     "b7": b7_vig_jax,
+    "b7-dyn": b7_vig_dynamic_jax,
 }
 
 # Reduced configs for tasks that exist only through this frontend;
@@ -413,7 +509,10 @@ TRACED_TASKS = {
 # for like.
 TRACED_SMALL_CONFIGS = {
     **SMALL_CONFIGS,
+    "b6-dyn": dict(n_points=64, knn=5, dims=(8, 16), feat_out=32),
     "b7": dict(input_hw=32, patch=8, dim=16, blocks=2, classes=10),
+    "b7-dyn": dict(input_hw=32, patch=8, dim=16, blocks=2, knn=4,
+                   classes=10),
 }
 
 

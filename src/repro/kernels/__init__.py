@@ -8,6 +8,8 @@ Kernels (each ``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec tiling;
   sddmm.py            block-sampled dense-dense matmul (primitive 3)
   shift_conv.py       Fig. 7 Conv mapping: k1*k2 matmuls + fused shift-add
   flash_attention.py  fused SDDMM+softmax+SpDMM for the LM attention path
+  knn.py              fused pairwise-distance + online top-k (dynamic graph
+                      construction; pinned KNN selection semantics)
 
 PSVM / PVVA (primitives 4-5) are VPU elementwise ops with no tiling freedom;
 they are realized directly as jnp ops inside the executor (core/executor.py)

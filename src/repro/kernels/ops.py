@@ -25,6 +25,7 @@ import jax
 from repro.kernels import ref
 from repro.kernels.ddmm import ddmm
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.knn import knn, knn_ref
 from repro.kernels.sddmm import sddmm
 from repro.kernels.shift_conv import shift_conv2d
 from repro.kernels.spdmm import dense_to_ell, spdmm
@@ -82,6 +83,19 @@ def conv2d(x, w, *, stride=1, padding="SAME", groups=1, dilation=(1, 1),
     return jax.vmap(lambda xi: fn(xi, w))(x)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "self_loops",
+                                             "use_pallas"))
+def knn_graph(x, mask=None, *, k, self_loops=False, use_pallas=True):
+    """Per-input KNN neighbor indices: (N, F) points -> int32 (N, k).
+
+    ``use_pallas=True`` runs the fused tiled distance+top-k kernel (no
+    O(N^2) materialization); ``False`` the materialized ``lax.top_k``
+    oracle.  Selection semantics are pinned in ``kernels/knn.py``."""
+    if use_pallas:
+        return knn(x, k=k, mask=mask, self_loops=self_loops)
+    return knn_ref(x, k=k, mask=mask, self_loops=self_loops)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "use_pallas"))
 def attention(q, k, v, *, causal=True, use_pallas=True):
     if use_pallas:
@@ -117,6 +131,7 @@ def matmul_auto(x_dense, y, *, ell=None, use_pallas=True):
 
 __all__ = [
     "matmul", "sparse_matmul", "sampled_matmul", "conv2d", "attention",
+    "knn_graph", "knn", "knn_ref",
     "matmul_auto", "choose_primitive", "dense_to_ell", "ddmm", "spdmm",
     "sddmm", "shift_conv2d", "flash_attention", "TPU_SPARSE_PENALTY",
 ]

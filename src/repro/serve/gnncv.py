@@ -33,6 +33,17 @@ axis is requests-per-compiled-plan, not tokens-per-slot:
     so the per-device in-flight queues advance in lockstep and
     ``pipeline_depth`` bounds each device's queue.  A one-device mesh
     falls back to exactly the single-device engine;
+  * **variable topology** — a task constructed with ``graph_buckets=``
+    serves requests whose *graph size* varies too: the engine compiles
+    one plan per configured node count (virtual tasks ``task@g{size}``,
+    bounded at len(sizes) x log2(max_batch)+1 runners), ``submit`` pads
+    each request's node-indexed inputs up to the smallest bucket that
+    fits (``graph.build`` span; the model's validity mask keeps padded
+    nodes out of the dynamic KNN graph) and rejects requests over the
+    largest bucket with a ``ValueError`` at admission; the scheduler's
+    service estimator is keyed on the combined (graph bucket, batch
+    bucket), and ``stats()['graph_buckets']`` accounts submissions and
+    padded nodes per graph bucket;
   * the Step-6 liveness annotations bound the per-sample activation
     working set; ``plan.peak_live_bytes() x batch`` is the planner's
     sizing model for a server (under jit, XLA's own buffer reuse — which
@@ -141,10 +152,37 @@ class GNNCVServeEngine:
                  max_batch: int = 8, jit: bool = True,
                  pipeline_depth: int = 2, residency: bool = True,
                  devices=None, mesh=None, slo_ms: float | None = None,
-                 scheduler=None, max_pipeline_depth: int | None = None):
+                 scheduler=None, max_pipeline_depth: int | None = None,
+                 graph_buckets=None):
         from repro import gcv                  # late: gcv builds engines
         from repro.serve.scheduler import resolve_scheduler
         assert models, "GNNCVServeEngine needs at least one model"
+        models = dict(models)
+        # Variable-topology tasks: graph_buckets maps a task name to the
+        # node counts it serves at.  The task's ``models`` entry must be a
+        # *factory* ``n_nodes -> model spec``; each size compiles under a
+        # virtual task key ``task@g{size}`` and ``submit(task, ...)``
+        # routes each request to the smallest bucket that fits it (see
+        # ``_pad_to_graph_bucket``).  Bucket count stays bounded:
+        # len(sizes) graph buckets x log2(max_batch)+1 batch buckets.
+        self.graph_buckets: dict[str, list[int]] = {
+            t: sorted({int(s) for s in ss})
+            for t, ss in dict(graph_buckets or {}).items()}
+        for task, sizes in self.graph_buckets.items():
+            assert task in models, \
+                f"graph_buckets names unknown task {task!r}"
+            assert sizes and sizes[0] >= 1, \
+                f"task {task!r}: graph bucket sizes must be >= 1, " \
+                f"got {sizes}"
+            factory = models.pop(task)
+            assert callable(factory) \
+                and not isinstance(factory, (tuple, Graph, ExecutionPlan,
+                                             gcv.CompiledModel)), \
+                f"task {task!r} has graph_buckets — its models entry " \
+                f"must be a factory n_nodes -> model spec, got " \
+                f"{type(factory).__name__}"
+            for g in sizes:
+                models[f"{task}@g{g}"] = factory(g)
         self.options = options
         self.mesh = gcv._resolve_mesh(devices, mesh)
         ndev = self.mesh.size if self.mesh is not None else 1
@@ -251,6 +289,63 @@ class GNNCVServeEngine:
     def steps(self) -> int:
         return self._c_dispatches.value
 
+    # ------------------------------------------------- graph-size buckets --
+    def _node_inputs(self, task: str) -> list[str]:
+        """Input names carrying the graph's node axis, by convention the
+        inputs whose leading dimension equals the graph-bucket size in the
+        compiled plan (for ``b6-dyn``: ``points (N, 3)`` and ``mask
+        (N,)``).  These are the inputs ``_pad_to_graph_bucket`` zero-pads;
+        a model served this way should take a validity mask so padded
+        nodes are inert (``knn_graph(mask=)`` never selects them)."""
+        g0 = self.graph_buckets[task][0]
+        shapes = self.plans[f"{task}@g{g0}"].meta["input_shapes"]
+        names = [n for n, s in shapes.items() if s and s[0] == g0]
+        assert names, \
+            f"task {task!r}: no input has the graph-size leading axis"
+        return names
+
+    def _pad_to_graph_bucket(self, task: str, inputs: dict
+                             ) -> tuple[str, dict]:
+        """Route one variable-size request to its graph bucket: read the
+        node count off the node-indexed inputs, zero-pad them up to the
+        smallest bucket that fits, and return the virtual task key the
+        request queues under.  Padding is a ``graph.build`` span (the
+        serving-side cost of dynamic graph construction) and per-bucket
+        ``graph.{task}.g{size}`` counters feed ``stats()``."""
+        sizes = self.graph_buckets[task]
+        node_inputs = self._node_inputs(task)
+        ns = {int(np.shape(inputs[name])[0])
+              for name in node_inputs if name in inputs}
+        if len(ns) != 1:
+            raise ValueError(
+                f"task {task!r}: node-indexed inputs {node_inputs} "
+                f"disagree on the node count ({sorted(ns)})")
+        n = ns.pop()
+        if n < 1:
+            raise ValueError(f"task {task!r}: request has {n} nodes")
+        if n > sizes[-1]:
+            raise ValueError(
+                f"task {task!r}: request has {n} nodes but the largest "
+                f"graph bucket is {sizes[-1]} (buckets: {sizes}) — "
+                f"serve it with a larger graph_buckets entry or split "
+                f"the request")
+        g = next(s for s in sizes if s >= n)
+        with obs.span("graph.build", cat="serve", task=task, n_nodes=n,
+                      graph_bucket=g, pad_nodes=g - n):
+            if g != n:
+                padded = dict(inputs)
+                for name in node_inputs:
+                    if name not in inputs:
+                        continue       # submit reports the missing input
+                    v = np.asarray(inputs[name])
+                    padded[name] = np.concatenate(
+                        [v, np.zeros((g - n,) + v.shape[1:], v.dtype)])
+                inputs = padded
+        self.metrics.counter(f"graph.{task}.g{g}.submitted").inc()
+        if g != n:
+            self.metrics.counter(f"graph.{task}.g{g}.pad_nodes").inc(g - n)
+        return f"{task}@g{g}", inputs
+
     # ------------------------------------------------------------ intake --
     def submit(self, task: str, *, deadline_ms: float | None = None,
                priority: int = 0, **inputs) -> TaskRequest:
@@ -264,7 +359,17 @@ class GNNCVServeEngine:
         deadline has already passed at submit is *admission-rejected*:
         returned ``done`` with ``result=None``, ``missed_deadline`` set,
         counted under ``expired_at_submit`` — it never enters a queue, so
-        a flood of hopeless work cannot displace servable requests."""
+        a flood of hopeless work cannot displace servable requests.
+
+        A task with ``graph_buckets`` accepts *variable-size* requests:
+        the node count is read off the node-indexed inputs, the request
+        is zero-padded up to the smallest graph bucket that fits (a
+        ``graph.build`` span), and it queues under that bucket's virtual
+        task ``task@g{size}``.  A request larger than the biggest bucket
+        is a ``ValueError`` here, at admission — not a shape assert
+        inside a dispatched batch."""
+        if task in self.graph_buckets:
+            task, inputs = self._pad_to_graph_bucket(task, inputs)
         assert task in self.models, f"unknown task {task!r}"
         plan = self.plans[task]
         missing = set(plan.input_names) - inputs.keys()
@@ -379,7 +484,16 @@ class GNNCVServeEngine:
         # (shed and expired-at-submit requests are misses), so the miss
         # rate denominator is all finished work
         finished = goodput + misses
+        graph_stats = {
+            task: {g: {
+                "submitted": self.metrics.counter(
+                    f"graph.{task}.g{g}.submitted").value,
+                "pad_nodes": self.metrics.counter(
+                    f"graph.{task}.g{g}.pad_nodes").value,
+            } for g in sizes}
+            for task, sizes in self.graph_buckets.items()}
         return {"completed": completed, "steps": self.steps,
+                "graph_buckets": graph_stats,
                 "submitted": self._c_submitted.value,
                 "pending": self.pending(), "inflight": self.inflight(),
                 "tasks": len(self.models), "warmed": len(self._warmed),

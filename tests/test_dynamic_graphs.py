@@ -1,0 +1,190 @@
+"""Dynamic graph construction end to end: the ``knn_graph`` layer through
+builder and tracing frontends, canonicalization of the raw jnp
+distance+selection idiom, runtime parity against precomputed graphs, and
+Step-4b kernel selection for the fused realization."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import CompileOptions, build_runner, compile_graph
+from repro.core.ir import GraphBuilder
+from repro.frontend import to_graph
+from repro.gnncv.graphs import knn_coo, knn_indices
+from repro.gnncv.jax_tasks import (TRACED_SMALL_CONFIGS, TRACED_TASKS,
+                                   _conv_w, b7_vig_dynamic_jax,
+                                   build_traced_task)
+
+RNG = np.random.default_rng(3)
+
+
+def _inputs(example, seed=0):
+    rng = np.random.default_rng(seed)
+    return {k: np.asarray(rng.standard_normal(v.shape), np.float32)
+            for k, v in example.items()}
+
+
+# --------------------------------------------------------- builder path ---
+def _builder_model(points, idx_or_none, *, k, w):
+    """knn_graph + mp(knn_input) when idx_or_none is None, else the same
+    aggregation over the equivalent precomputed COO."""
+    b = GraphBuilder("dyn")
+    pts = b.input(points.shape, "pts")
+    h = b.linear(pts, w)
+    h = b.act(h, "relu")
+    if idx_or_none is None:
+        idx = b.knn_graph(pts, k=k)
+        h = b.mp(h, knn_input=idx, reduce="max")
+    else:
+        n = points.shape[0]
+        rows = np.repeat(np.arange(n, dtype=np.int32), k)
+        cols = idx_or_none.reshape(-1).astype(np.int32)
+        vals = np.ones(n * k, np.float32)
+        h = b.mp(h, adj_coo=(rows, cols, vals, n), reduce="max")
+    return b.output(h)
+
+
+@pytest.mark.parametrize("kernels", ["auto", "pallas"])
+def test_builder_knn_matches_precomputed_coo(kernels):
+    n, k = 60, 5
+    pts = np.asarray(RNG.standard_normal((n, 3)), np.float32)
+    w = np.asarray(RNG.standard_normal((3, 16)), np.float32)
+    idx = knn_indices(pts, k)
+    opts = CompileOptions(kernels=kernels)
+    dyn = build_runner(compile_graph(_builder_model(pts, None, k=k, w=w),
+                                     opts))(pts=pts)
+    pre = build_runner(compile_graph(_builder_model(pts, idx, k=k, w=w),
+                                     opts))(pts=pts)
+    np.testing.assert_array_equal(np.asarray(dyn[0]), np.asarray(pre[0]))
+
+
+def test_kernel_choices_record_knn_realization():
+    n, k = 60, 5
+    pts = np.asarray(RNG.standard_normal((n, 3)), np.float32)
+    w = np.asarray(RNG.standard_normal((3, 16)), np.float32)
+    g = _builder_model(pts, None, k=k, w=w)
+    for kernels, want in (("auto", "xla_knn"), ("pallas", "pallas_knn")):
+        plan = compile_graph(g, CompileOptions(kernels=kernels))
+        choices = plan.meta["kernel_choices"]
+        knn_ops = {name: c for name, c in choices.items()
+                   if c["kind"] == "knn_graph"}
+        assert len(knn_ops) == 1
+        (choice,) = knn_ops.values()
+        assert choice["kernel"] == want
+        assert sorted(choice["candidates"]) == ["pallas_knn", "xla_knn"]
+        # the runtime-KNN aggregation is pinned to the gather realization
+        mp = [c for c in choices.values()
+              if c.get("reason") and "runtime-KNN" in c["reason"]]
+        assert mp and all(c["kernel"] == "coo_scatter" for c in mp)
+
+
+# ---------------------------------------------------------- traced path ---
+@pytest.mark.parametrize("task", ["b6-dyn", "b7-dyn"])
+def test_traced_dynamic_tasks_compile_bit_exact(task):
+    g = build_traced_task(task, small=True)
+    assert g.stats().get("knn_graph") == 1
+    fn, example = TRACED_TASKS[task](**TRACED_SMALL_CONFIGS[task])
+    inputs = _inputs(example)
+    if "mask" in inputs:
+        m = np.ones(example["mask"].shape, np.float32)
+        m[-10:] = 0.0
+        inputs["mask"] = m
+    want = np.asarray(jax.jit(fn)(**inputs))
+    got = np.asarray(build_runner(compile_graph(g))(**inputs)[0])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_raw_idiom_canonicalizes_without_leftovers():
+    """The traced ``mul/reduce_sum/dot/sort/slice`` distance expression is
+    absorbed into one knn_graph layer — nothing of the O(N^2) computation
+    survives in the layer graph."""
+    g = build_traced_task("b7-dyn", small=True)
+    stats = g.stats()
+    assert stats["knn_graph"] == 1
+    assert stats["mp"] == TRACED_SMALL_CONFIGS["b7-dyn"]["blocks"]
+    assert "vip" not in stats          # the (N, N) dot died with the idiom
+    layer = next(l for l in g.layers.values() if l.kind == "knn_graph")
+    assert layer.params["k"] == TRACED_SMALL_CONFIGS["b7-dyn"]["knn"]
+    assert not layer.params.get("self_loops")    # argsort(d)[:, 1:k+1]
+    # lint provenance: the layer accounts for the absorbed equations
+    eqs = g.meta.get("equations", {}).get(layer.name, [])
+    assert any("sort" in e or "top_k" in e for e in eqs), eqs
+
+
+def test_topk_idiom_recovers_self_loops():
+    """``lax.top_k(-d, k)`` keeps the zero-distance self match — the
+    canonicalizer must flag self_loops on that head."""
+    def fn(x):
+        sq = (x * x).sum(axis=1)
+        d = sq[:, None] + sq[None, :] - 2.0 * (x @ x.T)
+        idx = jax.lax.top_k(-d, 4)[1]
+        return nn_mp(idx, x)
+
+    from repro.frontend import nn
+    def nn_mp(idx, x):
+        return nn.message_passing(idx, x, reduce="max")
+
+    x = np.asarray(RNG.standard_normal((40, 6)), np.float32)
+    g = to_graph(fn, {"x": jax.ShapeDtypeStruct((40, 6), np.float32)})
+    layer = next(l for l in g.layers.values() if l.kind == "knn_graph")
+    assert layer.params["k"] == 4 and layer.params.get("self_loops")
+    got = np.asarray(build_runner(compile_graph(g))(x=x)[0])
+    np.testing.assert_array_equal(got, np.asarray(jax.jit(fn)(x)))
+
+
+def test_b7_dynamic_matches_precomputed_graph_bit_for_bit():
+    """The acceptance bar: the traced dynamic pipeline produces the same
+    logits as the same model with its graph precomputed offline by the
+    numpy oracle and baked in as a constant COO."""
+    cfg = dict(TRACED_SMALL_CONFIGS["b7-dyn"])
+    fn_dyn, example = b7_vig_dynamic_jax(**cfg)
+    image = _inputs(example)["image"]
+
+    # offline graph: replay the patch embedding (same seed -> same draw)
+    rng = np.random.default_rng(0)
+    w_embed = _conv_w(rng, 3, cfg["dim"], cfg["patch"])
+    h = jax.lax.conv_general_dilated(
+        image[None], w_embed, (cfg["patch"], cfg["patch"]), "VALID",
+        dimension_numbers=("NCHW", "HWIO", "NCHW"))[0]
+    h = np.asarray(h).reshape(cfg["dim"], -1).T
+    idx = knn_indices(h, cfg["knn"])
+
+    fn_pre, _ = b7_vig_dynamic_jax(**cfg, precomputed_graph=idx)
+    g_dyn = to_graph(fn_dyn, example, name="b7dyn")
+    g_pre = to_graph(fn_pre, example, name="b7pre")
+    assert g_dyn.stats().get("knn_graph") == 1
+    assert "knn_graph" not in g_pre.stats()
+    out_dyn = np.asarray(build_runner(compile_graph(g_dyn))(image=image)[0])
+    out_pre = np.asarray(build_runner(compile_graph(g_pre))(image=image)[0])
+    np.testing.assert_array_equal(out_dyn, out_pre)
+
+
+def test_mask_padding_invariance():
+    """A b6-dyn request padded with masked nodes produces bit-identical
+    logits to the unpadded trace — the property graph-size-bucketed
+    serving relies on."""
+    cfg = dict(TRACED_SMALL_CONFIGS["b6-dyn"])
+    n = 40
+    pts = np.asarray(RNG.standard_normal((n, 3)), np.float32)
+    mask = np.ones(n, np.float32)
+
+    def at(n_points):
+        c = dict(cfg)
+        c["n_points"] = n_points
+        fn, ex = TRACED_TASKS["b6-dyn"](**c)
+        return build_runner(compile_graph(to_graph(
+            fn, ex, name=f"b6dyn{n_points}")))
+
+    exact = np.asarray(at(n)(points=pts, mask=mask)[0])
+    pad = 64 - n
+    padded = np.asarray(at(64)(
+        points=np.concatenate([pts, np.zeros((pad, 3), np.float32)]),
+        mask=np.concatenate([mask, np.zeros(pad, np.float32)]))[0])
+    np.testing.assert_array_equal(exact, padded)
+
+
+def test_knn_coo_points_matches_oracle():
+    pts = np.asarray(RNG.standard_normal((30, 3)), np.float32)
+    rows, cols, vals, n = knn_coo(30, 4, points=pts)
+    idx = knn_indices(pts, 4)
+    np.testing.assert_array_equal(cols.reshape(30, 4), idx)
+    assert n == 30 and (vals == 1.0).all()

@@ -54,6 +54,9 @@ KIND_PROGRAMS = {
         np.zeros(8, np.float32), np.ones(8, np.float32)), _x2, {"norm"}),
     "act": (lambda x: jax.nn.relu(x), _x2, {"act"}),
     "add": (lambda x, y: x + y, _xx, {"add"}),
+    "mul": (lambda x, y: x * y, _xx, {"mul"}),
+    "knn_graph": (lambda x: nn.message_passing(
+        nn.knn_graph(x, k=3), x, reduce="max"), _x2, {"knn_graph", "mp"}),
     "matmul": (lambda x, y: x @ y, _xy, {"matmul"}),
     "concat": (lambda x, y: jnp.concatenate([x, y], axis=1), _xx,
                {"concat"}),
@@ -233,8 +236,10 @@ def test_runtime_adjacency_max_reduce_rejected():
 
 
 def test_leftover_elementwise_is_rejected_not_mislowered():
-    with pytest.raises(UnsupportedOpError, match="'mul'"):
-        frontend.to_graph(lambda x, y: x * y, _xx)
+    # tensor*tensor mul is now the 'mul' layer kind (the mask-zeroing
+    # idiom); other leftover elementwise still fails loudly
+    with pytest.raises(UnsupportedOpError, match="'div'"):
+        frontend.to_graph(lambda x, y: x / y, _xx)
 
 
 def test_leaky_relu_foreign_slope_carries_alpha():

@@ -1,0 +1,117 @@
+"""Variable-topology serving: graph-size bucketing in ``GNNCVServeEngine``
+— mixed node-count request routing, bounded runner cache, frozen
+``runner_misses`` after warmup, per-graph-bucket pad accounting, and the
+admission-time rejection of requests over the largest bucket."""
+import math
+
+import numpy as np
+import pytest
+
+from repro import gcv
+from repro.core.runtime.cache import clear_caches
+from repro.gnncv.jax_tasks import TRACED_SMALL_CONFIGS, TRACED_TASKS
+
+SIZES = [32, 64]
+RNG = np.random.default_rng(11)
+
+
+def factory(n_points):
+    cfg = dict(TRACED_SMALL_CONFIGS["b6-dyn"])
+    cfg["n_points"] = n_points
+    return TRACED_TASKS["b6-dyn"](**cfg)
+
+
+def request(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return dict(points=np.asarray(rng.standard_normal((n, 3)), np.float32),
+                mask=np.ones(n, np.float32))
+
+
+@pytest.fixture()
+def engine():
+    clear_caches()
+    return gcv.serve({"b6-dyn": factory},
+                     graph_buckets={"b6-dyn": SIZES}, max_batch=4)
+
+
+def test_mixed_node_counts_bucket_correctly(engine):
+    reqs = {n: engine.submit("b6-dyn", **request(n, seed=n))
+            for n in (5, 32, 33, 50, 64)}
+    assert reqs[5].task == "b6-dyn@g32"
+    assert reqs[32].task == "b6-dyn@g32"     # exact fit, no pad
+    assert reqs[33].task == "b6-dyn@g64"     # one over -> next bucket
+    assert reqs[50].task == "b6-dyn@g64"
+    assert reqs[64].task == "b6-dyn@g64"
+    assert engine.run() == 5
+    for n, req in reqs.items():
+        assert req.done and req.result is not None
+        # padded inputs reached the bucket's compiled shape
+        g = int(req.task.rsplit("@g", 1)[1])
+        assert req.inputs["points"].shape == (g, 3)
+        assert int(req.inputs["mask"].sum()) == n
+
+
+def test_padded_request_matches_exact_size_submission(engine):
+    """A 40-node request padded to the 64 bucket serves the same logits
+    as the identical request pre-padded by the caller."""
+    inp = request(40, seed=9)
+    r_auto = engine.submit("b6-dyn", **inp)
+    pre = dict(
+        points=np.concatenate([inp["points"],
+                               np.zeros((24, 3), np.float32)]),
+        mask=np.concatenate([inp["mask"], np.zeros(24, np.float32)]))
+    r_pre = engine.submit("b6-dyn", **pre)
+    assert r_auto.task == r_pre.task == "b6-dyn@g64"
+    engine.run()
+    np.testing.assert_array_equal(r_auto.result[0], r_pre.result[0])
+
+
+def test_bucket_count_bounded_and_misses_frozen(engine):
+    warmed = engine.warmup()
+    # one runner per (graph bucket, batch bucket) — nothing else
+    assert len(warmed) == len(SIZES) * (int(math.log2(4)) + 1)
+    misses0 = engine.stats()["runner_misses"]
+    for s in range(12):
+        engine.submit("b6-dyn", **request(16 + 3 * s, seed=s))
+    assert engine.run() == 12
+    st = engine.stats()
+    assert st["runner_misses"] == misses0   # warmup paid every compile
+    assert st["runner_hits"] > 0
+
+
+def test_pad_accounting_per_graph_bucket(engine):
+    engine.submit("b6-dyn", **request(30))      # g32, 2 pad nodes
+    engine.submit("b6-dyn", **request(32))      # g32, exact
+    engine.submit("b6-dyn", **request(40))      # g64, 24 pad nodes
+    engine.run()
+    gb = engine.stats()["graph_buckets"]["b6-dyn"]
+    assert gb[32] == {"submitted": 2, "pad_nodes": 2}
+    assert gb[64] == {"submitted": 1, "pad_nodes": 24}
+
+
+def test_admission_error_over_largest_bucket(engine):
+    with pytest.raises(ValueError, match="largest graph bucket"):
+        engine.submit("b6-dyn", **request(100))
+    # nothing queued, nothing counted as servable work
+    assert engine.pending() == 0
+
+
+def test_graph_bucket_stream_mixed_sizes(engine):
+    """The acceptance scenario: an open-loop stream of mixed-size point
+    clouds serves through one engine, every request terminal."""
+    engine.warmup()
+    arrivals = [(0.002 * i, "b6-dyn", request(12 + 7 * (i % 8), seed=i))
+                for i in range(10)]
+    reqs = engine.stream(arrivals, max_wall_s=30)
+    assert len(reqs) == 10
+    assert all(r.done and r.result is not None for r in reqs)
+    st = engine.stats()
+    assert st["completed"] == 10
+    assert sum(b["submitted"] for b in
+               st["graph_buckets"]["b6-dyn"].values()) == 10
+
+
+def test_factory_spec_required_for_graph_buckets():
+    fn_ex = factory(32)
+    with pytest.raises(AssertionError, match="factory"):
+        gcv.serve({"b6-dyn": fn_ex}, graph_buckets={"b6-dyn": SIZES})
